@@ -1,0 +1,36 @@
+"""Paper Fig. 8 analog: fraction of peak compute vs matrix size.
+
+The drain phase (Sec. 4.4) costs mn/y_c cycles against mnk/N_c compute
+cycles; efficiency(n) = compute/(compute + drain).  Reported for a small
+and a large degree of parallelism on v5e constants, exactly mirroring the
+two panels of Fig. 8, plus the TPU-native equivalent (drain = HBM
+write-back of C vs MXU time per memory tile).
+"""
+
+import jax.numpy as jnp
+
+from repro.core import V5E, solve_tile_config
+from repro.core.io_model import drain_overhead_fraction, pl_ceil
+from benchmarks.common import emit
+
+
+def run():
+    dt = jnp.dtype(jnp.float32)
+    # FPGA-parameter form (paper constants: y_c=8, N_c = x_p*y_c)
+    for n_c, label in ((192 * 8, "large_Nc"), (8 * 8, "small_Nc")):
+        for n in (1024, 2048, 4096, 8192, 16384, 32768):
+            f = 1.0 - drain_overhead_fraction(n, n, n, 8, n_c)
+            emit(f"fig8_{label}_n{n}", 0.0, f"frac_of_peak={f:.4f}")
+
+    # TPU-native: per memory tile, drain = bm*bn write vs 2*bm*bn*k MXU ops
+    t = solve_tile_config(16384, 16384, 16384, dtype_in=dt)
+    for n in (1024, 2048, 4096, 8192, 16384):
+        compute_s = 2.0 * n**3 / V5E.peak_flops(dt)
+        drain_s = (pl_ceil(n, t.bm) * pl_ceil(n, t.bn) * t.bm * t.bn
+                   * dt.itemsize) / V5E.hbm_bandwidth
+        emit(f"fig8_tpu_n{n}", 0.0,
+             f"frac_of_peak={compute_s/(compute_s+drain_s):.4f}")
+
+
+if __name__ == "__main__":
+    run()

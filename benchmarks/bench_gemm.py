@@ -1,0 +1,43 @@
+"""Paper Table 2 analog: per-dtype CA-MMM kernels from the planner.
+
+For each TPU-native dtype (bf16/fp32/int8 — the MXU-supported set standing
+in for the paper's fp16/32/64+uints, DESIGN.md §8) this reports the solved
+tile (x_tot, y_tot analog), arithmetic intensity (Op/Byte — the paper's
+headline column), modeled Q, and projected performance at the v5e
+roofline.  Wall-time is measured for the XLA path on this CPU host (the
+kernel itself is validated in interpret mode by tests/test_kernels.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (V5E, arithmetic_intensity_ops_per_byte, gemm_roofline,
+                        io_volume_elements, solve_tile_config)
+from benchmarks.common import emit, time_call
+
+N = 16384  # paper's benchmark size
+
+
+def run():
+    for dt, paper_ref in ((jnp.bfloat16, "fp16:956"), (jnp.float32, "fp32:302"),
+                          (jnp.int8, "uint8:2073")):
+        dt = jnp.dtype(dt)
+        t = solve_tile_config(N, N, N, dtype_in=dt)
+        ai = arithmetic_intensity_ops_per_byte(t.bm, t.bn, dt.itemsize)
+        rl = gemm_roofline(N, N, N, t, dt)
+        gops = 2.0 * N ** 3 / rl.time_s / 1e9
+        q_gb = io_volume_elements(N, N, N, t.bm, t.bn) * dt.itemsize / 1e9
+        # wall measurement on host (xla path, small size to stay sane on CPU)
+        n_host = 1024
+        a = jnp.ones((n_host, n_host), jnp.float32)
+        f = jax.jit(lambda a, b: a @ b)
+        us = time_call(f, a, a)
+        emit(f"gemm_{dt.name}", us,
+             f"tile={t.bm}x{t.bn}x{t.bk};AI={ai:.0f}Op/B(paper {paper_ref});"
+             f"Q={q_gb:.1f}GB;proj={gops:.0f}GOp/s;bound={rl.bound};"
+             f"vmem_util={t.utilization:.2f}")
+
+
+if __name__ == "__main__":
+    run()

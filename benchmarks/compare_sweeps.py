@@ -1,0 +1,47 @@
+"""Baseline vs optimized dry-run comparison (EXPERIMENTS §Perf final).
+
+Reads experiments/dryrun (baseline) and experiments/dryrun_opt (after the
+§Perf iterations) and prints a per-cell delta table of the roofline terms.
+"""
+
+import os
+import sys
+
+from benchmarks import roofline
+
+
+def main(kind_filter: str = "train"):
+    base = {(r["arch"], r["shape"], r["mesh"]): r
+            for r in roofline.rows(roofline.DRYRUN_DIR)}
+    opt_dir = roofline.DRYRUN_DIR + "_opt"
+    if not os.path.isdir(opt_dir):
+        print("no optimized sweep yet")
+        return
+    opt = {(r["arch"], r["shape"], r["mesh"]): r
+           for r in roofline.rows(opt_dir)}
+    print(f"{'cell':44s} {'term':6s} {'base':>9s} {'opt':>9s} {'x':>6s}")
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        if kind_filter and b["kind"] != kind_filter:
+            continue
+        cell = f"{key[0]}/{key[1]}/{key[2]}"
+        for term in ("compute_s", "memory_s", "collective_s"):
+            ratio = b[term] / o[term] if o[term] else float("inf")
+            mark = " <-- dominant" if b["dominant"] == term.split("_")[0] \
+                else ""
+            print(f"{cell:44s} {term[:6]:6s} {b[term]:9.2e} {o[term]:9.2e} "
+                  f"{ratio:6.2f}{mark}")
+        bb = max(b["compute_s"], b["memory_s"], b["collective_s"])
+        oo = max(o["compute_s"], o["memory_s"], o["collective_s"])
+        print(f"{cell:44s} {'BOUND':6s} {bb:9.2e} {oo:9.2e} {bb/oo:6.2f}  "
+              f"useful {b['useful_ratio']:.2f}->{o['useful_ratio']:.2f}  "
+              f"MFU {b['roofline_fraction_mfu']:.3f}->"
+              f"{o['roofline_fraction_mfu']:.3f}  "
+              f"mem {b['mem_gib']:.1f}->{o['mem_gib']:.1f}GiB")
+        print()
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "train")

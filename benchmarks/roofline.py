@@ -1,0 +1,113 @@
+"""Roofline derivation from the dry-run artifacts (EXPERIMENTS §Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs / peak_FLOP/s          (per device)
+  memory term     = HLO_bytes / HBM_bw               (per device)
+  collective term = collective_bytes / link_bw       (per device)
+plus MODEL_FLOPS = 6*N*D (6*N_active*D for MoE; 2*N*D for inference
+forward passes) and the useful-compute ratio."""
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.core.hardware import V5E
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def model_flops(art: Dict) -> float:
+    n_act = art["n_active_params"]
+    tokens = art["global_batch"] * (art["seq_len"] if art["kind"] != "decode"
+                                    else 1)
+    mult = 6.0 if art["kind"] == "train" else 2.0
+    return mult * n_act * tokens
+
+
+def rows(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        art = json.load(open(path))
+        chips = art["chips"]
+        h = art["hlo"]
+        # dry-run dtype is bf16 compute
+        compute_s = h["flops_per_device"] / V5E.peak_flops_bf16
+        # memory term: schedule-inherent stream traffic (dot/conv operand
+        # I/O — the paper's Q).  hlo_bytes (ALL kernel-boundary I/O, incl.
+        # unfused attention intermediates and remat traffic) is reported
+        # as the upper bound column.
+        stream = h.get("stream_bytes_per_device",
+                       h["hlo_bytes_per_device"])
+        memory_s = stream / V5E.hbm_bandwidth
+        memory_ub_s = h["hlo_bytes_per_device"] / V5E.hbm_bandwidth
+        coll_s = h["collective_bytes_per_device"] / V5E.ici_bandwidth
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": coll_s}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(art) / chips
+        step_s = max(terms.values())
+        mfu = mf / V5E.peak_flops_bf16 / step_s if step_s else 0.0
+        out.append({
+            "arch": art["arch"], "shape": art["shape"], "mesh": art["mesh"],
+            "kind": art["kind"],
+            "compute_s": compute_s, "memory_s": memory_s,
+            "memory_upper_s": memory_ub_s,
+            "collective_s": coll_s, "dominant": dominant,
+            "model_flops_per_dev": mf,
+            "useful_ratio": mf / h["flops_per_device"]
+            if h["flops_per_device"] else 0.0,
+            "roofline_fraction_mfu": mfu,
+            "mem_gib": (art["memory"]["argument_bytes"]
+                        + art["memory"]["temp_bytes"]) / 2**30,
+            "collective_counts": h["collective_counts"],
+        })
+    return out
+
+
+def to_markdown(rs: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | useful | MFU | mem GiB |\n|" + "---|" * 10 + "\n")
+    lines = []
+    for r in rs:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction_mfu']:.3f} "
+            f"| {r['mem_gib']:.1f} |")
+    return hdr + "\n".join(lines)
+
+
+def run(dirs=None):
+    dirs = dirs or [("baseline", DRYRUN_DIR),
+                    ("optimized", DRYRUN_DIR + "_opt")]
+    for label, d in dirs:
+        if not os.path.isdir(d):
+            continue
+        rs = rows(d)
+        if not rs:
+            print(f"roofline_{label},0.0,no-artifacts")
+            continue
+        for r in rs:
+            print(f"roofline[{label}]_{r['arch']}_{r['shape']}_{r['mesh']},"
+                  f"0.0,dom={r['dominant']};"
+                  f"mfu={r['roofline_fraction_mfu']:.3f};"
+                  f"useful={r['useful_ratio']:.2f};mem={r['mem_gib']:.1f}GiB")
+        csv_path = os.path.join(os.path.dirname(DRYRUN_DIR),
+                                f"roofline_{label}.csv")
+        with open(csv_path, "w") as f:
+            f.write("arch,shape,mesh,compute_s,memory_s,collective_s,"
+                    "dominant,useful_ratio,mfu,mem_gib\n")
+            for r in rs:
+                f.write(f"{r['arch']},{r['shape']},{r['mesh']},"
+                        f"{r['compute_s']:.6e},{r['memory_s']:.6e},"
+                        f"{r['collective_s']:.6e},{r['dominant']},"
+                        f"{r['useful_ratio']:.4f},"
+                        f"{r['roofline_fraction_mfu']:.4f},"
+                        f"{r['mem_gib']:.2f}\n")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+"""
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_efficiency, bench_gemm, bench_intensity,
+                            bench_scaling, roofline)
+    print("# Table 2 analog: per-dtype kernels from the planner")
+    bench_gemm.run()
+    print("# Fig 9 + Fig 3 analog: intensity vs tile size; VMEM quantization")
+    bench_intensity.run()
+    print("# Fig 8 analog: compute efficiency vs matrix size (drain phase)")
+    bench_efficiency.run()
+    print("# Fig 7 analog: strong scaling (compiled collective bytes)")
+    bench_scaling.run()
+    print("# Roofline (from dry-run artifacts)")
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Serving example: batched requests, greedy + sampled, across families.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import model as M
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    for arch in ("stablelm-1.6b", "mamba2-370m", "zamba2-7b"):
+        cfg = get_reduced(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServeEngine(params, cfg, batch_size=2, max_len=40)
+        rng = np.random.RandomState(0)
+        for uid in range(2):
+            eng.submit(Request(uid=uid,
+                               prompt=rng.randint(0, cfg.vocab_size, 12),
+                               max_new_tokens=6,
+                               temperature=0.0 if uid == 0 else 0.7))
+        done = eng.run()
+        outs = {u: r.generated for u, r in done.items()}
+        print(f"{arch:16s} greedy={outs[0]} sampled={outs[1]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Sharded, async, elastic checkpointing."""
+
+from repro.checkpoint import manager
+
+__all__ = ["manager"]

@@ -1,0 +1,58 @@
+"""Architecture registry: one module per assigned architecture."""
+
+from typing import Dict, List
+
+from repro.configs import (
+    deepseek_v2_lite_16b,
+    granite_20b,
+    h2o_danube_3_4b,
+    mamba2_370m,
+    minicpm3_4b,
+    mixtral_8x7b,
+    musicgen_large,
+    qwen2_vl_72b,
+    stablelm_1_6b,
+    zamba2_7b,
+)
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    applicable_shapes,
+)
+
+_MODULES = {
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b,
+    "mixtral-8x7b": mixtral_8x7b,
+    "mamba2-370m": mamba2_370m,
+    "minicpm3-4b": minicpm3_4b,
+    "granite-20b": granite_20b,
+    "stablelm-1.6b": stablelm_1_6b,
+    "h2o-danube-3-4b": h2o_danube_3_4b,
+    "qwen2-vl-72b": qwen2_vl_72b,
+    "musicgen-large": musicgen_large,
+    "zamba2-7b": zamba2_7b,
+}
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    return _MODULES[name].CONFIG
+
+
+def get_reduced(name: str, compute_dtype: str = "float32") -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests.
+
+    Defaults to fp32 compute: XLA:CPU compiles bf16 dots (all the dry-run
+    needs) but cannot *execute* them (DotThunk limitation).
+    """
+    import dataclasses
+    return dataclasses.replace(_MODULES[name].reduced(),
+                               compute_dtype=compute_dtype)
+
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeConfig", "applicable_shapes",
+           "get_config", "get_reduced", "list_archs"]

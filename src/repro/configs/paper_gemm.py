@@ -1,0 +1,15 @@
+"""The paper's own benchmark scenario: standalone CA-MMM kernels.
+
+Table 2 evaluates square matrices (16384^3 for Fig. 7) over fp16/32/64
+and uint8/16/32.  The TPU-native dtype set is bf16/fp32/int8 (fp64 and
+the exotic uints have no MXU path — DESIGN.md §8); benchmarks/bench_gemm
+sweeps these through the planner + kernel.
+"""
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+MATRIX_SIZES: Tuple[int, ...] = (1024, 2048, 4096, 8192, 16384)
+DTYPES = (jnp.bfloat16, jnp.float32, jnp.int8)
+PAPER_N = 16384  # n = m = k used in the paper's Fig. 7 strong scaling

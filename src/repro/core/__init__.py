@@ -1,0 +1,35 @@
+"""Core: the paper's contribution — model-driven communication-avoiding
+matrix multiplication — as a composable JAX module."""
+
+from repro.core.hardware import TpuTarget, V5E, V5P, get_target
+from repro.core.io_model import (
+    TileConfig,
+    arithmetic_intensity_ops_per_byte,
+    computational_intensity,
+    gemm_roofline,
+    io_lower_bound_elements,
+    io_volume_elements,
+    solve_tile_config,
+    vmem_quantum,
+)
+from repro.core.gemm import (
+    ca_einsum, ca_matmul, gemm_mode, get_gemm_mode, plan_for, set_gemm_mode,
+)
+from repro.core.distributed import (
+    DistributedCost,
+    choose_schedule,
+    dist_matmul,
+    dist_matmul_reference,
+    estimate_cost,
+)
+
+__all__ = [
+    "TpuTarget", "V5E", "V5P", "get_target",
+    "TileConfig", "computational_intensity", "arithmetic_intensity_ops_per_byte",
+    "io_volume_elements", "io_lower_bound_elements", "solve_tile_config",
+    "vmem_quantum", "gemm_roofline",
+    "ca_matmul", "ca_einsum", "gemm_mode", "get_gemm_mode", "set_gemm_mode",
+    "plan_for",
+    "DistributedCost", "choose_schedule", "dist_matmul",
+    "dist_matmul_reference", "estimate_cost",
+]

@@ -1,0 +1,251 @@
+"""Communication-avoiding *distributed* GEMM — the paper's Sec. 4.1 chain
+argument applied at cluster scale (DESIGN.md §2, tier 2).
+
+The paper collapses its 2-D PE grid into a 1-D chain so that only 3 buses
+cross each chiplet boundary (constant fan-out, neighbor-only links).  The
+TPU analog of a chiplet crossing is an ICI hop (and, across pods, a DCN
+hop).  We provide three schedules over a ``jax.shard_map``:
+
+* ``allgather`` — SUMMA-style: gather the rotating operand up front.  This
+  is the "broadcast" topology the paper argues *against*; kept as the
+  baseline ablation (and it is what GSPMD emits by default).
+* ``ring``      — output-stationary C, A panels rotate neighbor-to-neighbor
+  via ``ppermute`` while each step's partial product is computed: the
+  direct analog of the paper's PE chain (Fig. 4→Fig. 5 collapse).  Comm
+  per step is constant-fan-out and overlaps with compute.
+* ``summa25d``  — 2.5-D C-replication over the ``pod`` axis (Solomonik-
+  Demmel [29], which the paper builds on): the k loop is split across
+  pods, each pod runs the 2-D schedule on 1/c of k, and C is reduced over
+  the slow pod links once — trading cheap intra-pod bytes for scarce
+  inter-pod bytes, the same "maximize reuse in the fastest tier" objective
+  as Eq. 5.
+
+``choose_schedule`` is the Eq. 6 cost model re-derived per device; the
+dry-run prints its decision per GEMM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.hardware import TpuTarget, V5E
+
+
+# ---------------------------------------------------------------------------
+# Cost model (per-device Eq. 6 analog)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DistributedCost:
+    schedule: str
+    compute_s: float
+    comm_bytes: float
+    comm_s: float
+    overlapped: bool
+
+    @property
+    def time_s(self) -> float:
+        if self.overlapped:
+            return max(self.compute_s, self.comm_s)
+        return self.compute_s + self.comm_s
+
+
+def estimate_cost(
+    schedule: str,
+    m: int,
+    n: int,
+    k: int,
+    itemsize: int,
+    dp: int,
+    tp: int,
+    pods: int = 1,
+    hw: TpuTarget = V5E,
+    dtype=jnp.bfloat16,
+) -> DistributedCost:
+    chips = dp * tp * pods
+    flops = 2.0 * m * n * k / chips
+    compute_s = flops / hw.peak_flops(dtype)
+    link_bw = hw.ici_bandwidth
+    if schedule == "allgather":
+        # Gather A panels over the tp ring: each device receives
+        # (tp-1)/tp of the (m/dp, k) panel.
+        bytes_ = (m / dp) * k * (1 - 1 / tp) * itemsize / max(pods, 1)
+        return DistributedCost("allgather", compute_s, bytes_,
+                               bytes_ / link_bw, overlapped=False)
+    if schedule == "ring":
+        bytes_ = (m / dp) * k * (1 - 1 / tp) * itemsize / max(pods, 1)
+        return DistributedCost("ring", compute_s, bytes_,
+                               bytes_ / link_bw, overlapped=True)
+    if schedule == "summa25d":
+        # k split over pods: intra-pod traffic shrinks by 1/pods; C is
+        # all-reduced over the pod (DCN) axis once.
+        intra = (m / dp) * (k / pods) * (1 - 1 / tp) * itemsize
+        c_bytes = 2.0 * (m / dp) * (n / tp) * (1 - 1 / pods) * 4  # fp32 acc
+        comm_s = intra / link_bw + c_bytes / hw.dcn_bandwidth
+        return DistributedCost("summa25d", compute_s, intra + c_bytes,
+                               comm_s, overlapped=True)
+    raise ValueError(schedule)
+
+
+def choose_schedule(m, n, k, itemsize, dp, tp, pods=1, hw: TpuTarget = V5E,
+                    dtype=jnp.bfloat16) -> DistributedCost:
+    cands = ["allgather", "ring"]
+    if pods > 1:
+        cands.append("summa25d")
+    costs = [estimate_cost(s, m, n, k, itemsize, dp, tp, pods, hw, dtype)
+             for s in cands]
+    return min(costs, key=lambda c: c.time_s)
+
+
+# ---------------------------------------------------------------------------
+# Schedules (shard_map implementations)
+# ---------------------------------------------------------------------------
+
+def _ring_body(a_blk, b_loc, *, axis: str, g: int, acc_dtype,
+               vary_axes: Tuple[str, ...] = ()):
+    """Output-stationary ring: rotate A chunks, slice matching B rows.
+
+    a_blk: (mloc, k/g) — this device's current A chunk (rotates).
+    b_loc: (k, nloc)   — stationary, fully resident in this device's HBM.
+    Device j at step s holds A chunk index (j - s) mod g and multiplies it
+    with B rows [(j-s) mod g].  (g-1) ppermutes, each neighbor-only: the
+    paper's PE chain with 3 buses per hop.
+    """
+    mloc, kchunk = a_blk.shape
+    nloc = b_loc.shape[1]
+    jdx = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % g) for i in range(g)]
+
+    def step(s, carry):
+        a_cur, acc = carry
+        chunk = jnp.mod(jdx - s, g)
+        b_rows = jax.lax.dynamic_slice_in_dim(b_loc, chunk * kchunk, kchunk, 0)
+        acc = acc + jnp.dot(a_cur, b_rows, preferred_element_type=acc_dtype)
+        # Rotate unconditionally (g hops instead of the minimal g-1):
+        # collectives under lax.cond are fragile inside shard_map, and the
+        # final rotation is dead data the scheduler can overlap away.
+        a_nxt = jax.lax.ppermute(a_cur, axis, perm)
+        return (a_nxt, acc)
+
+    acc0 = jnp.zeros((mloc, nloc), acc_dtype)
+    if vary_axes:
+        # The zero carry starts device-invariant; mark it varying over the
+        # manual axes so the fori_loop carry types match (shard_map VMA).
+        acc0 = jax.lax.pvary(acc0, tuple(vary_axes))
+    _, acc = jax.lax.fori_loop(0, g, step, (a_blk, acc0))
+    return acc
+
+
+def dist_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    mesh: Mesh,
+    *,
+    schedule: str = "auto",
+    dp_axis: str = "data",
+    tp_axis: str = "model",
+    pod_axis: Optional[str] = None,
+    out_dtype=None,
+    hw: TpuTarget = V5E,
+) -> jax.Array:
+    """Distributed C = A @ B.
+
+    Logical sharding: A is (m, k) sharded m over ``dp_axis`` and k over
+    ``tp_axis``; B is (k, n) sharded n over ``tp_axis``; C comes back
+    (m, n) sharded (dp, tp).  With ``pod_axis`` set (2.5-D), k is
+    additionally split over pods and C partials are psum'd over the pod
+    axis — A must then also be sharded k over (pod, tp).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    out_dtype = out_dtype or a.dtype
+    dp = mesh.shape[dp_axis]
+    tp = mesh.shape[tp_axis]
+    pods = mesh.shape[pod_axis] if pod_axis else 1
+    if schedule == "auto":
+        schedule = choose_schedule(m, n, k, a.dtype.itemsize, dp, tp, pods,
+                                   hw, a.dtype).schedule
+
+    acc_dtype = jnp.float32 if not jnp.issubdtype(a.dtype, jnp.integer) else jnp.int32
+    kspec = (pod_axis, tp_axis) if pod_axis else tp_axis
+    in_specs = (P(dp_axis, kspec), P(None, tp_axis))
+    out_specs = P(dp_axis, tp_axis)
+
+    if schedule == "allgather":
+        def f(a_loc, b_loc):
+            # Paper's rejected broadcast topology: full-panel gather.
+            a_full = jax.lax.all_gather(a_loc, tp_axis, axis=1, tiled=True)
+            if pod_axis:
+                a_full = jax.lax.all_gather(a_full, pod_axis, axis=1,
+                                            tiled=True)
+            c = jnp.dot(a_full, b_loc, preferred_element_type=acc_dtype)
+            if pod_axis:
+                # b_loc holds all k rows; partials identical across pods.
+                pass
+            return c.astype(out_dtype)
+
+        # b holds full k on every device (n-sharded only).  With a pod
+        # axis the gathered result is value-replicated across pods but the
+        # VMA system cannot prove it — disable the check for that case.
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             check_vma=not pod_axis)(a, b)
+
+    if schedule == "ring":
+        vary = (dp_axis, tp_axis) + ((pod_axis,) if pod_axis else ())
+
+        def f(a_loc, b_loc):
+            c = _ring_body(a_loc, b_loc, axis=tp_axis, g=tp,
+                           acc_dtype=acc_dtype, vary_axes=vary)
+            if pod_axis:
+                c = jax.lax.psum(c, pod_axis)
+            return c.astype(out_dtype)
+
+        if pod_axis:
+            # each pod's ring covers k/pods; b must be k-sharded over pod.
+            in_specs = (P(dp_axis, (pod_axis, tp_axis)),
+                        P(pod_axis, tp_axis))
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)(a, b)
+
+    if schedule == "summa25d":
+        assert pod_axis is not None, "2.5D needs a replication axis"
+
+        vary = (dp_axis, tp_axis, pod_axis)
+
+        def f(a_loc, b_loc):
+            # Intra-pod ring on this pod's k slice, then one C reduction
+            # across the slow pod links (the only DCN traffic).
+            c = _ring_body(a_loc, b_loc, axis=tp_axis, g=tp,
+                           acc_dtype=acc_dtype, vary_axes=vary)
+            c = jax.lax.psum(c, pod_axis)
+            return c.astype(out_dtype)
+
+        in_specs = (P(dp_axis, (pod_axis, tp_axis)), P(pod_axis, tp_axis))
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)(a, b)
+
+    raise ValueError(f"unknown schedule {schedule!r}")
+
+
+def dist_matmul_reference(a, b, mesh, dp_axis="data", tp_axis="model",
+                          pod_axis=None):
+    """Oracle: jit with sharding constraints only (GSPMD decides comms)."""
+    s_a = NamedSharding(mesh, P(dp_axis, (pod_axis, tp_axis) if pod_axis
+                                else tp_axis))
+    s_b = NamedSharding(mesh, P(pod_axis, tp_axis) if pod_axis
+                        else P(None, tp_axis))
+    s_c = NamedSharding(mesh, P(dp_axis, tp_axis))
+
+    def f(x, y):
+        return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+    return jax.jit(f, in_shardings=(s_a, s_b), out_shardings=s_c)(a, b)

@@ -1,0 +1,113 @@
+"""Public matmul API: every dense contraction in the framework funnels here.
+
+``ca_matmul`` applies the paper's planned, communication-avoiding schedule:
+
+* mode "pallas"    — the Pallas kernel compiled for TPU (production path).
+* mode "interpret" — the same kernel body interpreted on CPU (tests).
+* mode "xla"       — ``jnp.dot`` fallback; numerically the oracle, used on
+  this CPU container for model smoke tests/examples, and on TPU for shapes
+  the planner deems too small to benefit.
+
+The *plan* (tile solve) is computed in all modes, so the I/O model is part
+of the traced program's metadata regardless of backend, and the dry-run /
+benchmarks can report planned Q alongside compiled HLO bytes.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hardware import TpuTarget, V5E
+from repro.core.io_model import TileConfig, solve_tile_config
+from repro.kernels import ops as kops
+
+_state = threading.local()
+
+
+def set_gemm_mode(mode: str) -> None:
+    """Set the global dispatch mode: 'xla' | 'pallas' | 'interpret'."""
+    assert mode in ("xla", "pallas", "interpret"), mode
+    _state.mode = mode
+
+
+def get_gemm_mode() -> str:
+    return getattr(_state, "mode", "xla")
+
+
+class gemm_mode:
+    """Context manager for temporarily switching dispatch mode."""
+
+    def __init__(self, mode: str):
+        self.mode = mode
+
+    def __enter__(self):
+        self.prev = get_gemm_mode()
+        set_gemm_mode(self.mode)
+        return self
+
+    def __exit__(self, *exc):
+        set_gemm_mode(self.prev)
+
+
+# Plans are cached per (m, n, k, dtype) — solving is pure Python on ints.
+_plan_cache: dict = {}
+
+
+def plan_for(m: int, n: int, k: int, dtype, hw: TpuTarget = V5E) -> TileConfig:
+    key = (m, n, k, jnp.dtype(dtype).str, hw.name)
+    if key not in _plan_cache:
+        _plan_cache[key] = solve_tile_config(m, n, k, dtype_in=dtype, hw=hw)
+    return _plan_cache[key]
+
+
+def ca_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    out_dtype=None,
+    hw: TpuTarget = V5E,
+    mode: Optional[str] = None,
+) -> jax.Array:
+    """``x @ w`` with leading batch dims collapsed into the GEMM m-dim.
+
+    x: (..., K), w: (K, N) -> (..., N).  This covers the projections, FFNs,
+    expert matmuls and logit heads of every architecture in configs/.
+    """
+    mode = mode or get_gemm_mode()
+    assert x.shape[-1] == w.shape[0], (x.shape, w.shape)
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    m = 1
+    for d in lead:
+        m *= d
+
+    if mode == "xla" or m == 0:
+        acc = jnp.float32 if not jnp.issubdtype(x.dtype, jnp.integer) else jnp.int32
+        y = jnp.dot(x, w.astype(x.dtype) if acc != jnp.int32 else w,
+                    preferred_element_type=acc)
+        return y.astype(out_dtype)
+
+    x2 = x.reshape(m, k)
+    tile = plan_for(m, n, k, x.dtype, hw)
+    y2 = kops.ca_matmul_trainable(x2, w, tile, mode == "interpret")
+    return y2.reshape(*lead, n).astype(out_dtype)
+
+
+def ca_einsum(spec: str, x: jax.Array, w: jax.Array, **kw) -> jax.Array:
+    """Einsum wrapper: routes 'matmul-shaped' contractions through
+    ca_matmul, everything else through jnp.einsum (fp32 accumulation)."""
+    try:
+        lhs, out = spec.split("->")
+        a_spec, b_spec = lhs.split(",")
+    except ValueError:
+        return jnp.einsum(spec, x, w, preferred_element_type=jnp.float32, **kw)
+    if (len(b_spec) == 2 and a_spec[-1] == b_spec[0]
+            and out == a_spec[:-1] + b_spec[1]):
+        return ca_matmul(x, w, **kw)
+    return jnp.einsum(spec, x, w, preferred_element_type=jnp.float32, **kw)

@@ -1,0 +1,304 @@
+"""The paper's I/O model (Secs. 3.2-3.4), re-derived for the TPU memory
+hierarchy.
+
+Every formula here is the TPU instantiation of a numbered equation in the
+paper:
+
+* ``computational_intensity``  — Eq. 5 objective ``x·y / (x + y)``.
+* ``io_volume_elements``       — Eq. 6: ``Q = mn (1 + k (1/x + 1/y))``.
+* ``io_lower_bound_elements``  — Eq. 7 consequence: ``Q >= 2mnk/sqrt(S)``.
+* ``vmem_quantum``             — Eq. 8 analog: the (sublane, lane) tile is
+  the minimum step size by which a VMEM buffer can grow, exactly as
+  ``N_b,min`` BRAM blocks were on the FPGA.
+* ``solve_tile_config``        — Eq. 9 + Sec. 5.1 parameter selection:
+  maximize intensity subject to the fast-memory capacity, quantized to the
+  hardware step size, with the output (memory) tile receiving the bulk of
+  fast memory and the streamed operands double-buffered (the paper's Feed
+  modules; Pallas emits exactly this pipeline).
+
+The same objective is applied a second time at the chip<->chip boundary in
+:mod:`repro.core.distributed` — see ``DistributedCost``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.hardware import TpuTarget, V5E
+
+
+# ---------------------------------------------------------------------------
+# Paper equations (element-counted, dtype-agnostic)
+# ---------------------------------------------------------------------------
+
+def computational_intensity(x_tot: float, y_tot: float) -> float:
+    """Eq. 5 objective: MACs per off-fast-memory element moved.
+
+    A memory tile of shape (x_tot, y_tot) performs ``x·y·k`` MACs while
+    loading ``k (x + y)`` stream elements; the intensity is the k-independent
+    ratio ``x·y / (x + y)``.
+    """
+    return (x_tot * y_tot) / (x_tot + y_tot)
+
+
+# Minimum contiguous HBM transaction for full bandwidth.  The paper's
+# Sec. 4.3 DDR-burst argument (its on-the-fly transpose exists solely to
+# lengthen bursts); on TPU, stream-block rows of bk*itemsize bytes below
+# this waste HBM transactions.  Perf iteration #2 in EXPERIMENTS §Perf.
+MIN_BURST_BYTES = 512
+
+
+def burst_penalty(bk: int, itemsize: int,
+                  min_burst: int = MIN_BURST_BYTES) -> float:
+    """Multiplier (>= 1) on stream traffic from short rows."""
+    row = bk * itemsize
+    return max(1.0, min_burst / row)
+
+
+def effective_intensity(x_tot: float, y_tot: float, bk: int,
+                        itemsize: int) -> float:
+    """Eq. 5 objective with burst-inefficiency folded into the stream
+    term: MACs per *effective* element moved."""
+    return (x_tot * y_tot) / (burst_penalty(bk, itemsize)
+                              * (x_tot + y_tot))
+
+
+def arithmetic_intensity_ops_per_byte(
+    x_tot: int, y_tot: int, itemsize: int
+) -> float:
+    """Paper Fig. 9 quantity: 2x computational intensity (mul+add), per byte."""
+    return 2.0 * computational_intensity(x_tot, y_tot) / itemsize
+
+
+def io_volume_elements(m: int, n: int, k: int, x_tot: int, y_tot: int) -> float:
+    """Eq. 6: total slow-memory traffic in elements for the full MMM."""
+    return m * n * (1.0 + k * (1.0 / x_tot + 1.0 / y_tot))
+
+
+def io_lower_bound_elements(m: int, n: int, k: int, s_words: int) -> float:
+    """Eq. 7 consequence: Q >= 2mnk/sqrt(S) (+ the mandatory mn write)."""
+    return 2.0 * m * n * k / math.sqrt(s_words) + m * n
+
+
+def drain_overhead_fraction(m: int, n: int, k: int, y_c: int, n_c: int) -> float:
+    """Sec. 4.4: cycles draining C vs. compute cycles.
+
+    Drain takes ``mn / y_c`` cycles against ``mnk / N_c`` compute cycles;
+    the fraction of peak lost is ``1 / (1 + k·y_c/N_c ... )`` — we return
+    drain/(drain+compute).  Used by bench_efficiency (Fig. 8 analog).
+    """
+    drain = m * n / y_c
+    compute = m * n * k / n_c
+    return drain / (drain + compute)
+
+
+# ---------------------------------------------------------------------------
+# Hardware quantization (Eq. 8/9 analogs)
+# ---------------------------------------------------------------------------
+
+def vmem_quantum(dtype, hw: TpuTarget = V5E) -> Tuple[int, int]:
+    """Minimum legal growth step of a VMEM tile for ``dtype``.
+
+    Paper Eq. 8: the BRAM port width forces tile sizes to be multiples of
+    ``N_b,min`` blocks.  On TPU the VREG/VMEM tiling (sublane x lane, with
+    sub-32-bit packing) plays the identical role.
+    """
+    return hw.sublane_tile(dtype)
+
+
+def round_down_to(value: int, quantum: int) -> int:
+    return max(quantum, (value // quantum) * quantum)
+
+
+def round_up_to(value: int, quantum: int) -> int:
+    return ((value + quantum - 1) // quantum) * quantum
+
+
+def memory_utilization(bm: int, bn: int, bk: int, itemsize_in: int,
+                       acc_bytes: int, hw: TpuTarget = V5E) -> float:
+    """Fig. 3 analog: fraction of fast memory actually used by the tiles."""
+    used = tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes)
+    return used / hw.vmem_bytes
+
+
+def tile_vmem_bytes(bm: int, bn: int, bk: int, itemsize_in: int,
+                    acc_bytes: int = 4, itemsize_out: Optional[int] = None,
+                    double_buffer_out: bool = False) -> int:
+    """VMEM bytes claimed by one kernel instance.
+
+    A and B stream blocks are double-buffered (Pallas pipeline = the
+    paper's Feed A/Feed B prefetch).  C lives once in VMEM as the
+    accumulator — the paper's drain-phase separation (Sec. 4.4) means we do
+    NOT double-buffer it, which is exactly the sqrt(2) intensity win the
+    paper claims over Dou/Kumar.  ``double_buffer_out=True`` models the
+    prior-work layout for the ablation benchmark.
+    """
+    itemsize_out = itemsize_out if itemsize_out is not None else itemsize_in
+    stream = 2 * (bm * bk + bk * bn) * itemsize_in
+    acc = bm * bn * acc_bytes
+    out = bm * bn * itemsize_out  # output block written at drain
+    if double_buffer_out:
+        acc *= 2
+    return stream + acc + out
+
+
+# ---------------------------------------------------------------------------
+# Tile solver (Sec. 5.1 parameter selection, on TPU constants)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """A solved kernel plan: the paper's (x_tot, y_tot, ...) for one chip."""
+
+    bm: int
+    bn: int
+    bk: int
+    # grid order: "k_inner" streams k fastest (paper Sec. 4.2 variant,
+    # legal for all dtypes on TPU); "k_outer" revisits C blocks (needs
+    # HBM-resident partials — only used for ablation).
+    order: str = "k_inner"
+    vmem_bytes: int = 0
+    intensity: float = 0.0  # MACs / element (Eq. 5)
+    q_elements: float = 0.0  # Eq. 6 for the full problem
+    q_lower_bound: float = 0.0
+    utilization: float = 0.0  # Fig. 3 analog
+
+    def grid(self, m: int, n: int, k: int) -> Tuple[int, int, int]:
+        return (pl_ceil(m, self.bm), pl_ceil(n, self.bn), pl_ceil(k, self.bk))
+
+
+def pl_ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def solve_tile_config(
+    m: int,
+    n: int,
+    k: int,
+    dtype_in=jnp.bfloat16,
+    dtype_acc=jnp.float32,
+    hw: TpuTarget = V5E,
+    vmem_fraction: float = 0.75,
+    # Perf iteration #1 (EXPERIMENTS §Perf): 2048 left the capacity
+    # constraint slack (44% VMEM util for bf16) and intensity at 1024;
+    # letting the Eq. 5 capacity bound bind raises AI ~1.9x.
+    max_block: int = 8192,
+    double_buffer_out: bool = False,
+    bk_max: int = 2048,
+) -> TileConfig:
+    """Solve the paper's optimization problem (Eqs. 5-9) for one TPU chip.
+
+    Maximize ``bm·bn/(bm+bn)`` s.t. the VMEM capacity constraint, with
+    (bm, bn) quantized to the hardware step (Eq. 8 analog) and clamped to
+    the problem size.  Following Eq. 7 the optimum is square; when m or n
+    is smaller than the square optimum the solver degrades to the best
+    rectangle, mirroring the paper's narrow-compute-tile discussion
+    (Sec. 4.1: keep x_tot and y_tot "as similar as possible").
+    """
+    itemsize_in = jnp.dtype(dtype_in).itemsize
+    acc_bytes = jnp.dtype(dtype_acc).itemsize
+    budget = int(hw.vmem_bytes * vmem_fraction)
+    qm, qn = vmem_quantum(dtype_in, hw)
+    # k participates in the streamed blocks only; its quantum is the lane
+    # dim of A's minor axis (contiguity — the paper's DDR-burst argument,
+    # Sec. 4.3, maps to long HBM DMA bursts).
+    qk = hw.lane
+
+    m_cap = min(round_up_to(m, qm), max_block)
+    n_cap = min(round_up_to(n, qn), max_block)
+
+    best: Optional[TileConfig] = None
+    bk_cap = min(round_up_to(k, qk), bk_max)
+    bk_candidates = sorted({min(bk_cap, c) for c in (128, 256, 512, 1024, 2048)})
+    for bk in bk_candidates:
+        for bm in range(qm if qm > m_cap else round_down_to(m_cap, qm), 0, -qm):
+            if bm > m_cap:
+                continue
+            # Largest bn satisfying the capacity constraint, then quantize
+            # down (Eq. 9: floor to a whole number of hardware steps).
+            # stream + (acc+out) <= budget
+            fixed = 2 * bm * bk * itemsize_in
+            per_bn = 2 * bk * itemsize_in + bm * (
+                acc_bytes * (2 if double_buffer_out else 1) + itemsize_in
+            )
+            bn_max = (budget - fixed) // per_bn if budget > fixed else 0
+            bn = min(round_down_to(int(bn_max), qn), n_cap)
+            if bn <= 0 or bn_max < qn:
+                continue
+            vb = tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes,
+                                 double_buffer_out=double_buffer_out)
+            if vb > budget:
+                continue
+            inten = effective_intensity(bm, bn, bk, itemsize_in)
+            cand = TileConfig(
+                bm=bm, bn=bn, bk=bk, vmem_bytes=vb, intensity=inten,
+                q_elements=io_volume_elements(m, n, k, min(bm, m), min(bn, n)),
+                q_lower_bound=io_lower_bound_elements(
+                    m, n, k, budget // max(itemsize_in, acc_bytes)),
+                utilization=vb / hw.vmem_bytes,
+            )
+            if best is None or _better(cand, best):
+                best = cand
+            # bm loop descends; once bn hits its cap the intensity can only
+            # fall (bm shrinking at fixed bn) — but mid-range bm trades bn
+            # up, so keep scanning until intensity drops well below best.
+            if best is not None and inten < 0.5 * best.intensity:
+                break
+    if best is None:
+        # Degenerate tiny problem: single quantum tile.
+        bm, bn, bk = qm, qn, min(qk, round_up_to(k, qk))
+        best = TileConfig(
+            bm=bm, bn=bn, bk=bk,
+            vmem_bytes=tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes),
+            intensity=computational_intensity(bm, bn),
+            q_elements=io_volume_elements(m, n, k, min(bm, m), min(bn, n)),
+            q_lower_bound=io_lower_bound_elements(m, n, k, budget // 4),
+            utilization=0.0,
+        )
+    return best
+
+
+def _better(a: TileConfig, b: TileConfig) -> bool:
+    """Higher intensity wins; ties prefer squarer tiles then bigger bk."""
+    if abs(a.intensity - b.intensity) > 1e-9:
+        return a.intensity > b.intensity
+    asq = abs(math.log(a.bm / a.bn))
+    bsq = abs(math.log(b.bm / b.bn))
+    if abs(asq - bsq) > 1e-9:
+        return asq < bsq
+    return a.bk > b.bk
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms for a single-chip GEMM (used by benchmarks)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GemmRoofline:
+    compute_s: float
+    memory_s: float
+    intensity_ops_per_byte: float
+    bound: str
+
+    @property
+    def time_s(self) -> float:
+        return max(self.compute_s, self.memory_s)
+
+
+def gemm_roofline(m: int, n: int, k: int, tile: TileConfig, dtype_in,
+                  hw: TpuTarget = V5E) -> GemmRoofline:
+    itemsize = jnp.dtype(dtype_in).itemsize
+    flops = 2.0 * m * n * k
+    q_bytes = io_volume_elements(m, n, k, tile.bm, tile.bn) * itemsize
+    compute_s = flops / hw.peak_flops(dtype_in)
+    memory_s = q_bytes / hw.hbm_bandwidth
+    return GemmRoofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        intensity_ops_per_byte=flops / q_bytes,
+        bound="compute" if compute_s >= memory_s else "memory",
+    )

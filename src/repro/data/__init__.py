@@ -1,0 +1,5 @@
+"""Synthetic sharded data pipeline."""
+
+from repro.data import pipeline
+
+__all__ = ["pipeline"]

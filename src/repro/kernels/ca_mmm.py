@@ -1,0 +1,171 @@
+"""Communication-avoiding MMM Pallas kernel — the paper's hardware mapping
+(Sec. 4) re-targeted from an FPGA PE chain to the TPU MXU + VMEM.
+
+Schedule (identical to the paper's, per DESIGN.md §2):
+
+* The output block ``C[i, j]`` of shape ``(bm, bn)`` is the **memory tile**:
+  it stays resident in a VMEM accumulator for the whole ``k`` loop
+  (output-stationary outer-product schedule, paper Fig. 2/Lst. 2).
+* ``A`` column panels and ``B`` row panels are **streamed**; Pallas's
+  pipelined ``BlockSpec`` fetches are the Feed A / Feed B double buffers
+  of paper Sec. 4.1 (two in-flight blocks per operand).
+* The result is written back **once**, at ``k == K-1`` — the paper's
+  drain-phase separation (Sec. 4.4): no double-buffered output tile, so the
+  full fast memory budget serves the accumulator (the sqrt(2) intensity
+  win over Dou [13] / Kumar [23]).
+* Grid order ``(i, j, k)`` with ``k`` innermost ("arbitrary" semantics) —
+  on TPU the MXU pipelines fp accumulation natively, so the paper's
+  integer-only k-inner variant (Sec. 4.2) is legal for all dtypes.
+
+Tile sizes (bm, bn, bk) come from :func:`repro.core.io_model.solve_tile_config`,
+the paper's Eq. 5–9 solved over VMEM capacity and (sublane, lane) quanta.
+
+The kernel also supports the **distance product** (min-plus semiring), the
+paper's Sec. 5.2 flexibility example, via ``semiring="min_plus"``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _acc_dtype(dtype) -> jnp.dtype:
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        return jnp.dtype(jnp.int32)
+    return jnp.dtype(jnp.float32)
+
+
+def _mmm_kernel(a_ref, b_ref, c_ref, acc_ref, *, semiring: str):
+    """One grid step: accumulate a (bm, bk) x (bk, bn) product into VMEM."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        if semiring == "min_plus":
+            acc_ref[...] = jnp.full_like(acc_ref, jnp.inf)
+        else:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if semiring == "min_plus":
+        a = a_ref[...].astype(jnp.float32)
+        b = b_ref[...].astype(jnp.float32)
+        # Tropical semiring: (min, +). Small bk keeps the broadcast in VMEM.
+        cand = jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+        acc_ref[...] = jnp.minimum(acc_ref[...], cand)
+    else:
+        acc_t = acc_ref.dtype
+        if acc_t == jnp.int32:
+            a = a_ref[...].astype(jnp.int32)
+            b = b_ref[...].astype(jnp.int32)
+        else:
+            a = a_ref[...]
+            b = b_ref[...]
+        acc_ref[...] += jnp.dot(a, b, preferred_element_type=acc_t)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _drain():
+        # Paper Sec. 4.4: the drain is a separate, sequential phase — the
+        # single write-back below is all the output traffic this block
+        # ever causes (Q's mn term in Eq. 6).
+        c_ref[...] = acc_ref[...].astype(c_ref.dtype)
+
+
+def ca_mmm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 512,
+    bn: int = 512,
+    bk: int = 512,
+    out_dtype=None,
+    semiring: str = "plus_times",
+    interpret: bool = False,
+) -> jax.Array:
+    """C = A @ B with the paper's I/O-minimal schedule.
+
+    Requires m % bm == n % bn == k % bk == 0 (``ops.ca_mmm_padded`` pads).
+    """
+    m, kdim = a.shape
+    k2, n = b.shape
+    assert kdim == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (
+        f"shapes {(m, n, kdim)} not divisible by tiles {(bm, bn, bk)}")
+    acc_t = _acc_dtype(a.dtype) if semiring == "plus_times" else jnp.float32
+    out_dtype = out_dtype or (acc_t if acc_t == jnp.int32 else a.dtype)
+    if semiring == "min_plus":
+        out_dtype = jnp.float32
+
+    grid = (m // bm, n // bn, kdim // bk)
+    kernel = functools.partial(_mmm_kernel, semiring=semiring)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_t)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)
+
+
+def ca_mmm_k_outer(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 512,
+    bn: int = 512,
+    bk: int = 512,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Ablation variant: k outermost, C blocks revisited from HBM.
+
+    This is the schedule the paper's model *rejects*: each k step re-reads
+    and re-writes the C tile through slow memory, inflating Q from
+    ``mn (1 + k(1/x+1/y))`` to ``mnk/bk · 2 + ...``.  Used by
+    ``benchmarks/bench_intensity.py`` to demonstrate the model's prediction.
+    """
+    m, kdim = a.shape
+    _, n = b.shape
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0
+    acc_t = _acc_dtype(a.dtype)
+    out_dtype = out_dtype or (acc_t if acc_t == jnp.int32 else a.dtype)
+
+    def kernel(a_ref, b_ref, c_ref):
+        k = pl.program_id(0)
+
+        @pl.when(k == 0)
+        def _():
+            c_ref[...] = jnp.zeros_like(c_ref)
+
+        c_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=acc_t
+        ).astype(c_ref.dtype)
+
+    grid = (kdim // bk, m // bm, n // bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda kk, i, j: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda kk, i, j: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda kk, i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), acc_t),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(a, b).astype(out_dtype)

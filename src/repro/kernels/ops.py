@@ -1,0 +1,89 @@
+"""jit-ready wrappers around the Pallas CA-MMM kernel.
+
+Adds: shape padding to tile multiples, dtype plumbing, and a custom VJP so
+the kernel is trainable (both backward GEMMs reuse the same I/O-minimal
+schedule — dA = dC @ B^T and dB = A^T @ dC are themselves CA-MMMs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.io_model import TileConfig, round_up_to, solve_tile_config
+import repro.kernels.ca_mmm as kern
+
+
+def _pad2(x: jax.Array, r0: int, r1: int) -> jax.Array:
+    p0 = round_up_to(x.shape[0], r0) - x.shape[0]
+    p1 = round_up_to(x.shape[1], r1) - x.shape[1]
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def ca_mmm_padded(
+    a: jax.Array,
+    b: jax.Array,
+    tile: Optional[TileConfig] = None,
+    *,
+    out_dtype=None,
+    interpret: bool = False,
+    semiring: str = "plus_times",
+) -> jax.Array:
+    """CA-MMM for arbitrary (m, k) x (k, n): pads to the plan, slices back."""
+    m, k = a.shape
+    _, n = b.shape
+    if tile is None:
+        tile = solve_tile_config(m, n, k, dtype_in=a.dtype)
+    bm = min(tile.bm, round_up_to(m, 8))
+    bn = min(tile.bn, round_up_to(n, 128))
+    bk = min(tile.bk, round_up_to(k, 128))
+    ap = _pad2(a, bm, bk)
+    bp = _pad2(b, bk, bn)
+    if semiring == "min_plus":
+        # Padding rows/cols must not win the min: pad with +inf on k.
+        if ap.shape[0] > m or ap.shape[1] > k:
+            ap = ap.at[m:, :].set(jnp.inf).at[:, k:].set(jnp.inf)
+        if bp.shape[0] > k or bp.shape[1] > n:
+            bp = bp.at[k:, :].set(jnp.inf).at[:, n:].set(jnp.inf)
+    c = kern.ca_mmm(ap, bp, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                    semiring=semiring, interpret=interpret)
+    return c[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def ca_matmul_trainable(a: jax.Array, b: jax.Array,
+                        tile: Optional[TileConfig] = None,
+                        interpret: bool = False) -> jax.Array:
+    return ca_mmm_padded(a, b, tile, interpret=interpret)
+
+
+def _fwd(a, b, tile, interpret):
+    return ca_matmul_trainable(a, b, tile, interpret), (a, b)
+
+
+def _bwd(tile, interpret, res, g):
+    a, b = res
+    # Both backward products run through the same communication-avoiding
+    # schedule; transposes are layout changes fused by XLA.
+    ga = ca_mmm_padded(g.astype(a.dtype), b.T.astype(a.dtype), None,
+                       interpret=interpret)
+    gb = ca_mmm_padded(a.T, g.astype(a.dtype), None, interpret=interpret)
+    return ga.astype(a.dtype), gb.astype(b.dtype)
+
+
+ca_matmul_trainable.defvjp(_fwd, _bwd)
+
+
+def distance_product(a: jax.Array, b: jax.Array, *, interpret: bool = False,
+                     tile: Optional[TileConfig] = None) -> jax.Array:
+    """Tropical (min, +) matrix product — paper Sec. 5.2 flexibility demo."""
+    if tile is None:
+        # The broadcast in the min-plus kernel is O(bm*bk*bn) VMEM-heavy;
+        # use small blocks.
+        tile = TileConfig(bm=128, bn=128, bk=128)
+    return ca_mmm_padded(a, b, tile, interpret=interpret, semiring="min_plus")

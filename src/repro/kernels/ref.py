@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contract: tests sweep shapes/dtypes and assert the
+kernels (run with ``interpret=True`` on CPU) match these references.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_matmul(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """C = A @ B with fp32 (or int32) accumulation — the paper's Lst. 1."""
+    acc_t = jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer) else jnp.float32
+    out_dtype = out_dtype or (acc_t if jnp.issubdtype(a.dtype, jnp.integer)
+                              else a.dtype)
+    c = jnp.dot(a.astype(acc_t if acc_t == jnp.int32 else a.dtype),
+                b.astype(acc_t if acc_t == jnp.int32 else b.dtype),
+                preferred_element_type=acc_t)
+    return c.astype(out_dtype)
+
+
+def ref_distance_product(a: jax.Array, b: jax.Array) -> jax.Array:
+    """min-plus (tropical) matmul — the paper's Sec. 5.2 custom-semiring
+    example ('replace multiply and add with add and minimum')."""
+    # a: (m, k), b: (k, n) -> (m, n): min_k (a[m,k] + b[k,n])
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def ref_flash_attention(q, k, v, *, causal: bool = True,
+                        window: int | None = None, scale: float | None = None):
+    """Oracle for the attention kernel: plain softmax attention.
+
+    q: (L, H, D), k/v: (S, Hkv, D) with H % Hkv == 0.  fp32 math.
+    """
+    L, H, D = q.shape
+    S, Hkv, _ = k.shape
+    g = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, g, axis=1)  # (S, H, D)
+    vf = jnp.repeat(vf, g, axis=1)
+    logits = jnp.einsum("lhd,shd->hls", qf, kf)
+    pos_q = jnp.arange(L)[:, None] + (S - L)  # queries end-aligned with keys
+    pos_k = jnp.arange(S)[None, :]
+    mask = jnp.ones((L, S), dtype=bool)
+    if causal:
+        mask &= pos_k <= pos_q
+    if window is not None:
+        mask &= pos_k > pos_q - window
+    logits = jnp.where(mask[None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hls,shd->lhd", p, vf)
+    return out.astype(q.dtype)

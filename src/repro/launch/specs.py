@@ -1,0 +1,188 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every model
+input, per (arch x shape x step-kind) — weak-type-correct, shardable, no
+device allocation.  The modality frontends of [vlm]/[audio] archs are
+STUBS: specs carry precomputed patch/frame embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import batch_axes
+from repro.models import model as M
+from repro.train import step as train_mod
+
+
+def _batch_spec(mesh: Mesh, B: int) -> Tuple[Optional[Tuple[str, ...]], int]:
+    axes = batch_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if axes and B % total == 0 and B >= total:
+        return axes, total
+    return None, 1
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """(ShapeDtypeStructs, NamedShardings) for one global train batch."""
+    B, L = shape.global_batch, shape.seq_len
+    baxes, _ = _batch_spec(mesh, B)
+    sds, specs = {}, {}
+    if cfg.frontend == "tokens":
+        sds["tokens"] = jax.ShapeDtypeStruct((B, L), jnp.int32)
+        specs["tokens"] = P(baxes, None)
+    else:
+        sds["embeds"] = jax.ShapeDtypeStruct((B, L, cfg.d_model),
+                                             jnp.dtype(cfg.compute_dtype))
+        specs["embeds"] = P(baxes, None, None)
+    if cfg.n_codebooks > 1:
+        sds["labels"] = jax.ShapeDtypeStruct((B, L, cfg.n_codebooks),
+                                             jnp.int32)
+        specs["labels"] = P(baxes, None, None)
+    else:
+        sds["labels"] = jax.ShapeDtypeStruct((B, L), jnp.int32)
+        specs["labels"] = P(baxes, None)
+    sds["mask"] = jax.ShapeDtypeStruct((B, L), jnp.float32)
+    specs["mask"] = P(baxes, None)
+    shardings = {k: NamedSharding(mesh, s) for k, s in specs.items()}
+    return sds, shardings
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    B, L = shape.global_batch, shape.seq_len
+    baxes, _ = _batch_spec(mesh, B)
+    sds, specs = {}, {}
+    if cfg.frontend == "tokens":
+        sds["tokens"] = jax.ShapeDtypeStruct((B, L), jnp.int32)
+        specs["tokens"] = P(baxes, None)
+    else:
+        sds["embeds"] = jax.ShapeDtypeStruct((B, L, cfg.d_model),
+                                             jnp.dtype(cfg.compute_dtype))
+        specs["embeds"] = P(baxes, None, None)
+    shardings = {k: NamedSharding(mesh, s) for k, s in specs.items()}
+    return sds, shardings
+
+
+def decode_token_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    B = shape.global_batch
+    baxes, _ = _batch_spec(mesh, B)
+    sds, specs = {}, {}
+    if cfg.frontend == "tokens":
+        sds["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        specs["tokens"] = P(baxes, None)
+    else:
+        sds["embeds"] = jax.ShapeDtypeStruct((B, 1, cfg.d_model),
+                                             jnp.dtype(cfg.compute_dtype))
+        specs["embeds"] = P(baxes, None, None)
+    shardings = {k: NamedSharding(mesh, s) for k, s in specs.items()}
+    return sds, shardings
+
+
+def _cache_leaf_spec(key: str, shp: Tuple[int, ...], B: int,
+                     cache_len: int, mesh: Mesh) -> P:
+    """Path-aware sharding for cache leaves (DESIGN.md §5).
+
+    Dim 0 is always the stacked layer/application dim (replicated).
+    Dim 1 is always batch: -> (pod, data) when divisible; for batch=1
+    (long_500k) the sequence dim is sharded over 'data' instead (sequence
+    parallelism).  The trailing head/feature dim shards over 'model' when
+    divisible (falls back from heads to head_dim — e.g. qwen2-vl's 8 kv
+    heads on a 16-way axis shard head_dim 128 instead)."""
+    baxes, btotal = _batch_spec(mesh, B)
+    dsize = mesh.shape.get("data", 1)
+    msize = mesh.shape.get("model", 1)
+    entries: list = [None] * len(shp)
+    batch_sharded = bool(baxes) and shp[1] == B and B % btotal == 0
+    if batch_sharded:
+        entries[1] = baxes
+    # sequence dim (k/v/pos/c/k_rope caches have it at dim 2)
+    seq_dim = 2 if len(shp) > 2 and shp[2] == cache_len else None
+    if not batch_sharded and seq_dim is not None and dsize > 1 \
+            and cache_len % dsize == 0:
+        entries[seq_dim] = "data"
+    if msize > 1 and key not in ("pos",):
+        # prefer heads dim, then the trailing feature dim
+        cand_order = []
+        if key in ("k", "v"):
+            cand_order = [3, 4] if len(shp) == 5 else [len(shp) - 1]
+        elif key == "ssm":
+            cand_order = [2, 3]          # (L, B, H, P, N): heads, head_dim
+        elif key == "conv":
+            cand_order = [3]             # channels
+        elif key in ("c", "k_rope"):
+            cand_order = [3]             # lora / rope feature dim
+        else:
+            cand_order = [len(shp) - 1]
+        for i in cand_order:
+            if i < len(shp) and entries[i] is None and i != seq_dim \
+                    and i != 1 and shp[i] % msize == 0 and shp[i] >= msize:
+                entries[i] = "model"
+                break
+    return P(*entries)
+
+
+def cache_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """ShapeDtypeStructs + shardings for the decode cache pytree."""
+    from repro.models import attention as A
+    B, S = shape.global_batch, shape.seq_len
+    cache_sds = jax.eval_shape(
+        lambda: M.make_cache(cfg, B, S, jnp.dtype(cfg.compute_dtype)))
+    C = A.cache_len_for(cfg, S)
+
+    def leaf_shard(path, leaf):
+        key = str(getattr(path[-1], "key", ""))
+        return NamedSharding(
+            mesh, _cache_leaf_spec(key, leaf.shape, B, C, mesh))
+
+    shardings = jax.tree_util.tree_map_with_path(leaf_shard, cache_sds)
+    return cache_sds, shardings
+
+
+def param_like_sds(defs, dtype=None):
+    return {k: jax.ShapeDtypeStruct(d.shape, dtype or jnp.float32)
+            for k, d in defs.items()}
+
+
+def state_inputs(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = True):
+    """TrainState ShapeDtypeStructs + shardings (params fp32 + AdamW)."""
+    from repro.models.model import model_defs
+    from repro.sharding.rules import pspecs_for_defs
+
+    defs = model_defs(cfg)
+    pspecs = pspecs_for_defs(defs, mesh, fsdp=fsdp,
+                             fsdp_axes=batch_axes(mesh))
+    params_sds = param_like_sds(defs)
+    params_sh = {k: NamedSharding(mesh, s) for k, s in pspecs.items()}
+    from repro.optim import adamw
+    opt_sds = adamw.AdamWState(
+        count=jax.ShapeDtypeStruct((), jnp.int32),
+        m=dict(params_sds), v=dict(params_sds))
+    state_sds = train_mod.TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        params=params_sds, opt=opt_sds)
+    rep = NamedSharding(mesh, P())
+    state_sh = train_mod.TrainState(
+        step=rep,
+        params=params_sh,
+        opt=adamw.AdamWState(count=rep, m=dict(params_sh),
+                             v=dict(params_sh)))
+    return state_sds, state_sh
+
+
+def serve_param_inputs(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = False):
+    """Serving weights: bf16, TP-sharded (FSDP only when they don't fit)."""
+    from repro.models.model import model_defs
+    from repro.sharding.rules import pspecs_for_defs
+
+    defs = model_defs(cfg)
+    pspecs = pspecs_for_defs(defs, mesh, fsdp=fsdp,
+                             fsdp_axes=batch_axes(mesh))
+    sds = param_like_sds(defs, dtype=jnp.dtype(cfg.compute_dtype))
+    sh = {k: NamedSharding(mesh, s) for k, s in pspecs.items()}
+    return sds, sh

@@ -1,0 +1,5 @@
+"""Model substrate: layers, blocks, and the config-driven LMModel."""
+
+from repro.models import attention, blocks, common, model, moe, ssm
+
+__all__ = ["attention", "blocks", "common", "model", "moe", "ssm"]

@@ -1,0 +1,119 @@
+"""Decoder block variants for all assigned architecture families."""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.gemm import ca_matmul
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import Defs, ParamDef
+from repro.sharding.rules import maybe_shard
+
+
+def _depth_scale(cfg: ModelConfig) -> float:
+    return 1.0 / math.sqrt(2.0 * cfg.n_layers)
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (dense / moe / vlm / audio families)
+# ---------------------------------------------------------------------------
+
+def transformer_block_defs(cfg: ModelConfig) -> Defs:
+    ds = _depth_scale(cfg)
+    defs: Defs = {}
+    defs.update(cm.prefix_defs("norm_attn", cm.rms_norm_def(cfg.d_model)))
+    defs.update(cm.prefix_defs("attn", attn.attn_defs(cfg, ds)))
+    defs.update(cm.prefix_defs("norm_ffn", cm.rms_norm_def(cfg.d_model)))
+    if cfg.moe is not None and cfg.moe.n_experts:
+        defs.update(cm.prefix_defs("moe", moe_mod.moe_defs(cfg, ds)))
+    else:
+        defs.update(cm.prefix_defs("mlp", cm.mlp_defs(cfg.d_model, cfg.d_ff,
+                                                      cfg.act, ds)))
+    return defs
+
+
+def transformer_block_apply(p, x, cfg: ModelConfig, *, positions,
+                            cache=None, step=None, mode="train",
+                            max_len=None):
+    h, new_cache = attn.attn_apply(
+        cm.subtree(p, "attn"),
+        cm.rms_norm(x, p["norm_attn/scale"], cfg.norm_eps),
+        cfg, positions=positions, cache=cache, step=step, mode=mode,
+        max_len=max_len)
+    x = x + h
+    x = maybe_shard(x, ("batch", "seq", None))
+    u = cm.rms_norm(x, p["norm_ffn/scale"], cfg.norm_eps)
+    if cfg.moe is not None and cfg.moe.n_experts:
+        h, aux = moe_mod.moe_apply(cm.subtree(p, "moe"), u, cfg)
+    else:
+        h, aux = cm.mlp_apply(cm.subtree(p, "mlp"), u, cfg.act), 0.0
+    x = x + h
+    x = maybe_shard(x, ("batch", "seq", None))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (ssm / hybrid families)
+# ---------------------------------------------------------------------------
+
+def mamba_block_defs(cfg: ModelConfig) -> Defs:
+    defs: Defs = {}
+    defs.update(cm.prefix_defs("norm", cm.rms_norm_def(cfg.d_model)))
+    defs.update(cm.prefix_defs("mixer", ssm_mod.mamba2_defs(
+        cfg, _depth_scale(cfg))))
+    return defs
+
+
+def mamba_block_apply(p, x, cfg: ModelConfig, *, cache=None, mode="train"):
+    h, new_cache = ssm_mod.mamba2_apply(
+        cm.subtree(p, "mixer"),
+        cm.rms_norm(x, p["norm/scale"], cfg.norm_eps),
+        cfg, cache=cache, mode=mode)
+    x = x + h
+    x = maybe_shard(x, ("batch", "seq", None))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 shared attention block (hybrid family)
+# ---------------------------------------------------------------------------
+
+def shared_block_defs(cfg: ModelConfig) -> Defs:
+    """One weight-shared attention+MLP block, applied every
+    ``cfg.shared_attn_every`` SSM layers.  Input is concat(hidden,
+    embedding-stream) -> 2d, projected back to d (Zamba2's concatenation
+    trick), then a standard attention + SwiGLU block."""
+    d = cfg.d_model
+    ds = _depth_scale(cfg)
+    defs: Defs = {
+        "w_in": ParamDef((2 * d, d), ("embed", "embed2")),
+    }
+    defs.update(cm.prefix_defs("norm_in", cm.rms_norm_def(2 * d)))
+    defs.update(cm.prefix_defs("attn", attn.gqa_defs(cfg, ds)))
+    defs.update(cm.prefix_defs("norm_ffn", cm.rms_norm_def(d)))
+    defs.update(cm.prefix_defs("mlp", cm.mlp_defs(d, cfg.d_ff, cfg.act, ds)))
+    return defs
+
+
+def shared_block_apply(p, x, emb0, cfg: ModelConfig, *, positions,
+                       cache=None, step=None, mode="train", max_len=None):
+    dt = x.dtype
+    u = jnp.concatenate([x, emb0], axis=-1)
+    u = cm.rms_norm(u, p["norm_in/scale"], cfg.norm_eps)
+    u = ca_matmul(u, p["w_in"].astype(dt))
+    h, new_cache = attn.gqa_apply(
+        cm.subtree(p, "attn"), u, cfg, positions=positions, cache=cache,
+        step=step, mode=mode, max_len=max_len)
+    x = x + h
+    u = cm.rms_norm(x, p["norm_ffn/scale"], cfg.norm_eps)
+    x = x + cm.mlp_apply(cm.subtree(p, "mlp"), u, cfg.act)
+    x = maybe_shard(x, ("batch", "seq", None))
+    return x, new_cache

@@ -1,0 +1,204 @@
+"""Shared model machinery: parameter definitions (single source for init
+AND sharding specs), norms, rotary embeddings (RoPE / M-RoPE), MLPs.
+
+Parameters are flat dicts keyed by '/'-joined paths.  Every parameter is
+declared once as a :class:`ParamDef` carrying its shape, *logical axes*
+(for the sharding rule engine in ``repro.sharding.rules``) and init law —
+so initialization and partitioning can never drift apart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import ca_matmul
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical names, len == len(shape)
+    init: str = "fanin"               # fanin|embed|zeros|ones|a_log|dt_bias|conv
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Defs = Dict[str, ParamDef]
+
+
+def prefix_defs(prefix: str, defs: Defs) -> Defs:
+    return {f"{prefix}/{k}": v for k, v in defs.items()}
+
+
+def stack_defs(defs: Defs, n: int) -> Defs:
+    """Add a leading 'layers' axis to every def (for lax.scan stacks)."""
+    return {
+        k: dataclasses.replace(d, shape=(n,) + d.shape,
+                               axes=("layers",) + d.axes)
+        for k, d in defs.items()
+    }
+
+
+def init_params(defs: Defs, key: jax.Array, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    params = {}
+    names = sorted(defs)
+    keys = jax.random.split(key, max(len(names), 1))
+    for name, k in zip(names, keys):
+        d = defs[name]
+        if d.init == "zeros":
+            p = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            p = jnp.ones(d.shape, dtype)
+        elif d.init == "embed":
+            p = 0.02 * jax.random.normal(k, d.shape, dtype)
+        elif d.init == "a_log":
+            # Mamba2: A ~ -Uniform[1, 16]; stored as log(-A).
+            u = jax.random.uniform(k, d.shape, dtype, 1.0, 16.0)
+            p = jnp.log(u)
+        elif d.init == "dt_bias":
+            # softplus(dt_bias) spans ~[1e-3, 1e-1]
+            dt = jnp.exp(jax.random.uniform(k, d.shape, dtype,
+                                            math.log(1e-3), math.log(1e-1)))
+            p = dt + jnp.log(-jnp.expm1(-dt))
+        elif d.init == "conv":
+            fan = d.shape[0]
+            p = jax.random.uniform(k, d.shape, dtype,
+                                   -1 / math.sqrt(fan), 1 / math.sqrt(fan))
+        else:  # fanin
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale / math.sqrt(fan_in)
+            p = std * jax.random.truncated_normal(k, -2.0, 2.0, d.shape, dtype)
+        params[name] = p
+    return params
+
+
+def subtree(params: Dict[str, jax.Array], prefix: str) -> Dict[str, jax.Array]:
+    pre = prefix + "/"
+    return {k[len(pre):]: v for k, v in params.items() if k.startswith(pre)}
+
+
+def count_params(params: Dict[str, jax.Array]) -> int:
+    return int(sum(p.size for p in params.values()))
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * gain.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def rms_norm_def(d: int) -> Defs:
+    return {"scale": ParamDef((d,), ("embed",), init="ones")}
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE and Qwen2-VL's M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               mrope_sections: Optional[Sequence[int]] = None) -> jax.Array:
+    """Rotate (B, L, H, D).  positions: (B, L) or (B, L, 3) for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the D/2 frequency lanes are partitioned into
+    (temporal, height, width) sections, each indexed by its own position
+    stream.  With the vision frontend stubbed, all three streams carry the
+    text position (Qwen2-VL's text-only degenerate case) — the section
+    plumbing is exercised regardless.
+    """
+    B, L, H, D = x.shape
+    half = D // 2
+    inv = rope_freqs(D, theta)  # (half,)
+    if positions.ndim == 3:
+        sections = list(mrope_sections or ())
+        assert sum(sections) == half, (sections, half)
+        sec_id = jnp.repeat(jnp.arange(len(sections)),
+                            jnp.asarray(sections), total_repeat_length=half)
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(sec_id[None, None], (B, L, half)), axis=2)
+    else:
+        pos = jnp.broadcast_to(positions.astype(jnp.float32)[..., None],
+                               (B, L, half))
+    ang = pos * inv[None, None, :]         # (B, L, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_defs(d: int, f: int, act: str, depth_scale: float = 1.0) -> Defs:
+    defs = {
+        "w_up": ParamDef((d, f), ("embed", "mlp")),
+        "w_down": ParamDef((f, d), ("mlp", "embed"), scale=depth_scale),
+    }
+    if act == "silu":
+        defs["w_gate"] = ParamDef((d, f), ("embed", "mlp"))
+    return defs
+
+
+def mlp_apply(p: Dict[str, jax.Array], x: jax.Array, act: str) -> jax.Array:
+    dt = x.dtype
+    up = ca_matmul(x, p["w_up"].astype(dt))
+    if act == "silu":
+        gate = ca_matmul(x, p["w_gate"].astype(dt))
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(dt) * up
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(dt)
+    return ca_matmul(h, p["w_down"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_defs(vocab: int, d: int) -> Defs:
+    return {"table": ParamDef((vocab, d), ("vocab", "embed"), init="embed")}
+
+
+def embed_apply(p: Dict[str, jax.Array], tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["table"].astype(dtype), tokens, axis=0)
+
+
+def unembed_defs(d: int, vocab: int, n_heads: int = 1) -> Defs:
+    if n_heads == 1:
+        return {"w": ParamDef((d, vocab), ("embed", "vocab"))}
+    return {"w": ParamDef((n_heads, d, vocab), (None, "embed", "vocab"))}
+
+
+def unembed_apply(p: Dict[str, jax.Array], x: jax.Array, dtype,
+                  n_heads: int = 1) -> jax.Array:
+    w = p["w"].astype(dtype)
+    if n_heads == 1:
+        return ca_matmul(x, w, out_dtype=jnp.float32)
+    # musicgen: one head per codebook -> (..., n_heads, vocab)
+    return jnp.einsum("bld,hdv->blhv", x, w,
+                      preferred_element_type=jnp.float32)

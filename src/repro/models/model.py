@@ -1,0 +1,284 @@
+"""LMModel: config-driven decoder LM covering all assigned families.
+
+Layers are stacked and executed with ``lax.scan`` (+ remat) so the HLO
+stays compact for the 40-cell multi-pod dry-run; prefill/decode thread
+per-layer cache pytrees through the same scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import blocks as blk
+from repro.models import common as cm
+from repro.models import ssm as ssm_mod
+from repro.models.common import Defs
+from repro.sharding.rules import maybe_shard
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def _block_defs(cfg: ModelConfig) -> Defs:
+    if cfg.family in ("ssm", "hybrid"):
+        return blk.mamba_block_defs(cfg)
+    return blk.transformer_block_defs(cfg)
+
+
+def model_defs(cfg: ModelConfig) -> Defs:
+    defs: Defs = {}
+    if cfg.frontend == "tokens":
+        defs.update(cm.prefix_defs(
+            "embed", cm.embed_defs(cfg.padded_vocab, cfg.d_model)))
+    defs.update(cm.prefix_defs(
+        "blocks", cm.stack_defs(_block_defs(cfg), cfg.n_layers)))
+    if cfg.shared_attn_every:
+        defs.update(cm.prefix_defs("shared", blk.shared_block_defs(cfg)))
+    defs.update(cm.prefix_defs("norm_f", cm.rms_norm_def(cfg.d_model)))
+    defs.update(cm.prefix_defs(
+        "head", cm.unembed_defs(cfg.d_model, cfg.padded_vocab,
+                                cfg.n_codebooks)))
+    return defs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, jax.Array]:
+    return cm.init_params(model_defs(cfg), key, cfg.pdtype())
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    """Shared block fires after layers e-1, 2e-1, ... (full groups only)."""
+    if not cfg.shared_attn_every:
+        return 0
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def _is_shared_layer(cfg: ModelConfig, idx: jax.Array) -> jax.Array:
+    e = cfg.shared_attn_every
+    return jnp.mod(idx, e) == e - 1
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Decode-time cache pytree (stacked over layers / applications)."""
+    dtype = dtype or cfg.dtype()
+    C = attn.cache_len_for(cfg, max_len)
+
+    def stack(make_one, n):
+        one = make_one()
+        return jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (n,) + t.shape).copy(), one)
+
+    if cfg.family in ("ssm", "hybrid"):
+        layer_cache = stack(lambda: ssm_mod.make_ssm_cache(batch, cfg, dtype),
+                            cfg.n_layers)
+        cache = {"layers": layer_cache}
+        if cfg.shared_attn_every:
+            cache["shared"] = stack(
+                lambda: attn.make_kv_cache(
+                    batch, C, cfg.n_kv_heads, cfg.resolved_head_dim,
+                    cfg.resolved_head_dim, dtype),
+                n_shared_applications(cfg))
+        return cache
+    return {"layers": stack(
+        lambda: attn.make_attn_cache(batch, C, cfg, dtype), cfg.n_layers)}
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _embed_in(params, batch_in, cfg: ModelConfig):
+    dt = cfg.dtype()
+    if cfg.frontend == "tokens":
+        x = cm.embed_apply(cm.subtree(params, "embed"), batch_in["tokens"], dt)
+    else:
+        x = batch_in["embeds"].astype(dt)
+    return maybe_shard(x, ("batch", "seq", None))
+
+
+def _positions(batch_in, cfg: ModelConfig, B: int, L: int, offset=0):
+    if "positions" in batch_in:
+        return batch_in["positions"]
+    pos = jnp.arange(L, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (B, L))
+    if cfg.rope_kind == "mrope":
+        pos = jnp.broadcast_to(pos[..., None], (B, L, 3))
+    return pos
+
+
+def forward(params: Dict[str, jax.Array], batch_in: Dict[str, jax.Array],
+            cfg: ModelConfig, *, mode: str = "train",
+            cache: Optional[Dict] = None, step: Optional[jax.Array] = None,
+            max_len: Optional[int] = None
+            ) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (logits_fp32, new_cache_or_None, aux_loss)."""
+    assert mode in ("train", "prefill", "decode")
+    x = _embed_in(params, batch_in, cfg)
+    B, L, _ = x.shape
+    offset = step if mode == "decode" else 0
+    positions = _positions(batch_in, cfg, B, L, offset)
+    emb0 = x  # zamba2's embedding stream for the shared block
+
+    blocks = cm.subtree(params, "blocks")
+    in_caches = cache["layers"] if cache is not None else None
+
+    is_hybrid_or_ssm = cfg.family in ("ssm", "hybrid")
+
+    def make_body(kind):
+        def body(h, xs):
+            p_i, cache_i = xs
+            if kind == "mamba":
+                h, new_cache_i = blk.mamba_block_apply(
+                    p_i, h, cfg, cache=cache_i, mode=mode)
+                aux = jnp.zeros((), jnp.float32)
+            else:
+                h, new_cache_i, aux = blk.transformer_block_apply(
+                    p_i, h, cfg, positions=positions, cache=cache_i,
+                    step=step, mode=mode, max_len=max_len)
+                aux = jnp.asarray(aux, jnp.float32)
+            return h, (new_cache_i, aux)
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body, prevent_cse=False)
+        return body
+
+    if cfg.shared_attn_every:
+        # Hybrid (zamba2): SEGMENTED scans — one lax.scan per group of
+        # ``e`` mamba layers, shared attention applied unconditionally at
+        # each group boundary.  Perf iteration #5 (EXPERIMENTS §Perf): the
+        # previous lax.cond-inside-scan formulation serialized the branch
+        # into every layer (and made static FLOP accounting impossible);
+        # the model's structure is statically periodic, so encode it
+        # statically.
+        e = cfg.shared_attn_every
+        shared_p = cm.subtree(params, "shared")
+        shared_caches = cache.get("shared") if cache is not None else None
+        if mode == "prefill":
+            C = attn.cache_len_for(cfg, max_len or L)
+            n_app = n_shared_applications(cfg)
+            one = attn.make_kv_cache(B, C, cfg.n_kv_heads,
+                                     cfg.resolved_head_dim,
+                                     cfg.resolved_head_dim, cfg.dtype())
+            shared_caches = jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (n_app,) + t.shape
+                                           ).copy(), one)
+        body = make_body("mamba")
+
+        def shared_fn(p, h, emb0_, c_app):
+            return blk.shared_block_apply(
+                p, h, emb0_, cfg, positions=positions, cache=c_app,
+                step=step, mode=mode, max_len=max_len)
+
+        def segment_fn(h, seg_p, seg_c, c_app, full_group):
+            h, (seg_new, aux_seg) = jax.lax.scan(body, h, (seg_p, seg_c))
+            c2 = None
+            if full_group:
+                h, c2 = shared_fn(shared_p, h, emb0, c_app)
+            return h, seg_new, aux_seg, c2
+
+        if cfg.remat and mode == "train":
+            # Nested remat: only the 14 segment-boundary activations are
+            # saved; each segment (inner scan included) recomputes in
+            # backward.  (The per-layer checkpoint alone left every
+            # segment's inner carries live: 34 GiB vs 14 GiB.)
+            shared_fn = jax.checkpoint(shared_fn, prevent_cse=False)
+            segment_fn = jax.checkpoint(segment_fn, prevent_cse=False,
+                                        static_argnums=(4,))
+        seg_caches_out, auxs_list = [], []
+        app = 0
+        lo = 0
+        while lo < cfg.n_layers:
+            hi = min(lo + e, cfg.n_layers)
+            seg_p = {k: v[lo:hi] for k, v in blocks.items()}
+            seg_c = None
+            if in_caches is not None:
+                seg_c = jax.tree.map(lambda t: t[lo:hi], in_caches)
+            c_app = None
+            if shared_caches is not None and mode == "decode":
+                c_app = jax.tree.map(lambda t: t[app], shared_caches)
+            x, seg_new, aux_seg, c2 = segment_fn(x, seg_p, seg_c, c_app,
+                                                 hi - lo == e)
+            seg_caches_out.append(seg_new)
+            auxs_list.append(aux_seg)
+            if hi - lo == e:
+                if shared_caches is not None and c2 is not None:
+                    shared_caches = jax.tree.map(
+                        lambda t, u: t.at[app].set(u.astype(t.dtype)),
+                        shared_caches, c2)
+                app += 1
+            lo = hi
+        new_caches = None
+        if mode in ("prefill", "decode"):
+            new_caches = jax.tree.map(
+                lambda *ts: jnp.concatenate(ts, axis=0), *seg_caches_out)
+        auxs = jnp.concatenate(auxs_list)
+    else:
+        body = make_body("mamba" if is_hybrid_or_ssm else "transformer")
+        xs = (blocks, in_caches)
+        x, (new_caches, auxs) = jax.lax.scan(body, x, xs)
+        shared_caches = None
+
+    x = cm.rms_norm(x, params["norm_f/scale"], cfg.norm_eps)
+    logits = cm.unembed_apply(cm.subtree(params, "head"), x, cfg.dtype(),
+                              cfg.n_codebooks)
+    logits = maybe_shard(
+        logits, ("batch",) + (None,) * (logits.ndim - 2) + ("model_dim",))
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"layers": new_caches}
+        if cfg.shared_attn_every:
+            new_cache["shared"] = shared_caches
+    return logits.astype(jnp.float32), new_cache, auxs.sum()
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits: jax.Array, labels: jax.Array, cfg: ModelConfig,
+            mask: Optional[jax.Array] = None) -> jax.Array:
+    """Causal LM cross-entropy; padded vocab entries excluded.
+
+    logits: (B, L, V) or (B, L, Cb, V); labels: (B, L) or (B, L, Cb).
+    """
+    V = cfg.padded_vocab
+    if cfg.vocab_size < V:
+        pad_mask = jnp.arange(V) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e9, logits)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        while mask.ndim < nll.ndim:
+            mask = mask[..., None]
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# Serving entry points
+# ---------------------------------------------------------------------------
+
+def prefill(params, batch_in, cfg: ModelConfig, max_len: Optional[int] = None):
+    logits, cache, _ = forward(params, batch_in, cfg, mode="prefill",
+                               max_len=max_len)
+    return logits, cache
+
+
+def decode_step(params, token_in, cache, step, cfg: ModelConfig):
+    """One decode step.  token_in: {"tokens": (B, 1)} or {"embeds": ...}.
+    step: scalar int32 — the position of the new token."""
+    logits, cache, _ = forward(params, token_in, cfg, mode="decode",
+                               cache=cache, step=step)
+    return logits, cache

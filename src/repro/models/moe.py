@@ -1,0 +1,126 @@
+"""Mixture-of-Experts with capacity-buffer scatter dispatch.
+
+Dispatch is scatter/gather based (no GShard one-hot dispatch einsum): the
+one-hot formulation costs ``S·E·C·d`` FLOPs per group — E× the useful
+expert compute — which would wreck the MODEL_FLOPS/HLO_FLOPs ratio tracked
+in EXPERIMENTS.md.  Scatter dispatch costs O(tokens·d) data movement only.
+
+Groups are per-sequence (the batch dim), so position-in-expert ranking
+(a cumsum) never crosses the data-parallel sharding boundary — routing is
+group-local exactly like GShard/Switch, and no cross-device prefix sum is
+compiled.
+
+Sharding: the expert dim of the (E, d, f) weights maps to the ``model``
+mesh axis when divisible (expert parallelism — deepseek's 64 experts on a
+16-way axis); otherwise the rule engine falls back to sharding ``f``
+(tensor parallelism — mixtral's 8 experts).  See sharding/rules.py.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, round_up
+from repro.models import common as cm
+from repro.models.common import Defs, ParamDef
+from repro.sharding.rules import maybe_shard
+
+
+def moe_defs(cfg: ModelConfig, depth_scale: float = 1.0) -> Defs:
+    d = cfg.d_model
+    mo = cfg.moe
+    E, fe = mo.n_experts, mo.d_ff_expert
+    defs: Defs = {
+        "router": ParamDef((d, E), ("embed", None)),
+        "w_gate": ParamDef((E, d, fe), ("expert", "embed", "mlp")),
+        "w_up": ParamDef((E, d, fe), ("expert", "embed", "mlp")),
+        "w_down": ParamDef((E, fe, d), ("expert", "mlp", "embed"),
+                           scale=depth_scale),
+    }
+    if mo.n_shared_experts:
+        fs = mo.n_shared_experts * fe
+        defs.update(cm.prefix_defs("shared", cm.mlp_defs(d, fs, "silu",
+                                                         depth_scale)))
+    return defs
+
+
+def moe_apply(p: Dict[str, jax.Array], x: jax.Array,
+              cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_load_balance_loss)."""
+    B0, L0, d = x.shape
+    if L0 == 1 and B0 > 1:
+        # Decode: one token per sequence.  Per-sequence groups would give
+        # capacity ceil(k/E*cf) rounded up to 8 -> E*8 buffer rows per
+        # token (32x wasted expert FLOPs for mixtral).  Group across the
+        # batch instead: one group of B tokens.
+        y, aux = moe_apply(p, x.reshape(1, B0, d), cfg)
+        return y.reshape(B0, L0, d), aux
+    B, L = B0, L0
+    mo = cfg.moe
+    E, k = mo.n_experts, mo.top_k
+    dt = x.dtype
+
+    # --- routing (fp32) ---
+    logits = jnp.einsum("bld,de->ble", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                  # (B, L, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- load-balancing aux (Switch-style, fp32) ---
+    me = probs.mean(axis=(0, 1))                            # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(
+        1.0 / (B * L * k))
+    aux = E * jnp.sum(me * ce) * mo.aux_loss_coef
+
+    # --- capacity-buffer dispatch (per-group = per-sequence) ---
+    cap = round_up(int(math.ceil(k * L / E * mo.capacity_factor)), 8)
+    idx = top_i.reshape(B, L * k)                           # (B, T)
+    wgt = top_w.reshape(B, L * k).astype(jnp.float32)
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.int32)            # (B, T, E)
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=1), idx[..., None],
+                              axis=2)[..., 0] - 1           # (B, T)
+    keep = pos < cap
+    dest = jnp.where(keep, pos, cap)                        # cap = drop slot
+
+    x_rep = jnp.repeat(x, k, axis=1)                        # (B, T, d)
+
+    def scatter_g(xg, ig, dg):
+        buf = jnp.zeros((E, cap, d), xg.dtype)
+        return buf.at[ig, dg].set(xg, mode="drop")
+
+    xe = jax.vmap(scatter_g)(x_rep, idx, dest)              # (B, E, C, d)
+    # Perf iteration #4 (EXPERIMENTS §Perf): without explicit constraints
+    # GSPMD partitions the expert einsums along the contracting dim and
+    # all-reduces every activation (96% of mixtral train collectives).
+    # Pin the clean pattern: EP on the expert dim when divisible, else TP
+    # on d_ff; one psum at the down-projection only.
+    xe = maybe_shard(xe, ("batch", "model_dim", None, None))
+
+    # --- expert FFN (batched over E; expert dim EP- or f TP-sharded) ---
+    gate = jnp.einsum("becd,edf->becf", xe, p["w_gate"].astype(dt),
+                      preferred_element_type=jnp.float32)
+    up = jnp.einsum("becd,edf->becf", xe, p["w_up"].astype(dt),
+                    preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(gate) * up).astype(dt)
+    h = maybe_shard(h, ("batch", "model_dim", None, "model_dim"))
+    ye = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(dt),
+                    preferred_element_type=jnp.float32).astype(dt)
+    ye = maybe_shard(ye, ("batch", "model_dim", None, None))
+
+    # --- combine (gather back, weight, sum over k) ---
+    def gather_g(yg, ig, dg):
+        return yg[ig, jnp.minimum(dg, cap - 1)]             # (T, d)
+
+    y_tok = jax.vmap(gather_g)(ye, idx, dest)               # (B, T, d)
+    y_tok = maybe_shard(y_tok, ("batch", None, None))
+    y_tok = y_tok * (wgt * keep.astype(jnp.float32))[..., None].astype(dt)
+    y = y_tok.reshape(B, L, k, d).sum(axis=2)
+
+    if mo.n_shared_experts:
+        y = y + cm.mlp_apply(cm.subtree(p, "shared"), x, "silu")
+    return y, aux

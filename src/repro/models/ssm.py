@@ -1,0 +1,182 @@
+"""Mamba2 mixer: SSD (state-space duality) with chunked linear-time scan.
+
+The chunked SSD algorithm is itself a blocked, I/O-minimal schedule over
+the recurrence CDAG (the same red-blue pebbling argument the paper builds
+on): intra-chunk work is a dense batched matmul (MXU-friendly), and only
+an O(heads·head_dim·d_state) state crosses chunk boundaries — the analog
+of the paper's memory-tile boundary traffic.
+
+Decode is the exact recurrence: ``s <- exp(dt·A)·s + dt·x ⊗ B``,
+``y = C·s + D·x`` — O(1) per token, which is what makes ``long_500k``
+runnable for SSM/hybrid archs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.gemm import ca_matmul
+from repro.models import common as cm
+from repro.models.common import Defs, ParamDef
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    heads = s.n_heads(d)
+    return s, d, di, heads, s.d_state, s.n_groups
+
+
+def mamba2_defs(cfg: ModelConfig, depth_scale: float = 1.0) -> Defs:
+    s, d, di, h, n, g = _dims(cfg)
+    conv_ch = di + 2 * g * n
+    proj_out = 2 * di + 2 * g * n + h   # [z, x, B, C, dt]
+    return {
+        "in_proj": ParamDef((d, proj_out), ("embed", "ssm")),
+        "conv_w": ParamDef((s.conv_kernel, conv_ch), (None, "ssm"),
+                           init="conv"),
+        "conv_b": ParamDef((conv_ch,), ("ssm",), init="zeros"),
+        "a_log": ParamDef((h,), (None,), init="a_log"),
+        "d_skip": ParamDef((h,), (None,), init="ones"),
+        "dt_bias": ParamDef((h,), (None,), init="dt_bias"),
+        "norm": ParamDef((di,), ("ssm",), init="ones"),
+        "out_proj": ParamDef((di, d), ("ssm", "embed"), scale=depth_scale),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s, d, di, h, n, g = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xin = zxbcdt[..., di:2 * di]
+    b = zxbcdt[..., 2 * di:2 * di + g * n]
+    c = zxbcdt[..., 2 * di + g * n:2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n:]
+    return z, xin, b, c, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, L, C) with kernel (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):  # K == 4: unrolled shifts beat conv lowering on TPU
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssd_scan(xdt, da, b_h, c_h, chunk: int, s0=None):
+    """Chunked SSD. xdt: (B, L, H, P) [= x·dt], da: (B, L, H) [= dt·A],
+    b_h/c_h: (B, L, H, N). Returns (y: (B, L, H, P), s_final: (B, H, P, N)).
+    L is padded up to a chunk multiple internally (zero xdt contributes
+    nothing; zero da means decay 1, so the final state is unchanged).
+    """
+    B, L0, H, P = xdt.shape
+    pad = (-L0) % chunk
+    if pad:
+        zw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        xdt = jnp.pad(xdt, zw)
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        b_h = jnp.pad(b_h, zw)
+        c_h = jnp.pad(c_h, zw)
+    B, L, H, P = xdt.shape
+    N = b_h.shape[-1]
+    nc = L // chunk
+    r = lambda t: t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    xdt_c, da_c, b_c, c_c = r(xdt), r(da), r(b_h), r(c_h)
+
+    def step(s_in, xs):
+        xd, da_, bb, cc = xs                 # (B, Q, H, *)
+        cs = jnp.cumsum(da_, axis=1)         # (B, Q, H) log-decay prefix
+        # intra-chunk: y_t += sum_{s<=t} C_t·B_s exp(cs_t - cs_s) x_s
+        ldec = cs[:, :, None, :] - cs[:, None, :, :]        # (B, Q, K, H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        lmat = jnp.where(mask[None, :, :, None], jnp.exp(ldec), 0.0)
+        scores = jnp.einsum("bqhn,bkhn->bqkh", cc, bb)
+        y = jnp.einsum("bqkh,bkhp->bqhp", scores * lmat, xd)
+        # inter-chunk: y_t += C_t · s_in · exp(cs_t)
+        y = y + jnp.einsum("bqhn,bhpn->bqhp", cc, s_in) * \
+            jnp.exp(cs)[..., None]
+        # state: s_out = exp(cs_end)·s_in + sum_k exp(cs_end - cs_k) B_k⊗x_k
+        cs_end = cs[:, -1]                   # (B, H)
+        s_out = jnp.exp(cs_end)[..., None, None] * s_in + jnp.einsum(
+            "bkh,bkhp,bkhn->bhpn", jnp.exp(cs_end[:, None] - cs), xd, bb)
+        return s_out, y
+
+    if s0 is None:
+        s0 = jnp.zeros((B, H, P, N), jnp.float32)
+    s_fin, ys = jax.lax.scan(step, s0, (xdt_c, da_c, b_c, c_c))
+    y = ys.swapaxes(0, 1).reshape(B, L, H, P)[:, :L0]
+    return y, s_fin
+
+
+def make_ssm_cache(B: int, cfg: ModelConfig, dtype):
+    s, d, di, h, n, g = _dims(cfg)
+    conv_ch = di + 2 * g * n
+    return {
+        "conv": jnp.zeros((B, s.conv_kernel - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((B, h, s.head_dim, n), jnp.float32),
+    }
+
+
+def mamba2_apply(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+                 *, cache=None, mode: str = "train"):
+    """mode train/prefill: full sequence (L % chunk == 0); decode: L == 1."""
+    s, d, di, h, n, g = _dims(cfg)
+    B, L, _ = x.shape
+    dt_ = x.dtype
+    P = s.head_dim
+
+    zxbcdt = ca_matmul(x, p["in_proj"].astype(dt_))
+    z, xin, b, c, dtv = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and L == 1
+        hist = jnp.concatenate([cache["conv"].astype(dt_), conv_in], axis=1)
+        conv_out = _causal_conv(hist, p["conv_w"], p["conv_b"])[:, -1:]
+        new_conv = hist[:, 1:]
+    else:
+        conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+        new_conv = conv_in[:, -(s.conv_kernel - 1):] if L >= s.conv_kernel \
+            else jnp.pad(conv_in, ((0, 0), (s.conv_kernel - 1 - L, 0), (0, 0)))
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32))
+
+    xs = conv_out[..., :di].reshape(B, L, h, P)
+    bs = conv_out[..., di:di + g * n].reshape(B, L, g, n)
+    cs = conv_out[..., di + g * n:].reshape(B, L, g, n)
+    rep = h // g
+    b_h = jnp.repeat(bs, rep, axis=2)            # (B, L, H, N) fp32
+    c_h = jnp.repeat(cs, rep, axis=2)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # (H,) < 0
+    dt_act = jax.nn.softplus(dtv.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))  # (B,L,H)
+    da = dt_act * a[None, None, :]
+    xdt = xs * dt_act[..., None]
+
+    if mode == "decode":
+        s_in = cache["ssm"]
+        s_out = jnp.exp(da)[:, 0, :, None, None] * s_in \
+            + jnp.einsum("bhp,bhn->bhpn", xdt[:, 0], b_h[:, 0])
+        y = jnp.einsum("bhn,bhpn->bhp", c_h[:, 0], s_out)[:, None]
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": s_out}
+    else:
+        y, s_fin = _ssd_scan(xdt, da, b_h, c_h, cfg.ssm.chunk)
+        if mode == "prefill":
+            new_cache = {"conv": new_conv, "ssm": s_fin}
+
+    y = y + xs * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, L, di)
+    # gated RMSNorm (Mamba2): norm(y * silu(z))
+    y = cm.rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_),
+                    p["norm"], cfg.norm_eps)
+    out = ca_matmul(y, p["out_proj"].astype(dt_))
+    return out, new_cache

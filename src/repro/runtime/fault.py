@@ -1,0 +1,144 @@
+"""Fault tolerance runtime: heartbeats, straggler detection, supervised
+restart, elastic resize.
+
+This container has one host, so host failure/stragglers are *simulated*
+through the same interfaces a multi-host deployment would use: hosts
+report (step, timestamp) heartbeats; the monitor flags dead hosts by
+timeout and stragglers by step-time z-score; the supervisor restarts the
+training function from the last checkpoint on failure and re-shards it
+onto the surviving topology on resize (checkpoint.manager elastic
+restore).  All policies are deterministic and unit-tested.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class HostStatus:
+    host_id: int
+    last_step: int = -1
+    last_beat: Optional[float] = None   # None = never heard from
+    step_times: Optional[List[float]] = None
+
+    def __post_init__(self):
+        if self.step_times is None:
+            self.step_times = []
+
+
+class HeartbeatMonitor:
+    """Tracks per-host liveness + step-time distribution."""
+
+    def __init__(self, n_hosts: int, timeout_s: float = 60.0,
+                 straggler_z: float = 3.0, window: int = 32,
+                 clock: Callable[[], float] = time.monotonic):
+        self.hosts = {i: HostStatus(i) for i in range(n_hosts)}
+        self.timeout_s = timeout_s
+        self.straggler_z = straggler_z
+        self.window = window
+        self.clock = clock
+
+    def beat(self, host_id: int, step: int, now: Optional[float] = None):
+        now = self.clock() if now is None else now
+        h = self.hosts[host_id]
+        if h.last_step >= 0 and step > h.last_step:
+            h.step_times.append((now - h.last_beat)
+                                / max(step - h.last_step, 1))
+            h.step_times = h.step_times[-self.window:]
+        h.last_step = step
+        h.last_beat = now
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = self.clock() if now is None else now
+        return [i for i, h in self.hosts.items()
+                if h.last_beat is not None
+                and now - h.last_beat > self.timeout_s]
+
+    def stragglers(self) -> List[int]:
+        """Hosts whose mean step time is straggler_z sigmas above fleet."""
+        means = {i: sum(h.step_times) / len(h.step_times)
+                 for i, h in self.hosts.items() if len(h.step_times) >= 4}
+        if len(means) < 2:
+            return []
+        vals = list(means.values())
+        mu = sum(vals) / len(vals)
+        var = sum((v - mu) ** 2 for v in vals) / len(vals)
+        sd = math.sqrt(var)
+        if sd == 0:
+            return []
+        return [i for i, v in means.items()
+                if (v - mu) / sd > self.straggler_z]
+
+
+class FailureInjector:
+    """Deterministic failure schedule for tests/examples."""
+
+    def __init__(self, fail_at_steps: Dict[int, str]):
+        # step -> kind ("crash" | "resize:<new_n_hosts>")
+        self.fail_at_steps = dict(fail_at_steps)
+
+    def check(self, step: int) -> Optional[str]:
+        return self.fail_at_steps.pop(step, None)
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class ResizeEvent(RuntimeError):
+    def __init__(self, new_n_hosts: int):
+        super().__init__(f"resize to {new_n_hosts}")
+        self.new_n_hosts = new_n_hosts
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    restarts: int
+    resizes: int
+    final_step: int
+    events: List[Tuple[int, str]]
+
+
+class TrainSupervisor:
+    """Runs a step function under checkpoint/restart supervision.
+
+    run_fn(start_step, n_hosts) must yield (step) after each completed
+    step and raise SimulatedFailure/ResizeEvent when injected.  The
+    supervisor restores from the checkpoint manager and resumes —
+    restart-safety of the data pipeline (data.pipeline.batch_at) makes
+    the resumed run bitwise-deterministic.
+    """
+
+    def __init__(self, ckpt_manager, save_every: int = 10,
+                 max_restarts: int = 8):
+        self.ckpt = ckpt_manager
+        self.save_every = save_every
+        self.max_restarts = max_restarts
+
+    def run(self, make_runner, total_steps: int, n_hosts: int
+            ) -> SupervisorReport:
+        restarts = resizes = 0
+        events: List[Tuple[int, str]] = []
+        step = 0
+        while step < total_steps:
+            start = (self.ckpt.latest_step() or -1) + 1 \
+                if self.ckpt.latest_step() is not None else step
+            runner = make_runner(start, n_hosts)
+            try:
+                for step in runner:
+                    pass
+                step = total_steps
+            except SimulatedFailure:
+                restarts += 1
+                events.append((step, "crash->restart"))
+                if restarts > self.max_restarts:
+                    raise
+            except ResizeEvent as e:
+                resizes += 1
+                n_hosts = e.new_n_hosts
+                events.append((step, f"resize->{n_hosts}"))
+        return SupervisorReport(restarts, resizes, step, events)

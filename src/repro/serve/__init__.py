@@ -1,0 +1,5 @@
+"""Batched serving engine."""
+
+from repro.serve import engine
+
+__all__ = ["engine"]

@@ -1,0 +1,12 @@
+"""Sharding rule engine (logical axes -> mesh PartitionSpecs)."""
+
+from repro.sharding.rules import (
+    activation_sharding,
+    maybe_shard,
+    pspec_for_def,
+    pspecs_for_defs,
+    shardings_for_defs,
+)
+
+__all__ = ["activation_sharding", "maybe_shard", "pspec_for_def",
+           "pspecs_for_defs", "shardings_for_defs"]

@@ -1,0 +1,154 @@
+"""Logical-axis -> mesh-axis rule engine with divisibility checks.
+
+Parameters declare *logical* axes (embed, mlp, qkv, expert, vocab, ...);
+this module maps them to the physical mesh.  Non-divisible dims are left
+unsharded (and logged once) instead of failing — e.g. minicpm3's 40 heads
+on a 16-way model axis (DESIGN.md §Arch-applicability).
+
+FSDP: with ``fsdp=True`` the 'embed' logical axis (rows of most weight
+matrices) is additionally sharded over the data axis — parameters and
+optimizer state scale down with data parallelism (ZeRO-3 style); GSPMD
+inserts the per-layer all-gathers inside the scan.
+"""
+
+from __future__ import annotations
+
+import logging
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import Defs
+
+log = logging.getLogger(__name__)
+
+# Logical axis -> preferred mesh axis (tensor parallel dims).
+TP_RULES: Dict[str, str] = {
+    "vocab": "model",
+    "mlp": "model",
+    "qkv": "model",      # fused heads*head_dim projections
+    "expert": "model",   # EP when divisible, else w falls back to mlp dim
+    "ssm": "model",      # fused mamba projections / conv channels
+    "lora": None,        # MLA latent dims stay replicated (small)
+    "embed": None,
+    "embed2": None,
+    "layers": None,
+}
+
+
+def _axis_for(logical: Optional[str], size: int, mesh: Mesh,
+              used: set, fsdp: bool, fsdp_axes: Tuple[str, ...]):
+    if logical is None:
+        return None
+    pref = TP_RULES.get(logical)
+    if pref and pref in mesh.shape and pref not in used \
+            and size % mesh.shape[pref] == 0:
+        used.add(pref)
+        return pref
+    if fsdp and logical in ("embed",):
+        axes = tuple(a for a in fsdp_axes if a in mesh.shape and a not in used)
+        if axes:
+            total = 1
+            for a in axes:
+                total *= mesh.shape[a]
+            if size % total == 0:
+                used.update(axes)
+                return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def pspec_for_def(axes: Sequence[Optional[str]],
+                  shape: Sequence[int], mesh: Mesh, *, fsdp: bool = False,
+                  fsdp_axes: Tuple[str, ...] = ("data",)) -> P:
+    used: set = set()
+    # TP dims claim their axes first (priority over FSDP), scanning from
+    # the *last* dim (output features) backwards — matches Megatron
+    # column-parallel convention.
+    entries = [None] * len(shape)
+    order = sorted(range(len(shape)),
+                   key=lambda i: (axes[i] in (None, "embed", "embed2"), i))
+    for i in order:
+        entries[i] = _axis_for(axes[i], shape[i], mesh, used, fsdp,
+                               fsdp_axes)
+    return P(*entries)
+
+
+def pspecs_for_defs(defs: Defs, mesh: Mesh, *, fsdp: bool = False,
+                    fsdp_axes: Tuple[str, ...] = ("data",)) -> Dict[str, P]:
+    out = {}
+    for k, d in defs.items():
+        out[k] = pspec_for_def(d.axes, d.shape, mesh, fsdp=fsdp,
+                               fsdp_axes=fsdp_axes)
+    return out
+
+
+def shardings_for_defs(defs: Defs, mesh: Mesh, **kw) -> Dict[str, NamedSharding]:
+    return {k: NamedSharding(mesh, s)
+            for k, s in pspecs_for_defs(defs, mesh, **kw).items()}
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding policy (threaded through model code via maybe_shard)
+# ---------------------------------------------------------------------------
+
+_policy = threading.local()
+
+
+class activation_sharding:
+    """Context: route ``maybe_shard`` logical specs onto a mesh.
+
+    logical entries: "batch" -> the batch axes tuple (("pod","data") on the
+    multi-pod mesh), "seq" -> sequence-parallel axis, "model_dim" -> model.
+    """
+
+    def __init__(self, mesh: Mesh, batch_axes: Tuple[str, ...],
+                 seq_axis: Optional[str] = None):
+        self.table = {
+            "batch": tuple(a for a in batch_axes if a in mesh.shape),
+            "seq": seq_axis,
+            "model_dim": "model" if "model" in mesh.shape else None,
+        }
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.prev = getattr(_policy, "cur", None)
+        _policy.cur = self
+        return self
+
+    def __exit__(self, *exc):
+        _policy.cur = self.prev
+
+
+def maybe_shard(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain ``x`` to the active policy's mesh along logical axes.
+
+    Divisibility-checked per dim; a mesh axis is used at most once (first
+    dim wins) — e.g. an MoE buffer declared ("batch", "model_dim", None,
+    "model_dim") gets EP on the expert dim when divisible, else TP on the
+    feature dim (DESIGN.md §5)."""
+    pol = getattr(_policy, "cur", None)
+    if pol is None:
+        return x
+    entries = []
+    used: set = set()
+    for dim, name in enumerate(logical):
+        ax = pol.table.get(name) if name else None
+        if ax is None:
+            entries.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        if any(a in used for a in axes):
+            entries.append(None)
+            continue
+        total = 1
+        for a in axes:
+            total *= pol.mesh.shape[a]
+        if total and x.shape[dim] % total == 0 and x.shape[dim] >= total:
+            entries.append(ax)
+            used.update(axes)
+        else:
+            entries.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol.mesh, P(*entries)))

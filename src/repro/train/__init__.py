@@ -1,0 +1,5 @@
+"""Train step builder (microbatching, remat, mixed precision)."""
+
+from repro.train import step
+
+__all__ = ["step"]

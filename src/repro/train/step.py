@@ -1,0 +1,137 @@
+"""Train step builder: loss, microbatch gradient accumulation, mixed
+precision, remat — the training-time integration point of the framework.
+
+Compute/communication overlap: microbatch accumulation keeps gradients
+local (per-shard partial sums) across the scan and exposes a single
+deferred reduction at the end, which XLA's latency-hiding scheduler
+overlaps with the last microbatch's backward pass.  Cross-pod gradient
+compression (optim.adamw.allreduce_compressed) is available for the DCN
+axis via ``launch/train.py --compress``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt: adamw.AdamWState
+
+
+def init_state(cfg: ModelConfig, key: jax.Array) -> TrainState:
+    params = M.init_params(cfg, key)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt=adamw.init(params))
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, _, aux = M.forward(params, batch, cfg, mode="train")
+    loss = M.lm_loss(logits, batch["labels"], cfg, batch.get("mask"))
+    return loss + aux, {"loss": loss, "aux": aux}
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+    microbatches: int = 1,
+    reshard_params: Optional[Callable] = None,
+    reshard_grads: Optional[Callable] = None,
+) -> Callable[[TrainState, Dict[str, jax.Array]],
+              Tuple[TrainState, Dict[str, jax.Array]]]:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch leading dim must be divisible by ``microbatches``; gradients are
+    accumulated in fp32 across the microbatch scan.
+
+    Perf iteration #3 (EXPERIMENTS §Perf): fp32 master params are cast to
+    the compute dtype ONCE per step, *before* the microbatch scan, and
+    optionally re-sharded by ``reshard_params`` (dropping the FSDP axis —
+    a with_sharding_constraint to TP-only specs).  Without this, GSPMD
+    all-gathers fp32 weights at every use site: 2x the bytes (fp32 vs
+    bf16) x fwd+bwd x every microbatch — the dominant collective cost of
+    every train cell in the baseline dry-run.
+    """
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def cast_params(params):
+        dt = cfg.dtype()
+        return {
+            k: (v.astype(dt)
+                if v.ndim >= 2 and jnp.issubdtype(v.dtype, jnp.floating)
+                else v)
+            for k, v in params.items()
+        }
+
+    def train_step(state: TrainState, batch):
+        params_c = cast_params(state.params)
+        if reshard_params is not None:
+            params_c = reshard_params(params_c)
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(params_c, batch, cfg)
+            if reshard_grads is not None:
+                # ZeRO-2: reduce-scatter grads onto the FSDP layout right
+                # away (hoisted params are TP-only; without this the grad
+                # buffers replicate over the data axis).
+                grads = reshard_grads(grads)
+        else:
+            # Strided microbatch split: reshape (B,) -> (B//n, n) keeps the
+            # batch sharding on the MAJOR sub-dim (each device contributes
+            # rows to every microbatch locally — no resharding), then the
+            # swap puts the scan dim first.  A (n, B//n) reshape would
+            # scatter each device's rows across microbatches (all-to-all).
+            def split_mb(x):
+                y = x.reshape(x.shape[0] // microbatches, microbatches,
+                              *x.shape[1:])
+                return y.swapaxes(0, 1)
+
+            batch_mb = jax.tree.map(split_mb, batch)
+
+            def mb_step(carry, mb):
+                acc, mtr = carry
+                (_, m), g = grad_fn(params_c, mb, cfg)
+                if reshard_grads is not None:
+                    g = reshard_grads(g)   # ZeRO-2 (see above)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                mtr = jax.tree.map(lambda a, b: a + b, mtr, m)
+                return (acc, mtr), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params_c)
+            if reshard_grads is not None:
+                zeros = reshard_grads(zeros)
+            m0 = {"loss": jnp.zeros((), jnp.float32),
+                  "aux": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(
+                mb_step, (zeros, m0), batch_mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / microbatches, metrics)
+
+        new_params, new_opt, opt_metrics = adamw.update(
+            grads, state.opt, state.params, opt_cfg)
+        metrics = dict(metrics, **opt_metrics)
+        return TrainState(state.step + 1, new_params, new_opt), metrics
+
+    return train_step
+
+
+def cast_batch(batch, cfg: ModelConfig):
+    out = {}
+    for k, v in batch.items():
+        v = jnp.asarray(v)
+        if k == "embeds":
+            v = v.astype(cfg.dtype())
+        out[k] = v
+    return out

@@ -1,0 +1,18 @@
+"""Test session config: 1 CPU device (the dry-run forces 512 in its own
+subprocess), xla gemm mode by default."""
+
+import numpy as np
+import pytest
+
+from repro.core import set_gemm_mode
+
+
+@pytest.fixture(autouse=True)
+def _default_gemm_mode():
+    set_gemm_mode("xla")
+    yield
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

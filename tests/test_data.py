@@ -1,0 +1,48 @@
+"""Data pipeline: determinism, restart-safety, learnable structure."""
+
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.data.pipeline import DataConfig, SyntheticLM, batch_for_model
+
+
+def test_deterministic_and_restart_safe():
+    cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=4)
+    a = SyntheticLM(cfg).batch_at(7)
+    b = SyntheticLM(cfg).batch_at(7)   # fresh instance, same step
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticLM(cfg).batch_at(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_labels_are_next_tokens():
+    cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=2, noise=0.0)
+    b = SyntheticLM(cfg).batch_at(0)
+    # noiseless: labels follow the affine law
+    pred = (31 * b["tokens"] + 17) % 512
+    np.testing.assert_array_equal(pred, b["labels"])
+
+
+def test_host_sharding_disjoint():
+    full = DataConfig(vocab_size=512, seq_len=8, global_batch=8, n_hosts=1)
+    h0 = DataConfig(vocab_size=512, seq_len=8, global_batch=8, n_hosts=2,
+                    host_id=0)
+    h1 = DataConfig(vocab_size=512, seq_len=8, global_batch=8, n_hosts=2,
+                    host_id=1)
+    b0 = SyntheticLM(h0).batch_at(3)
+    b1 = SyntheticLM(h1).batch_at(3)
+    assert b0["tokens"].shape[0] == 4 and b1["tokens"].shape[0] == 4
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_frontend_adapters():
+    cfg = get_reduced("musicgen-large")
+    d = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2)
+    b = batch_for_model(cfg, d, 0)
+    assert b["embeds"].shape == (2, 16, cfg.d_model)
+    assert b["labels"].shape == (2, 16, cfg.n_codebooks)
+    cfg2 = get_reduced("qwen2-vl-72b")
+    d2 = DataConfig(vocab_size=cfg2.vocab_size, seq_len=16, global_batch=2)
+    b2 = batch_for_model(cfg2, d2, 0)
+    assert b2["embeds"].shape == (2, 16, cfg2.d_model)
+    assert b2["labels"].shape == (2, 16)

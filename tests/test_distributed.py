@@ -1,0 +1,47 @@
+"""Distributed CA-GEMM schedules (subprocess: forces 8 host devices)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def test_all_schedules_correct():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core._dist_check", "8"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    lines = [l for l in out.stdout.splitlines() if l.startswith(("OK", "FAIL"))]
+    assert len(lines) >= 7
+    assert all(l.startswith("OK") for l in lines), out.stdout
+
+
+def test_cost_model_properties():
+    """Eq. 6-derived distributed cost model sanity (no devices needed)."""
+    from repro.core import choose_schedule, estimate_cost
+
+    # ring and allgather move the same bytes; ring overlaps
+    r = estimate_cost("ring", 16384, 16384, 16384, 2, 16, 16)
+    g = estimate_cost("allgather", 16384, 16384, 16384, 2, 16, 16)
+    assert abs(r.comm_bytes - g.comm_bytes) < 1e-6
+    assert r.time_s <= g.time_s
+
+    # 2.5D reduces intra-pod traffic with pods
+    c1 = estimate_cost("summa25d", 16384, 16384, 16384, 2, 16, 16, pods=2)
+    assert c1.comm_bytes < 2 * g.comm_bytes
+
+    # auto never loses to the explicit candidates
+    best = choose_schedule(16384, 16384, 16384, 2, 16, 16, pods=2)
+    for s in ("allgather", "ring", "summa25d"):
+        assert best.time_s <= estimate_cost(
+            s, 16384, 16384, 16384, 2, 16, 16, pods=2).time_s + 1e-12
+
+    # the model is shape-aware: different (dp, tp) splits move different
+    # bytes at the same chip count
+    small_tp = estimate_cost("ring", 8192, 8192, 8192, 2, dp=16, tp=2)
+    big_tp = estimate_cost("ring", 8192, 8192, 8192, 2, dp=2, tp=16)
+    assert small_tp.comm_bytes != big_tp.comm_bytes

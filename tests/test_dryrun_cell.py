@@ -1,0 +1,33 @@
+"""One real dry-run cell end-to-end in a subprocess (512 host devices).
+
+The full 40-cell x 2-mesh sweep runs via ``python -m repro.launch.dryrun
+--all [--multi-pod]`` (results in experiments/dryrun); this test pins the
+machinery with the cheapest cell so CI catches regressions.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.parametrize("flags", [[], ["--multi-pod"]],
+                         ids=["16x16", "2x16x16"])
+def test_one_cell_compiles(tmp_path, flags):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "stablelm-1.6b", "--shape", "decode_32k",
+         "--out", str(tmp_path)] + flags,
+        capture_output=True, text=True, env=env, timeout=580)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    arts = [f for f in os.listdir(tmp_path) if f.endswith(".json")]
+    assert len(arts) == 1
+    art = json.load(open(os.path.join(tmp_path, arts[0])))
+    assert art["hlo"]["flops_per_device"] > 0
+    assert art["memory"]["temp_bytes"] > 0
+    assert art["chips"] == (512 if flags else 256)

@@ -1,0 +1,133 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ca_matmul, gemm_mode
+from repro.kernels import (ca_mmm_k_outer, ca_mmm_kernel, ca_mmm_padded,
+                           distance_product, ref)
+
+SHAPES = [(128, 128, 128), (256, 128, 384), (128, 256, 128), (384, 384, 256)]
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.int8]
+
+
+def _rand(shape, dtype, seed):
+    r = np.random.RandomState(seed)
+    if jnp.dtype(dtype) == jnp.int8:
+        return jnp.asarray(r.randint(-4, 5, shape), jnp.int8)
+    return jnp.asarray(r.randn(*shape), dtype)
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=str)
+def test_kernel_vs_oracle(m, n, k, dtype):
+    a = _rand((m, k), dtype, 0)
+    b = _rand((k, n), dtype, 1)
+    got = ca_mmm_kernel(a, b, bm=128, bn=128, bk=128, interpret=True)
+    want = ref.ref_matmul(a, b)
+    tol = 2e-2 if jnp.dtype(dtype) == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int8], ids=str)
+def test_k_outer_variant(dtype):
+    a = _rand((256, 256), dtype, 2)
+    b = _rand((256, 128), dtype, 3)
+    got = ca_mmm_k_outer(a, b, bm=128, bn=128, bk=128, interpret=True)
+    want = ref.ref_matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(m=st.integers(1, 300), n=st.integers(1, 300), k=st.integers(1, 300))
+def test_padded_any_shape(m, n, k):
+    a = _rand((m, k), jnp.float32, 4)
+    b = _rand((k, n), jnp.float32, 5)
+    got = ca_mmm_padded(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a) @ np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_distance_product_semiring():
+    a = _rand((65, 33), jnp.float32, 6)
+    b = _rand((33, 47), jnp.float32, 7)
+    got = distance_product(a, b, interpret=True)
+    want = ref.ref_distance_product(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_trainable_vjp():
+    a = _rand((96, 64), jnp.float32, 8)
+    b = _rand((64, 80), jnp.float32, 9)
+    with gemm_mode("interpret"):
+        f = lambda a, b: (ca_matmul(a, b) ** 2).sum()
+        ga, gb = jax.grad(f, argnums=(0, 1))(a, b)
+    c = np.asarray(a) @ np.asarray(b)
+    np.testing.assert_allclose(np.asarray(ga), 2 * c @ np.asarray(b).T,
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(a).T @ (2 * c),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_xla_and_interpret_paths_agree():
+    a = _rand((130, 70), jnp.float32, 10)
+    b = _rand((70, 90), jnp.float32, 11)
+    with gemm_mode("xla"):
+        y1 = ca_matmul(a, b)
+    with gemm_mode("interpret"):
+        y2 = ca_matmul(a, b)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pallas flash attention (beyond-paper kernel) vs oracle
+# ---------------------------------------------------------------------------
+
+import jax as _jax
+import jax.numpy as _jnp
+
+from repro.kernels.flash_attn import flash_attention_tpu
+
+
+@pytest.mark.parametrize("window", [None, 17], ids=["causal", "sliding"])
+@pytest.mark.parametrize("gqa", [1, 4], ids=["mha", "gqa4"])
+def test_flash_attention_kernel_vs_oracle(window, gqa):
+    B, L, Hkv, D = 2, 100, 2, 32
+    H = Hkv * gqa
+    key = _jax.random.PRNGKey(0)
+    q = _jax.random.normal(key, (B, L, H, D))
+    k = _jax.random.normal(_jax.random.PRNGKey(1), (B, L, Hkv, D))
+    v = _jax.random.normal(_jax.random.PRNGKey(2), (B, L, Hkv, D))
+    pos = _jnp.broadcast_to(_jnp.arange(L, dtype=_jnp.int32)[None], (B, L))
+    got = flash_attention_tpu(q, k, v, q_positions=pos, kv_positions=pos,
+                              window=window, q_block=32, kv_block=32,
+                              interpret=True)
+    want = _jnp.stack([ref.ref_flash_attention(q[i], k[i], v[i], causal=True,
+                                               window=window)
+                       for i in range(B)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_kernel_block_invariance():
+    B, L, H, D = 1, 64, 4, 16
+    key = _jax.random.PRNGKey(3)
+    q = _jax.random.normal(key, (B, L, H, D))
+    k = _jax.random.normal(_jax.random.PRNGKey(4), (B, L, H, D))
+    v = _jax.random.normal(_jax.random.PRNGKey(5), (B, L, H, D))
+    pos = _jnp.broadcast_to(_jnp.arange(L, dtype=_jnp.int32)[None], (B, L))
+    outs = [flash_attention_tpu(q, k, v, q_positions=pos, kv_positions=pos,
+                                q_block=qb, kv_block=kb, interpret=True)
+            for qb, kb in ((16, 16), (32, 64), (64, 64))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,186 @@
+"""Per-arch smoke tests (reduced configs) + component oracles."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced, list_archs
+from repro.kernels import ref as kref
+from repro.models import attention as A
+from repro.models import common as cm
+from repro.models import model as M
+from repro.models import ssm as ssm_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B, L, seed=0):
+    k = jax.random.PRNGKey(seed)
+    if cfg.frontend == "tokens":
+        toks = jax.random.randint(k, (B, L), 0, cfg.vocab_size)
+        return {"tokens": toks}, lambda t: {"tokens": toks[:, t:t + 1]}, toks
+    emb = jax.random.normal(k, (B, L, cfg.d_model), jnp.float32)
+    return {"embeds": emb}, lambda t: {"embeds": emb[:, t:t + 1]}, None
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_smoke(arch):
+    """One forward/train step on CPU: output shapes + no NaNs."""
+    cfg = get_reduced(arch)
+    params = M.init_params(cfg, KEY)
+    batch, _, _ = _batch(cfg, 2, 64)
+    logits, cache, aux = M.forward(params, batch, cfg, mode="train")
+    expect = (2, 64, cfg.padded_vocab) if cfg.n_codebooks == 1 \
+        else (2, 64, cfg.n_codebooks, cfg.padded_vocab)
+    assert logits.shape == expect
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert cache is None
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_grad_step(arch):
+    """Loss + grads are finite for every arch family."""
+    cfg = get_reduced(arch)
+    params = M.init_params(cfg, KEY)
+    batch, _, toks = _batch(cfg, 2, 32)
+    if cfg.n_codebooks > 1:
+        batch["labels"] = jax.random.randint(
+            KEY, (2, 32, cfg.n_codebooks), 0, cfg.vocab_size)
+    else:
+        batch["labels"] = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+
+    def loss(p):
+        logits, _, aux = M.forward(p, batch, cfg, mode="train")
+        return M.lm_loss(logits, batch["labels"], cfg) + aux
+
+    l, g = jax.value_and_grad(loss)(params)
+    assert bool(jnp.isfinite(l))
+    gn = sum(float(jnp.sum(jnp.abs(v))) for v in g.values())
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_decode_matches_forward(arch):
+    """Teacher-forced decode == full forward (MoE: dropless capacity)."""
+    cfg = get_reduced(arch)
+    if cfg.moe is not None and cfg.moe.n_experts:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=50.0))
+    params = M.init_params(cfg, KEY)
+    B, Lp, T = 2, 32, 4
+    full, step_in, _ = _batch(cfg, B, Lp + T)
+    pre = {k: v[:, :Lp] for k, v in full.items()}
+    ref_logits, _, _ = M.forward(params, full, cfg, mode="train")
+    lg, cache = M.prefill(params, pre, cfg, max_len=Lp + T)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(ref_logits[:, :Lp]),
+                               rtol=2e-4, atol=2e-4)
+    for t in range(Lp, Lp + T):
+        lgt, cache = M.decode_step(params, step_in(t), cache,
+                                   jnp.int32(t), cfg)
+        np.testing.assert_allclose(
+            np.asarray(lgt[:, 0]), np.asarray(ref_logits[:, t]),
+            rtol=1e-3, atol=1e-3)
+
+
+def test_flash_attention_vs_oracle():
+    B, L, H, Hkv, D = 2, 37, 8, 2, 16
+    q = jax.random.normal(KEY, (B, L, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, L, Hkv, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, L, Hkv, D))
+    pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+    for window in (None, 9):
+        got = A.flash_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                                q_chunk=8, kv_chunk=8, window=window)
+        want = jnp.stack([kref.ref_flash_attention(q[i], k[i], v[i],
+                                                   causal=True, window=window)
+                          for i in range(B)])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_flash_chunk_sizes_equivalent():
+    """The I/O tiling must not change the math (paper: schedule, not
+    semantics)."""
+    B, L, H, D = 1, 64, 4, 16
+    q = jax.random.normal(KEY, (B, L, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, L, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, L, H, D))
+    pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+    outs = [A.flash_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                              q_chunk=qc, kv_chunk=kc)
+            for qc, kc in ((8, 8), (16, 32), (64, 64), (13, 7))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_ssd_matches_naive_recurrence():
+    """Chunked SSD == exact sequential recurrence."""
+    B, L, H, P, N = 2, 48, 3, 8, 16
+    r = np.random.RandomState(0)
+    xdt = jnp.asarray(r.randn(B, L, H, P), jnp.float32) * 0.5
+    da = -jnp.abs(jnp.asarray(r.rand(B, L, H), jnp.float32)) * 0.3
+    b_h = jnp.asarray(r.randn(B, L, H, N), jnp.float32) * 0.3
+    c_h = jnp.asarray(r.randn(B, L, H, N), jnp.float32) * 0.3
+    y_chunk, s_chunk = ssm_mod._ssd_scan(xdt, da, b_h, c_h, chunk=16)
+
+    s = np.zeros((B, H, P, N), np.float32)
+    ys = []
+    for t in range(L):
+        s = np.exp(np.asarray(da[:, t]))[:, :, None, None] * s + \
+            np.einsum("bhp,bhn->bhpn", np.asarray(xdt[:, t]),
+                      np.asarray(b_h[:, t]))
+        ys.append(np.einsum("bhn,bhpn->bhp", np.asarray(c_h[:, t]), s))
+    y_ref = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), y_ref, rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_chunk), s, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunk_padding():
+    """L not divisible by chunk is padded without changing results."""
+    B, L, H, P, N = 1, 19, 2, 4, 8
+    r = np.random.RandomState(1)
+    args = [jnp.asarray(r.randn(B, L, H, P), jnp.float32) * 0.3,
+            -jnp.abs(jnp.asarray(r.rand(B, L, H), jnp.float32)) * 0.3,
+            jnp.asarray(r.randn(B, L, H, N), jnp.float32) * 0.3,
+            jnp.asarray(r.randn(B, L, H, N), jnp.float32) * 0.3]
+    y1, s1 = ssm_mod._ssd_scan(*args, chunk=8)
+    y2, s2 = ssm_mod._ssd_scan(*args, chunk=19)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_mrope_sections_differ_from_rope():
+    """M-RoPE with distinct position streams != plain RoPE."""
+    B, L, H, D = 1, 8, 2, 16
+    x = jax.random.normal(KEY, (B, L, H, D))
+    pos1 = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+    pos3 = jnp.stack([pos1, pos1 * 2, pos1 * 3], axis=-1)
+    r1 = cm.apply_rope(x, pos1)
+    r3 = cm.apply_rope(x, pos3, mrope_sections=(2, 3, 3))
+    assert not np.allclose(np.asarray(r1), np.asarray(r3))
+    # identical streams degenerate to plain rope
+    pos_same = jnp.stack([pos1, pos1, pos1], axis=-1)
+    r_same = cm.apply_rope(x, pos_same, mrope_sections=(2, 3, 3))
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r_same),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_vocab_padding_masked_in_loss():
+    cfg = get_reduced("mamba2-370m")
+    assert cfg.padded_vocab >= cfg.vocab_size
+    B, L = 2, 8
+    logits = jnp.zeros((B, L, cfg.padded_vocab))
+    # huge logit on a padded entry must not change the loss
+    logits2 = logits.at[..., cfg.padded_vocab - 1].set(100.0)
+    labels = jnp.zeros((B, L), jnp.int32)
+    l1 = M.lm_loss(logits, labels, cfg)
+    l2 = M.lm_loss(logits2, labels, cfg)
+    if cfg.padded_vocab > cfg.vocab_size:
+        np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)

@@ -1,0 +1,74 @@
+"""Fault tolerance: heartbeat detection + supervised restart/resize."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.fault import (FailureInjector, HeartbeatMonitor,
+                                 ResizeEvent, SimulatedFailure,
+                                 TrainSupervisor)
+
+
+def test_dead_host_detection():
+    mon = HeartbeatMonitor(4, timeout_s=10.0, clock=lambda: 0.0)
+    for h in range(4):
+        mon.beat(h, step=0, now=0.0)
+    for h in range(3):
+        mon.beat(h, step=1, now=15.0)   # host 3 never beats again
+    assert mon.dead_hosts(now=20.0) == [3]
+    # a host that beat at t=0 and timeout 10 is dead at t=11 too
+    assert mon.dead_hosts(now=11.0) == [3]
+    # nobody dead right after the fleet beats
+    assert mon.dead_hosts(now=15.5) == [3]
+
+
+def test_straggler_detection():
+    mon = HeartbeatMonitor(8, straggler_z=2.0)
+    t = [0.0] * 8
+    for step in range(1, 8):
+        for h in range(8):
+            dt = 1.0 if h != 5 else 3.0   # host 5 is 3x slower
+            t[h] += dt
+            mon.beat(h, step=step, now=t[h])
+    assert mon.stragglers() == [5]
+
+
+def test_supervisor_restart_and_resize(tmp_path):
+    """Injected crash + resize; training state resumes from checkpoint."""
+    ckpt = CheckpointManager(str(tmp_path))
+    inj = FailureInjector({5: "crash", 12: "resize:2"})
+    log = []
+
+    def make_runner(start_step, n_hosts):
+        def gen():
+            # "training": accumulate a deterministic counter
+            state = {"x": jnp.zeros(())}
+            if ckpt.latest_step() is not None:
+                state = ckpt.restore(state)
+                start = ckpt.latest_step() + 1
+            else:
+                start = start_step
+            for step in range(start, 20):
+                state = {"x": state["x"] + 1}
+                log.append((step, n_hosts))
+                kind = inj.check(step)
+                if kind == "crash":
+                    raise SimulatedFailure()
+                if kind and kind.startswith("resize"):
+                    ckpt.save(step, state)
+                    raise ResizeEvent(int(kind.split(":")[1]))
+                if step % 4 == 0:
+                    ckpt.save(step, state)
+                yield step
+        return gen()
+
+    sup = TrainSupervisor(ckpt, save_every=4)
+    report = sup.run(make_runner, total_steps=20, n_hosts=4)
+    assert report.restarts == 1
+    assert report.resizes == 1
+    assert report.final_step == 20
+    # post-resize steps ran on 2 hosts
+    assert any(h == 2 for _, h in log)
+    # every step 0..19 was executed at least once
+    assert set(s for s, _ in log) == set(range(20))

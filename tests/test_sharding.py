@@ -1,0 +1,75 @@
+"""Sharding rule engine: divisibility fallbacks, EP/TP selection."""
+
+import os
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.common import ParamDef
+from repro.models.model import model_defs
+from repro.sharding.rules import pspec_for_def, pspecs_for_defs
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # abstract mesh: no devices needed for spec computation
+    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+
+
+def test_tp_assignment(mesh):
+    s = pspec_for_def(("embed", "mlp"), (2048, 5632), mesh)
+    assert s == P(None, "model")
+
+
+def test_fsdp_assignment(mesh):
+    s = pspec_for_def(("embed", "mlp"), (2048, 5632), mesh, fsdp=True)
+    assert s == P("data", "model")
+
+
+def test_nondivisible_dropped(mesh):
+    # minicpm3's 40 heads over 16 devices: dropped, not an error
+    s = pspec_for_def(("heads", None), (40, 64), mesh)
+    assert s == P(None, None)
+
+
+def test_expert_parallel_when_divisible(mesh):
+    s = pspec_for_def(("expert", "embed", "mlp"), (64, 2048, 1408), mesh)
+    assert s[0] == "model"          # EP
+    assert s[2] is None             # model axis already used
+
+
+def test_tp_fallback_when_experts_dont_divide(mesh):
+    s = pspec_for_def(("expert", "embed", "mlp"), (8, 4096, 14336), mesh)
+    assert s[0] is None
+    assert s[2] == "model"          # TP on d_ff
+
+
+def test_no_axis_reuse_all_archs(mesh):
+    from repro.configs import list_archs
+    for arch in list_archs():
+        defs = model_defs(get_config(arch))
+        specs = pspecs_for_defs(defs, mesh, fsdp=True)
+        for k, s in specs.items():
+            used = []
+            for e in s:
+                if e is None:
+                    continue
+                used += list(e) if isinstance(e, tuple) else [e]
+            assert len(used) == len(set(used)), (arch, k, s)
+
+
+def test_all_sharded_dims_divisible(mesh):
+    from repro.configs import list_archs
+    for arch in list_archs():
+        defs = model_defs(get_config(arch))
+        specs = pspecs_for_defs(defs, mesh, fsdp=True)
+        for k, d in defs.items():
+            for dim, e in zip(d.shape, specs[k]):
+                if e is None:
+                    continue
+                axes = e if isinstance(e, tuple) else (e,)
+                total = 1
+                for a in axes:
+                    total *= mesh.shape[a]
+                assert dim % total == 0, (arch, k, d.shape, specs[k])

@@ -1,0 +1,96 @@
+"""Input-spec and cache-sharding rules on the (abstract) production mesh."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
+from repro.launch import specs as S
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def mesh3():
+    return jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _check_divisible(sds, shardings, mesh):
+    flat_s, _ = jax.tree_util.tree_flatten(sds)
+    flat_h, _ = jax.tree_util.tree_flatten(shardings)
+    for leaf, sh in zip(flat_s, flat_h):
+        spec = sh.spec
+        for dim, entry in zip(leaf.shape, spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = 1
+            for a in axes:
+                total *= mesh.shape[a]
+            assert dim % total == 0, (leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_cache_specs_divisible_all_cells(arch, mesh, mesh3):
+    cfg = get_config(arch)
+    for shape_name in applicable_shapes(cfg):
+        shape = SHAPES[shape_name]
+        if shape.kind != "decode":
+            continue
+        for m in (mesh, mesh3):
+            sds, sh = S.cache_inputs(cfg, shape, m)
+            _check_divisible(sds, sh, m)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_input_specs(arch, mesh3):
+    cfg = get_config(arch)
+    sds, sh = S.train_inputs(cfg, SHAPES["train_4k"], mesh3)
+    assert "labels" in sds and "mask" in sds
+    key = "tokens" if cfg.frontend == "tokens" else "embeds"
+    assert key in sds
+    # global batch 256 shards over pod*data = 32
+    assert sh[key].spec[0] == ("pod", "data")
+    _check_divisible(sds, sh, mesh3)
+
+
+def test_long500k_batch1_replicated(mesh):
+    cfg = get_config("zamba2-7b")
+    sds, sh = S.decode_token_inputs(cfg, SHAPES["long_500k"], mesh)
+    key = "tokens"
+    assert sh[key].spec[0] is None  # batch=1 cannot shard
+
+
+def test_long500k_cache_seq_parallel(mesh):
+    """batch=1 -> the shared-attn cache seq dim shards over 'data' (SP)."""
+    cfg = get_config("zamba2-7b")
+    sds, sh = S.cache_inputs(cfg, SHAPES["long_500k"], mesh)
+    k_spec = sh["shared"]["k"].spec
+    assert "data" in jax.tree_util.tree_leaves(
+        [e for e in k_spec if e is not None])
+
+
+def test_qwen_decode_cache_sharding(mesh):
+    """kv=8 heads don't divide 16 -> head_dim (128) takes the model axis."""
+    cfg = get_config("qwen2-vl-72b")
+    sds, sh = S.cache_inputs(cfg, SHAPES["decode_32k"], mesh)
+    k_spec = sh["layers"]["k"].spec
+    assert k_spec[1] == ("data",) or k_spec[1] == "data"  # batch 128
+    assert k_spec[4] == "model"                            # head_dim 128
+    assert k_spec[3] is None                               # 8 kv heads
+
+
+def test_state_inputs_fsdp(mesh):
+    cfg = get_config("stablelm-1.6b")
+    sds, sh = S.state_inputs(cfg, mesh, fsdp=True)
+    # embed-dim rows of at least one big matrix shard over data
+    specs = [s.spec for s in sh.params.values()]
+    assert any("data" in [e for e in spec if isinstance(e, str)]
+               or any(isinstance(e, tuple) and "data" in e for e in spec)
+               for spec in specs)
+    # opt moments mirror param shardings
+    assert sh.opt.m.keys() == sh.params.keys()

@@ -1,0 +1,77 @@
+"""End-to-end system behaviour: train -> crash -> restore -> serve.
+
+The full story on one CPU: a reduced model trains on the deterministic
+pipeline, checkpoints, "crashes", restores from the last checkpoint, and
+the resumed run produces EXACTLY the state an uninterrupted run reaches
+(restart-safety); the trained weights then serve greedily.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_reduced
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import model as M
+from repro.optim import adamw
+from repro.serve.engine import Request, ServeEngine
+from repro.train import step as T
+
+
+def _setup():
+    cfg = get_reduced("stablelm-1.6b")
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=64, n_heads=4,
+                              n_kv_heads=4, d_ff=128, vocab_size=128,
+                              remat=False)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=24,
+                                  global_batch=4, noise=0.0))
+    opt = adamw.AdamWConfig(lr=2e-3, warmup_steps=2, total_steps=40)
+    step_fn = jax.jit(T.build_train_step(cfg, opt))
+    return cfg, data, step_fn
+
+
+def test_crash_restore_is_bitwise_identical(tmp_path):
+    cfg, data, step_fn = _setup()
+
+    # uninterrupted run: 10 steps
+    state = T.init_state(cfg, jax.random.PRNGKey(0))
+    for i in range(10):
+        state, _ = step_fn(state, jax.tree.map(jnp.asarray, data.batch_at(i)))
+    ref = state
+
+    # interrupted run: 6 steps, checkpoint, "crash", restore, 4 more
+    ckpt = CheckpointManager(str(tmp_path))
+    state = T.init_state(cfg, jax.random.PRNGKey(0))
+    for i in range(6):
+        state, _ = step_fn(state, jax.tree.map(jnp.asarray, data.batch_at(i)))
+    ckpt.save(5, state)
+    del state  # crash
+
+    like = T.init_state(cfg, jax.random.PRNGKey(0))
+    state = ckpt.restore(like)
+    assert int(state.step) == 6
+    for i in range(6, 10):
+        state, _ = step_fn(state, jax.tree.map(jnp.asarray, data.batch_at(i)))
+
+    for k in ref.params:
+        np.testing.assert_array_equal(np.asarray(ref.params[k]),
+                                      np.asarray(state.params[k]))
+
+
+def test_trained_model_serves():
+    cfg, data, step_fn = _setup()
+    state = T.init_state(cfg, jax.random.PRNGKey(0))
+    for i in range(30):
+        state, m = step_fn(state, jax.tree.map(jnp.asarray, data.batch_at(i)))
+    # the noiseless affine stream is learnable: greedy continuation should
+    # follow x -> (31 x + 17) % V at least sometimes after 30 steps; at
+    # minimum serving must be finite and deterministic.
+    eng = ServeEngine(state.params, cfg, batch_size=1, max_len=48)
+    prompt = np.asarray(data.batch_at(99)["tokens"][0, :16])
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=8))
+    out = eng.run()[0].generated
+    assert len(out) == 8
+    assert all(0 <= t < cfg.vocab_size for t in out)
