@@ -6,11 +6,23 @@ tile (x_tot, y_tot analog), arithmetic intensity (Op/Byte — the paper's
 headline column), modeled Q, and projected performance at the v5e
 roofline.  Wall-time is measured for the XLA path on this CPU host (the
 kernel itself is validated in interpret mode by tests/test_kernels.py).
+
+``--tuned`` additionally runs the empirical autotuner (repro.tuning)
+against the analytic plan on small shapes — in Pallas interpret mode on
+CPU, on the real kernel on TPU — and reports the tuned-vs-analytic
+speedup per shape.
+
+Every run writes a machine-readable ``BENCH_gemm.json`` (stable schema,
+see ``JSON_SCHEMA_VERSION``) with this run's records; the perf trajectory
+across PRs lives in the file's git history, not in-file accumulation.
 """
+
+import argparse
+import json
+import pathlib
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import (V5E, arithmetic_intensity_ops_per_byte, gemm_roofline,
                         io_volume_elements, solve_tile_config)
@@ -18,8 +30,27 @@ from benchmarks.common import emit, time_call
 
 N = 16384  # paper's benchmark size
 
+JSON_SCHEMA_VERSION = 1
+DEFAULT_JSON_PATH = "BENCH_gemm.json"
 
-def run():
+
+def _record(m, n, k, dtype, tile, source, median_s, model_s, **extra):
+    """One stable-schema row for BENCH_gemm.json."""
+    rec = {
+        "shape": [int(m), int(n), int(k)],
+        "dtype": jnp.dtype(dtype).name,
+        "config": {"bm": tile.bm, "bn": tile.bn, "bk": tile.bk,
+                   "order": tile.order},
+        "config_source": source,           # analytic | autotune | cache
+        "median_s": float(median_s) if median_s is not None else None,
+        "model_predicted_s": float(model_s),
+    }
+    rec.update(extra)
+    return rec
+
+
+def run(records=None):
+    """Analytic section (Table 2 analog); appends rows to ``records``."""
     for dt, paper_ref in ((jnp.bfloat16, "fp16:956"), (jnp.float32, "fp32:302"),
                           (jnp.int8, "uint8:2073")):
         dt = jnp.dtype(dt)
@@ -37,7 +68,101 @@ def run():
              f"tile={t.bm}x{t.bn}x{t.bk};AI={ai:.0f}Op/B(paper {paper_ref});"
              f"Q={q_gb:.1f}GB;proj={gops:.0f}GOp/s;bound={rl.bound};"
              f"vmem_util={t.utilization:.2f}")
+        if records is not None:
+            records.append(_record(
+                N, N, N, dt, t, "analytic", None, rl.time_s,
+                ai_ops_per_byte=ai, q_gb=q_gb, projected_gops=gops,
+                bound=rl.bound, vmem_utilization=t.utilization,
+                host_xla_1024_us=us))
+
+
+def run_tuned(sizes=(128, 256), dtypes=(jnp.float32,), iters=2,
+              max_candidates=4, records=None):
+    """Tuned-vs-analytic comparison (the ``--tuned`` mode).
+
+    Interpret-mode timings on CPU are only *relatively* meaningful — which
+    is exactly what a tuned/analytic ratio needs.
+    """
+    from repro.tuning import get_registry
+    from repro.tuning.autotune import time_tile
+
+    # Tune *through* the registry so winners land in the persistent cache
+    # (and a second bench run reports config_source=cache, not autotune).
+    registry = get_registry()
+    registry.autotune_enabled = True
+    for size in sizes:
+        m = n = k = size
+        for dt in dtypes:
+            dt = jnp.dtype(dt)
+            analytic = solve_tile_config(m, n, k, dtype_in=dt)
+            analytic_s = time_tile(m, n, k, analytic, dtype=dt,
+                                   warmup=1, iters=iters)
+            res = registry.resolve_full(m, n, k, dtype=dt, iters=iters,
+                                        max_candidates=max_candidates)
+            entry = registry.cache.get(res.key)
+            # Re-time the winner under identical conditions for a fair
+            # tuned/analytic ratio (cached measured_s may be stale).
+            tuned_s = time_tile(m, n, k, res.config, dtype=dt,
+                                warmup=1, iters=iters)
+            speedup = analytic_s / tuned_s
+            rl = gemm_roofline(m, n, k, res.config, dt)
+            emit(f"gemm_tuned_{dt.name}_{size}", tuned_s * 1e6,
+                 f"tuned={res.config.bm}x{res.config.bn}x{res.config.bk};"
+                 f"analytic={analytic.bm}x{analytic.bn}x{analytic.bk};"
+                 f"analytic_us={analytic_s * 1e6:.1f};"
+                 f"speedup={speedup:.2f}x;"
+                 f"tried={entry.n_tried if entry else 0};"
+                 f"registry_source={res.source}")
+            if records is not None:
+                records.append(_record(
+                    m, n, k, dt, res.config, res.source,
+                    tuned_s, rl.time_s,
+                    analytic_config={"bm": analytic.bm, "bn": analytic.bn,
+                                     "bk": analytic.bk,
+                                     "order": analytic.order},
+                    analytic_median_s=float(analytic_s),
+                    tuned_vs_analytic_speedup=float(speedup),
+                    candidates_tried=entry.n_tried if entry else 0))
+
+
+def write_json(records, path=DEFAULT_JSON_PATH):
+    payload = {
+        "schema": JSON_SCHEMA_VERSION,
+        "benchmark": "gemm",
+        "hardware_model": V5E.name,
+        "backend": jax.default_backend(),
+        "results": records,
+    }
+    p = pathlib.Path(path)
+    p.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    print(f"# wrote {len(records)} records to {p}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tuned", action="store_true",
+                    help="run the empirical autotuner vs the analytic plan")
+    ap.add_argument("--sizes", type=int, nargs="+", default=[128, 256],
+                    help="square GEMM sizes for --tuned timing")
+    ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--max-candidates", type=int, default=4)
+    ap.add_argument("--json", default=DEFAULT_JSON_PATH,
+                    help="output path for machine-readable results "
+                         "('' disables)")
+    args = ap.parse_args(argv)
+    if any(s <= 0 for s in args.sizes):
+        ap.error(f"--sizes must be positive, got {args.sizes}")
+    if args.iters <= 0 or args.max_candidates <= 0:
+        ap.error("--iters and --max-candidates must be positive")
+
+    records = []
+    run(records=records)
+    if args.tuned:
+        run_tuned(sizes=tuple(args.sizes), iters=args.iters,
+                  max_candidates=args.max_candidates, records=records)
+    if args.json:
+        write_json(records, args.json)
 
 
 if __name__ == "__main__":
-    run()
+    main()

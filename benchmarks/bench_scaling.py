@@ -29,8 +29,8 @@ import jax, jax.numpy as jnp
 from repro.core import dist_matmul
 from repro.launch import hlo_analysis as H
 
-mesh = jax.make_mesh((1, ndev), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((1, ndev), ("data", "model"))
 N = int(sys.argv[3])
 
 def f(a, b):

@@ -20,6 +20,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.core import distributed as dist  # noqa: E402
+from repro.launch.mesh import make_mesh_compat  # noqa: E402
 
 
 def main(ndev: int) -> int:
@@ -29,8 +30,7 @@ def main(ndev: int) -> int:
     m, k, n = 64, 128, 96
 
     # 2D mesh (data=2, model=ndev//2)
-    mesh = jax.make_mesh((2, ndev // 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((2, ndev // 2), ("data", "model"))
     a = jnp.asarray(rng.randn(m, k), jnp.float32)
     b = jnp.asarray(rng.randn(k, n), jnp.float32)
     want = np.asarray(a) @ np.asarray(b)
@@ -43,8 +43,7 @@ def main(ndev: int) -> int:
 
     # 3D mesh (pod=2, data=2, model=ndev//4) — 2.5D schedule
     if ndev >= 8:
-        mesh3 = jax.make_mesh((2, 2, ndev // 4), ("pod", "data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh3 = make_mesh_compat((2, 2, ndev // 4), ("pod", "data", "model"))
         for sched in ("ring", "summa25d", "allgather"):
             got = dist.dist_matmul(a, b, mesh3, schedule=sched,
                                    pod_axis="pod")

@@ -37,6 +37,25 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.hardware import TpuTarget, V5E
 
+# ---------------------------------------------------------------------------
+# jax version compat: shard_map moved from jax.experimental to jax.shard_map
+# (and check_rep was renamed check_vma); jax.lax.pvary only exists where the
+# VMA type system does.  Old jax has no VMA typing, so no-op pvary is exact.
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):
+    def _shard_map(f, mesh, in_specs, out_specs, check=True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def _shard_map(f, mesh, in_specs, out_specs, check=True):
+        return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+
+_pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
 
 # ---------------------------------------------------------------------------
 # Cost model (per-device Eq. 6 analog)
@@ -138,7 +157,7 @@ def _ring_body(a_blk, b_loc, *, axis: str, g: int, acc_dtype,
     if vary_axes:
         # The zero carry starts device-invariant; mark it varying over the
         # manual axes so the fori_loop carry types match (shard_map VMA).
-        acc0 = jax.lax.pvary(acc0, tuple(vary_axes))
+        acc0 = _pvary(acc0, tuple(vary_axes))
     _, acc = jax.lax.fori_loop(0, g, step, (a_blk, acc0))
     return acc
 
@@ -195,9 +214,8 @@ def dist_matmul(
         # b holds full k on every device (n-sharded only).  With a pod
         # axis the gathered result is value-replicated across pods but the
         # VMA system cannot prove it — disable the check for that case.
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs,
-                             check_vma=not pod_axis)(a, b)
+        return _shard_map(f, mesh, in_specs, out_specs,
+                          check=not pod_axis)(a, b)
 
     if schedule == "ring":
         vary = (dp_axis, tp_axis) + ((pod_axis,) if pod_axis else ())
@@ -213,8 +231,7 @@ def dist_matmul(
             # each pod's ring covers k/pods; b must be k-sharded over pod.
             in_specs = (P(dp_axis, (pod_axis, tp_axis)),
                         P(pod_axis, tp_axis))
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs)(a, b)
+        return _shard_map(f, mesh, in_specs, out_specs)(a, b)
 
     if schedule == "summa25d":
         assert pod_axis is not None, "2.5D needs a replication axis"
@@ -230,8 +247,7 @@ def dist_matmul(
             return c.astype(out_dtype)
 
         in_specs = (P(dp_axis, (pod_axis, tp_axis)), P(pod_axis, tp_axis))
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs)(a, b)
+        return _shard_map(f, mesh, in_specs, out_specs)(a, b)
 
     raise ValueError(f"unknown schedule {schedule!r}")
 

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hardware import TpuTarget, V5E
-from repro.core.io_model import TileConfig, solve_tile_config
+from repro.core.io_model import TileConfig
 from repro.kernels import ops as kops
 
 _state = threading.local()
@@ -53,15 +53,18 @@ class gemm_mode:
         set_gemm_mode(self.prev)
 
 
-# Plans are cached per (m, n, k, dtype) — solving is pure Python on ints.
-_plan_cache: dict = {}
-
-
 def plan_for(m: int, n: int, k: int, dtype, hw: TpuTarget = V5E) -> TileConfig:
-    key = (m, n, k, jnp.dtype(dtype).str, hw.name)
-    if key not in _plan_cache:
-        _plan_cache[key] = solve_tile_config(m, n, k, dtype_in=dtype, hw=hw)
-    return _plan_cache[key]
+    """Resolve the tile plan through the kernel-config registry.
+
+    Precedence is cache hit > autotune (if ``REPRO_AUTOTUNE=1``) > the
+    analytic :func:`solve_tile_config` — so by default this is exactly the
+    paper's model, and a tuned deployment transparently serves measured
+    configs.  The registry memoizes per key, replacing the old local
+    ``_plan_cache``.
+    """
+    from repro.tuning import get_registry  # lazy: tuning imports kernels
+
+    return get_registry().resolve(m, n, k, dtype=dtype, hw=hw)
 
 
 def ca_matmul(

@@ -249,15 +249,21 @@ def solve_tile_config(
             if best is not None and inten < 0.5 * best.intensity:
                 break
     if best is None:
-        # Degenerate tiny problem: single quantum tile.
-        bm, bn, bk = qm, qn, min(qk, round_up_to(k, qk))
+        # Degenerate tiny problem: single quantum tile.  bk still honors the
+        # k quantum and the solver's bk cap (the old ``min(qk, round_up)``
+        # always collapsed to qk — dead rounding).
+        bm, bn, bk = qm, qn, bk_cap
+        vb = tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes)
         best = TileConfig(
             bm=bm, bn=bn, bk=bk,
-            vmem_bytes=tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes),
+            vmem_bytes=vb,
             intensity=computational_intensity(bm, bn),
             q_elements=io_volume_elements(m, n, k, min(bm, m), min(bn, n)),
-            q_lower_bound=io_lower_bound_elements(m, n, k, budget // 4),
-            utilization=0.0,
+            # Same S divisor as the main path: words of the wider of input
+            # and accumulator dtypes (not a hardcoded // 4).
+            q_lower_bound=io_lower_bound_elements(
+                m, n, k, budget // max(itemsize_in, acc_bytes)),
+            utilization=vb / hw.vmem_bytes,
         )
     return best
 

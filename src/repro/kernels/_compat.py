@@ -1,0 +1,11 @@
+"""Pallas API compat shared by every kernel module.
+
+jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` around
+0.5; resolve it once here so kernel modules (and any future ones) don't
+each carry a copy of the skew.  Delete alongside 0.4.x support.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))

@@ -34,11 +34,32 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _acc_dtype(dtype) -> jnp.dtype:
     if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
         return jnp.dtype(jnp.int32)
     return jnp.dtype(jnp.float32)
+
+
+def _default_tiles(m: int, n: int, k: int, dtype, semiring: str,
+                   bm: Optional[int], bn: Optional[int],
+                   bk: Optional[int]):
+    """None-means-solver: unspecified tile dims come from the registry.
+
+    Callers can no longer silently bypass the I/O model with a stale
+    literal default — an explicit (bm, bn, bk) is an intentional override,
+    anything else is planned (cache > autotune > analytic precedence).
+    """
+    if bm is not None and bn is not None and bk is not None:
+        return bm, bn, bk
+    from repro.tuning import get_registry  # lazy: tuning times this module
+
+    tile = get_registry().resolve(m, n, k, dtype=dtype, semiring=semiring)
+    return (bm if bm is not None else min(tile.bm, m),
+            bn if bn is not None else min(tile.bn, n),
+            bk if bk is not None else min(tile.bk, k))
 
 
 def _mmm_kernel(a_ref, b_ref, c_ref, acc_ref, *, semiring: str):
@@ -80,20 +101,23 @@ def ca_mmm(
     a: jax.Array,
     b: jax.Array,
     *,
-    bm: int = 512,
-    bn: int = 512,
-    bk: int = 512,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
     out_dtype=None,
     semiring: str = "plus_times",
     interpret: bool = False,
 ) -> jax.Array:
     """C = A @ B with the paper's I/O-minimal schedule.
 
-    Requires m % bm == n % bn == k % bk == 0 (``ops.ca_mmm_padded`` pads).
+    Tile dims default to the kernel-config registry's plan (None-means-
+    solver); pass explicit values only to override the model.  Requires
+    m % bm == n % bn == k % bk == 0 (``ops.ca_mmm_padded`` pads).
     """
     m, kdim = a.shape
     k2, n = b.shape
     assert kdim == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    bm, bn, bk = _default_tiles(m, n, kdim, a.dtype, semiring, bm, bn, bk)
     assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (
         f"shapes {(m, n, kdim)} not divisible by tiles {(bm, bn, bk)}")
     acc_t = _acc_dtype(a.dtype) if semiring == "plus_times" else jnp.float32
@@ -113,7 +137,7 @@ def ca_mmm(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), acc_t)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -124,9 +148,9 @@ def ca_mmm_k_outer(
     a: jax.Array,
     b: jax.Array,
     *,
-    bm: int = 512,
-    bn: int = 512,
-    bk: int = 512,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
     out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
@@ -136,9 +160,11 @@ def ca_mmm_k_outer(
     and re-writes the C tile through slow memory, inflating Q from
     ``mn (1 + k(1/x+1/y))`` to ``mnk/bk · 2 + ...``.  Used by
     ``benchmarks/bench_intensity.py`` to demonstrate the model's prediction.
+    Tile dims default to the registry plan, as in :func:`ca_mmm`.
     """
     m, kdim = a.shape
     _, n = b.shape
+    bm, bn, bk = _default_tiles(m, n, kdim, a.dtype, "plus_times", bm, bn, bk)
     assert m % bm == 0 and n % bn == 0 and kdim % bk == 0
     acc_t = _acc_dtype(a.dtype)
     out_dtype = out_dtype or (acc_t if acc_t == jnp.int32 else a.dtype)
@@ -164,7 +190,7 @@ def ca_mmm_k_outer(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda kk, i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), acc_t),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "parallel", "parallel"),
         ),
         interpret=interpret,

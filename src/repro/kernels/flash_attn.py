@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 NEG = -1e30
 
 
@@ -150,7 +152,7 @@ def flash_attention_tpu(
             pltpu.VMEM((G * qc,), jnp.float32),
             pltpu.VMEM((G * qc,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qpos_r, kpos_r, qr, kr, vr)

@@ -13,8 +13,16 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.io_model import TileConfig, round_up_to, solve_tile_config
+from repro.core.io_model import TileConfig, round_up_to
 import repro.kernels.ca_mmm as kern
+
+
+def _resolve_tile(m: int, n: int, k: int, dtype,
+                  semiring: str = "plus_times") -> TileConfig:
+    """Default tile plan: the kernel-config registry (cache > tune > model)."""
+    from repro.tuning import get_registry  # lazy: tuning times this module
+
+    return get_registry().resolve(m, n, k, dtype=dtype, semiring=semiring)
 
 
 def _pad2(x: jax.Array, r0: int, r1: int) -> jax.Array:
@@ -38,7 +46,7 @@ def ca_mmm_padded(
     m, k = a.shape
     _, n = b.shape
     if tile is None:
-        tile = solve_tile_config(m, n, k, dtype_in=a.dtype)
+        tile = _resolve_tile(m, n, k, a.dtype, semiring)
     bm = min(tile.bm, round_up_to(m, 8))
     bn = min(tile.bn, round_up_to(n, 128))
     bk = min(tile.bk, round_up_to(k, 128))

@@ -159,6 +159,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     hlo_cost = H.analyze_hlo_text(compiled.as_text())
     art = {

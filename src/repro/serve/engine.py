@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.tuning import warmup_model
 
 
 @dataclasses.dataclass
@@ -34,12 +35,20 @@ class ServeEngine:
     """Single-host batched engine (the dry-run lowers its jitted steps)."""
 
     def __init__(self, params, cfg: ModelConfig, *, batch_size: int,
-                 max_len: int, seed: int = 0):
+                 max_len: int, seed: int = 0, warmup_gemms: bool = True):
         self.params = params
         self.cfg = cfg
         self.B = batch_size
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
+        # Serve-time warmup: resolve every hot-path GEMM tile through the
+        # kernel-config registry (cache > autotune > analytic) before the
+        # first request, so no request pays tuning/solver latency.  The
+        # jitted prefill/decode steps below fetch the same configs via
+        # ``core.gemm.plan_for`` at trace time.
+        self.gemm_plan_sources = (
+            warmup_model(cfg, [batch_size, batch_size * max_len])
+            if warmup_gemms else {})
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, b, cfg, max_len=max_len))
         self._decode = jax.jit(

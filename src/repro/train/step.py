@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.optim import adamw
+from repro.tuning import warmup_model
 
 
 class TrainState(NamedTuple):
@@ -47,9 +48,16 @@ def build_train_step(
     microbatches: int = 1,
     reshard_params: Optional[Callable] = None,
     reshard_grads: Optional[Callable] = None,
+    warmup_gemm_rows: Optional[int] = None,
 ) -> Callable[[TrainState, Dict[str, jax.Array]],
               Tuple[TrainState, Dict[str, jax.Array]]]:
     """Returns train_step(state, batch) -> (state, metrics).
+
+    ``warmup_gemm_rows`` (tokens per microbatch, i.e. B*L/microbatches)
+    pre-resolves the model's hot-path GEMM tile configs through the
+    kernel-config registry at build time, so the first jitted step traces
+    against cached/tuned configs instead of paying solver or autotune
+    latency inside the trace.
 
     batch leading dim must be divisible by ``microbatches``; gradients are
     accumulated in fp32 across the microbatch scan.
@@ -62,6 +70,9 @@ def build_train_step(
     bf16) x fwd+bwd x every microbatch — the dominant collective cost of
     every train cell in the baseline dry-run.
     """
+
+    if warmup_gemm_rows:
+        warmup_model(cfg, [warmup_gemm_rows])
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 

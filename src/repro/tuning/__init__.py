@@ -1,0 +1,31 @@
+"""repro.tuning — model-pruned empirical autotuning for the CA-MMM kernels.
+
+The paper's analytic model picks tile parameters "within constraints set
+by the hardware" (Sec. 5.1); this subsystem closes the loop by *measuring*
+the model's top candidates and remembering the winners:
+
+* :mod:`.space`    — candidate generation pruned by the I/O model,
+* :mod:`.autotune` — warmup/median-of-k timing with a roofline prior,
+* :mod:`.cache`    — persistent, versioned, atomically-written JSON cache,
+* :mod:`.registry` — process-global resolver (cache > autotune > analytic)
+  that ``core.gemm``, the serve engine, the train step and the benchmarks
+  all dispatch through.
+"""
+
+from repro.tuning.autotune import TuneResult, autotune_gemm, time_tile
+from repro.tuning.cache import (SCHEMA_VERSION, CacheEntry, TuningCache,
+                                cache_key, default_cache_path, shape_bucket)
+from repro.tuning.registry import (KernelRegistry, Resolution, get_registry,
+                                   reset_registry, set_registry)
+from repro.tuning.space import candidate_tile_configs
+from repro.tuning.workload import model_gemm_shapes, warmup_model
+
+__all__ = [
+    "TuneResult", "autotune_gemm", "time_tile",
+    "SCHEMA_VERSION", "CacheEntry", "TuningCache", "cache_key",
+    "default_cache_path", "shape_bucket",
+    "KernelRegistry", "Resolution", "get_registry", "reset_registry",
+    "set_registry",
+    "candidate_tile_configs",
+    "model_gemm_shapes", "warmup_model",
+]

@@ -1,0 +1,183 @@
+"""Empirical autotuner: time the model's top-N candidates, keep the winner.
+
+The analytic model (Sec. 5.1) nominates candidates (:mod:`.space`), the
+roofline (:func:`repro.core.io_model.gemm_roofline`) supplies a *prior* on
+each candidate's runtime, and this module measures.  Measurement order is
+best-prior-first so early stopping is sound:
+
+* stop when the measured best is within ``early_stop_factor`` of the best
+  roofline prior (nothing can beat the roofline by much — the remaining
+  candidates have strictly worse priors), or
+* stop after ``patience`` consecutive candidates without improvement.
+
+On hosts without a TPU the kernel runs in Pallas interpret mode so tests
+and CI can exercise the full tuning loop anywhere; the timings are then
+only *relatively* meaningful, which is all the tuner needs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hardware import TpuTarget, V5E
+from repro.core.io_model import TileConfig, gemm_roofline
+from repro.tuning import space as tspace
+
+DEFAULT_WARMUP = 1
+DEFAULT_ITERS = 3
+
+
+def _auto_interpret() -> bool:
+    """Pallas interpret mode unless a real TPU backend is attached."""
+    try:
+        return jax.default_backend() != "tpu"
+    except Exception:
+        return True
+
+
+def _make_operands(m: int, n: int, k: int, dtype) -> Tuple[jax.Array,
+                                                           jax.Array]:
+    r = np.random.RandomState(0)
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        a = jnp.asarray(r.randint(-4, 5, (m, k)), dtype)
+        b = jnp.asarray(r.randint(-4, 5, (k, n)), dtype)
+    else:
+        a = jnp.asarray(r.randn(m, k), dtype)
+        b = jnp.asarray(r.randn(k, n), dtype)
+    return a, b
+
+
+def time_tile(
+    m: int,
+    n: int,
+    k: int,
+    tile: TileConfig,
+    dtype=jnp.bfloat16,
+    semiring: str = "plus_times",
+    interpret: Optional[bool] = None,
+    warmup: int = DEFAULT_WARMUP,
+    iters: int = DEFAULT_ITERS,
+) -> float:
+    """Median wall seconds of one CA-MMM call under ``tile``."""
+    from repro.kernels import ca_mmm_k_outer, ops  # lazy: avoid cycle
+
+    interpret = _auto_interpret() if interpret is None else interpret
+    a, b = _make_operands(m, n, k, dtype)
+
+    if tile.order == "k_outer":
+        from repro.core.io_model import round_up_to
+
+        bm = min(tile.bm, round_up_to(m, 8))
+        bn = min(tile.bn, round_up_to(n, 128))
+        bk = min(tile.bk, round_up_to(k, 128))
+        ap = ops._pad2(a, bm, bk)
+        bp = ops._pad2(b, bk, bn)
+
+        def call():
+            return ca_mmm_k_outer(ap, bp, bm=bm, bn=bn, bk=bk,
+                                  interpret=interpret)
+    else:
+        def call():
+            return ops.ca_mmm_padded(a, b, tile, interpret=interpret,
+                                     semiring=semiring)
+
+    for _ in range(max(0, warmup)):
+        jax.block_until_ready(call())
+    times = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Winner + provenance for one GEMM signature."""
+
+    config: TileConfig
+    measured_s: float
+    predicted_s: float           # roofline prior of the winner
+    n_tried: int
+    trials: Tuple[Tuple[TileConfig, float], ...] = ()
+    early_stopped: bool = False
+
+
+def autotune_gemm(
+    m: int,
+    n: int,
+    k: int,
+    dtype=jnp.bfloat16,
+    semiring: str = "plus_times",
+    hw: TpuTarget = V5E,
+    candidates: Optional[Sequence[TileConfig]] = None,
+    max_candidates: int = tspace.DEFAULT_TOP_N,
+    orders: Sequence[str] = ("k_inner",),
+    patience: int = 3,
+    early_stop_factor: float = 1.10,
+    interpret: Optional[bool] = None,
+    warmup: int = DEFAULT_WARMUP,
+    iters: int = DEFAULT_ITERS,
+    timer: Optional[Callable[[TileConfig], float]] = None,
+) -> TuneResult:
+    """Measure model-nominated candidates; return the fastest.
+
+    ``timer`` injects a measurement function (tests use a stub; production
+    uses :func:`time_tile`).  Candidates are measured best-prior-first.
+    """
+    if candidates is None:
+        candidates = tspace.candidate_tile_configs(
+            m, n, k, dtype_in=dtype, hw=hw, top_n=max_candidates,
+            orders=orders, semiring=semiring)
+    if not candidates:
+        raise ValueError(f"no legal tile candidates for {(m, n, k)}")
+
+    if timer is None:
+        def timer(tile: TileConfig) -> float:
+            return time_tile(m, n, k, tile, dtype=dtype, semiring=semiring,
+                             interpret=interpret, warmup=warmup, iters=iters)
+
+    # Roofline prior orders the measurements; a k_outer schedule re-reads
+    # the C tile per k step, which the prior reflects via inflated Q.
+    def prior(tile: TileConfig) -> float:
+        rl = gemm_roofline(m, n, k, tile, dtype, hw=hw)
+        if tile.order == "k_outer":
+            extra = (2.0 * m * n * (k // max(tile.bk, 1))
+                     * jnp.dtype(dtype).itemsize) / hw.hbm_bandwidth
+            return rl.time_s + extra
+        return rl.time_s
+
+    ranked = sorted(candidates, key=prior)
+    best_prior = prior(ranked[0])
+
+    trials: List[Tuple[TileConfig, float]] = []
+    best: Optional[Tuple[TileConfig, float]] = None
+    since_improved = 0
+    early = False
+    for tile in ranked:
+        t = float(timer(tile))
+        trials.append((tile, t))
+        if best is None or t < best[1]:
+            best = (tile, t)
+            since_improved = 0
+        else:
+            since_improved += 1
+        if best[1] <= early_stop_factor * best_prior:
+            early = True
+            break
+        if since_improved >= patience:
+            early = True
+            break
+
+    assert best is not None
+    return TuneResult(config=best[0], measured_s=best[1],
+                      predicted_s=float(prior(best[0])),
+                      n_tried=len(trials), trials=tuple(trials),
+                      early_stopped=early)

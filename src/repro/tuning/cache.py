@@ -1,0 +1,171 @@
+"""Persistent tuning cache: measured tile configs keyed by GEMM signature.
+
+FBLAS-style configuration store (De Matteis et al.): a reusable kernel
+library serving many shapes/dtypes needs its tuned parameters to outlive
+the process.  Entries are keyed by a *shape bucket* (dims rounded up to the
+next power of two) so that nearby shapes — e.g. every decode step of the
+same model — share one tuned config instead of re-tuning per exact shape.
+
+Design constraints:
+
+* **Versioned schema** — ``SCHEMA_VERSION`` is stored in the file; a
+  mismatch (older/newer writer) discards the payload wholesale rather than
+  guessing at field semantics.
+* **Atomic writes** — the file is written to a same-directory temp path and
+  ``os.replace``-d into place, so a crash mid-save leaves either the old
+  file or the new file, never a torn one.
+* **Corruption tolerance** — an unreadable/garbage file loads as empty (a
+  cache must never take the process down).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import tempfile
+from typing import Dict, Optional
+
+from repro.core.hardware import TpuTarget, V5E
+from repro.core.io_model import TileConfig
+
+SCHEMA_VERSION = 1
+
+_ENV_PATH = "REPRO_TUNING_CACHE"
+
+
+def default_cache_path() -> pathlib.Path:
+    env = os.environ.get(_ENV_PATH)
+    if env:
+        return pathlib.Path(env)
+    base = os.environ.get("XDG_CACHE_HOME", os.path.expanduser("~/.cache"))
+    return pathlib.Path(base) / "repro" / "tuning_cache.json"
+
+
+def shape_bucket(d: int) -> int:
+    """Round a GEMM dim up to the next power of two (min 1).
+
+    Bucketing keeps the cache small and lets one tuned config serve the
+    whole neighborhood of shapes the planner would tile identically.
+    """
+    if d <= 1:
+        return 1
+    return 1 << (d - 1).bit_length()
+
+
+def cache_key(m: int, n: int, k: int, dtype_str: str,
+              semiring: str = "plus_times",
+              hw: TpuTarget = V5E) -> str:
+    """Stable string key: shape-bucket + dtype + semiring + hardware."""
+    return (f"{hw.name}/{dtype_str}/{semiring}/"
+            f"m{shape_bucket(m)}n{shape_bucket(n)}k{shape_bucket(k)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheEntry:
+    """One tuned result: the winning tile plus its provenance."""
+
+    bm: int
+    bn: int
+    bk: int
+    order: str = "k_inner"
+    measured_s: float = 0.0
+    predicted_s: float = 0.0
+    n_tried: int = 0
+    source: str = "autotune"
+
+    def to_tile(self) -> TileConfig:
+        return TileConfig(bm=self.bm, bn=self.bn, bk=self.bk,
+                          order=self.order)
+
+    @staticmethod
+    def from_tile(tile: TileConfig, *, measured_s: float = 0.0,
+                  predicted_s: float = 0.0, n_tried: int = 0,
+                  source: str = "autotune") -> "CacheEntry":
+        return CacheEntry(bm=tile.bm, bn=tile.bn, bk=tile.bk,
+                          order=tile.order, measured_s=measured_s,
+                          predicted_s=predicted_s, n_tried=n_tried,
+                          source=source)
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict) -> "CacheEntry":
+        fields = {f.name for f in dataclasses.fields(CacheEntry)}
+        return CacheEntry(**{k: v for k, v in d.items() if k in fields})
+
+
+class TuningCache:
+    """Dict-like persistent store; every ``put`` saves atomically."""
+
+    def __init__(self, path: Optional[os.PathLike] = None,
+                 autosave: bool = True):
+        self.path = pathlib.Path(path) if path is not None \
+            else default_cache_path()
+        self.autosave = autosave
+        self._entries: Dict[str, CacheEntry] = {}
+        self.load()
+
+    # -- persistence --------------------------------------------------------
+
+    def load(self) -> None:
+        self._entries = {}
+        try:
+            raw = json.loads(self.path.read_text())
+        except (OSError, ValueError):
+            return  # missing or corrupt: start empty
+        if not isinstance(raw, dict) or raw.get("schema") != SCHEMA_VERSION:
+            return  # schema mismatch: discard rather than misread fields
+        for key, d in raw.get("entries", {}).items():
+            try:
+                self._entries[key] = CacheEntry.from_json(d)
+            except (TypeError, ValueError):
+                continue  # skip individually-bad rows
+
+    def save(self) -> None:
+        payload = {
+            "schema": SCHEMA_VERSION,
+            "entries": {k: e.to_json() for k, e in self._entries.items()},
+        }
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        # Atomic publish: temp file in the same directory, then rename.
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                   prefix=self.path.name + ".tmp.")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- dict-ish API --------------------------------------------------------
+
+    def get(self, key: str) -> Optional[CacheEntry]:
+        return self._entries.get(key)
+
+    def put(self, key: str, entry: CacheEntry) -> None:
+        self._entries[key] = entry
+        if self.autosave:
+            self.save()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    def keys(self):
+        return self._entries.keys()
+
+    def clear(self) -> None:
+        self._entries = {}
+        if self.autosave:
+            self.save()

@@ -1,0 +1,196 @@
+"""Process-global kernel-config registry: every GEMM resolves its tile here.
+
+Resolution precedence (the subsystem's contract, verified by tests):
+
+1. **cache hit** — in-memory first, then the persistent
+   :class:`repro.tuning.cache.TuningCache`; no kernel is ever re-timed for
+   a key the cache already holds.
+2. **autotune** — only when enabled (constructor flag or
+   ``REPRO_AUTOTUNE=1``); the winner is written back to the persistent
+   cache so the *next process* gets a cache hit.
+3. **analytic** — the paper's :func:`repro.core.io_model.solve_tile_config`
+   model, always available, never wrong by more than the model's slack.
+
+The registry is the single choke point the serve engine, train step,
+``core.gemm`` dispatch and the benchmarks all share — later backend PRs
+add targets by extending the key, not by re-plumbing call sites.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from typing import Dict, Iterable, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.hardware import TpuTarget, V5E
+from repro.core.io_model import TileConfig, solve_tile_config
+from repro.tuning import autotune as _autotune
+from repro.tuning import space as _space
+from repro.tuning.cache import CacheEntry, TuningCache, cache_key
+
+_ENV_AUTOTUNE = "REPRO_AUTOTUNE"
+
+
+@dataclasses.dataclass(frozen=True)
+class Resolution:
+    """A resolved config plus where it came from."""
+
+    config: TileConfig
+    source: str                 # "cache" | "autotune" | "analytic"
+    key: str
+
+
+class KernelRegistry:
+    """Thread-safe resolver with cache > autotune > analytic precedence."""
+
+    def __init__(self, cache: Optional[TuningCache] = None,
+                 autotune_enabled: Optional[bool] = None,
+                 hw: TpuTarget = V5E,
+                 tuner=None):
+        # The persistent cache is created lazily so merely importing the
+        # registry never touches the filesystem; reads are harmless and
+        # writes only happen after an autotune run.
+        self._cache = cache
+        if autotune_enabled is None:
+            autotune_enabled = os.environ.get(_ENV_AUTOTUNE, "0") == "1"
+        self.autotune_enabled = bool(autotune_enabled)
+        self.hw = hw
+        self._tuner = tuner or _autotune.autotune_gemm
+        self._mem: Dict[str, Resolution] = {}
+        # Analytic plans are exact-shape: bucketing is sound only for
+        # *measured* entries (the tuner's winner transfers across a
+        # bucket; a solver answer for (600,600,600) is wrong metadata —
+        # and a wrong tile — for (1024,1024,1024)).
+        self._analytic: Dict[tuple, Resolution] = {}
+        self._lock = threading.RLock()
+        self.stats = {"cache": 0, "autotune": 0, "analytic": 0}
+
+    @property
+    def cache(self) -> TuningCache:
+        with self._lock:
+            if self._cache is None:
+                self._cache = TuningCache()
+            return self._cache
+
+    # -- resolution ----------------------------------------------------------
+
+    def resolve_full(self, m: int, n: int, k: int, dtype=jnp.bfloat16,
+                     semiring: str = "plus_times",
+                     hw: Optional[TpuTarget] = None,
+                     **tune_kwargs) -> Resolution:
+        hw = hw or self.hw
+        dtype_str = jnp.dtype(dtype).name
+        key = cache_key(m, n, k, dtype_str, semiring, hw)
+        exact = (m, n, k, dtype_str, semiring, hw.name)
+        with self._lock:
+            hit = self._mem.get(key)
+            if hit is not None:
+                self.stats["cache"] += 1
+                return hit
+            hit = self._analytic.get(exact)
+            if hit is not None:
+                self.stats["analytic"] += 1
+                return hit
+            # Persistent cache (only ever holds measured results), so a
+            # process that tuned yesterday serves hits today without
+            # REPRO_AUTOTUNE being set.
+            entry = self.cache.get(key)
+            if entry is not None:
+                res = Resolution(entry.to_tile(), "cache", key)
+                self._mem[key] = res
+                self.stats["cache"] += 1
+                return res
+            autotune = self.autotune_enabled
+
+        # Tuning (kernel compiles + timed runs, possibly minutes) and the
+        # analytic solve both run OUTSIDE the lock so concurrent threads
+        # can keep resolving other keys.  Two threads racing on one key
+        # tune twice; the writes are idempotent, so that's only waste.
+        if autotune:
+            result = self._tuner(m, n, k, dtype=dtype, semiring=semiring,
+                                 hw=hw, **tune_kwargs)
+            res = Resolution(result.config, "autotune", key)
+            with self._lock:
+                prior = self._mem.get(key)
+                if prior is not None:  # lost the race: keep the first win
+                    self.stats["cache"] += 1
+                    return prior
+                self.cache.put(key, CacheEntry.from_tile(
+                    result.config, measured_s=result.measured_s,
+                    predicted_s=result.predicted_s, n_tried=result.n_tried))
+                self._mem[key] = res
+                self.stats["autotune"] += 1
+                return res
+
+        if semiring == "plus_times":
+            tile = solve_tile_config(m, n, k, dtype_in=dtype, hw=hw)
+        else:
+            # Non-standard semirings (min_plus) have kernel-specific
+            # VMEM footprints the plain solver doesn't model; take the
+            # space generator's top candidate, which does.
+            tile = _space.candidate_tile_configs(
+                m, n, k, dtype_in=dtype, hw=hw, top_n=1,
+                semiring=semiring)[0]
+        res = Resolution(tile, "analytic", key)
+        with self._lock:
+            self._analytic[exact] = res
+            self.stats["analytic"] += 1
+        return res
+
+    def resolve(self, m: int, n: int, k: int, dtype=jnp.bfloat16,
+                semiring: str = "plus_times",
+                hw: Optional[TpuTarget] = None,
+                **tune_kwargs) -> TileConfig:
+        """The everyday entry point: just the tile."""
+        return self.resolve_full(m, n, k, dtype, semiring, hw,
+                                 **tune_kwargs).config
+
+    def warmup(self, shapes: Iterable[Tuple[int, int, int]],
+               dtype=jnp.bfloat16,
+               semiring: str = "plus_times") -> Dict[str, str]:
+        """Resolve a batch of GEMM signatures ahead of first use.
+
+        Serve engines call this at startup so no request pays the tuning
+        (or even solver) latency.  Returns {key: source} for logging.
+        """
+        out = {}
+        for (m, n, k) in shapes:
+            r = self.resolve_full(m, n, k, dtype, semiring)
+            out[r.key] = r.source
+        return out
+
+    def clear_memory(self) -> None:
+        """Drop the in-process memos (persistent cache untouched)."""
+        with self._lock:
+            self._mem.clear()
+            self._analytic.clear()
+
+
+# ---------------------------------------------------------------------------
+# Process-global instance
+# ---------------------------------------------------------------------------
+
+_global_lock = threading.Lock()
+_global: Optional[KernelRegistry] = None
+
+
+def get_registry() -> KernelRegistry:
+    global _global
+    with _global_lock:
+        if _global is None:
+            _global = KernelRegistry()
+        return _global
+
+
+def set_registry(registry: Optional[KernelRegistry]) -> None:
+    """Install (or with ``None`` reset) the process-global registry."""
+    global _global
+    with _global_lock:
+        _global = registry
+
+
+def reset_registry() -> None:
+    set_registry(None)

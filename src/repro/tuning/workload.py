@@ -1,0 +1,56 @@
+"""Workload shape extraction: which GEMM signatures a model will issue.
+
+The serve engine and train step use this to warm the kernel-config
+registry ahead of the first real request/step, so no user-facing call ever
+pays tuning (or even tile-solver) latency — the serve-time analog of the
+paper's ahead-of-time parameter selection.
+
+Only the *dominant* dense contractions are listed (projections, FFN,
+logits, expert FFNs); the cache's power-of-two shape bucketing means these
+cover every nearby shape the model actually emits.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.configs.base import ModelConfig
+
+GemmShape = Tuple[int, int, int]  # (m, n, k) as resolved by the registry
+
+
+def model_gemm_shapes(cfg: ModelConfig, rows: int) -> List[GemmShape]:
+    """(m, n, k) for the model's dense hot-path GEMMs at ``rows`` tokens."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.padded_vocab
+    shapes = {
+        (rows, d, d),      # attention / mixer projections
+        (rows, f, d),      # FFN up
+        (rows, d, f),      # FFN down
+        (rows, v, d),      # logits head
+    }
+    if cfg.moe is not None and cfg.moe.d_ff_expert:
+        fe = cfg.moe.d_ff_expert
+        shapes.add((rows, fe, d))
+        shapes.add((rows, d, fe))
+    # Architectures may zero a dim out (e.g. SSM configs with d_ff=0 —
+    # no dense FFN); a GEMM with an empty dim is not a GEMM.
+    return sorted(s for s in shapes if all(dim > 0 for dim in s))
+
+
+def warmup_model(cfg: ModelConfig, rows_list, registry=None) -> dict:
+    """Resolve every hot-path GEMM config for the given row counts.
+
+    Returns {cache_key: source} so callers can log what was tuned, served
+    from cache, or fell back to the analytic model.
+    """
+    if registry is None:
+        from repro.tuning.registry import get_registry
+
+        registry = get_registry()
+    resolved = {}
+    for rows in rows_list:
+        if rows <= 0:
+            continue
+        resolved.update(registry.warmup(model_gemm_shapes(cfg, rows),
+                                        dtype=cfg.dtype()))
+    return resolved

@@ -1,5 +1,18 @@
 """Test session config: 1 CPU device (the dry-run forces 512 in its own
-subprocess), xla gemm mode by default."""
+subprocess), xla gemm mode by default.
+
+If the real ``hypothesis`` package is missing (this container doesn't ship
+it and installs are not allowed), fall back to the deterministic shim in
+``tests/_stubs`` so property tests still collect and run.
+"""
+
+import pathlib
+import sys
+
+try:  # pragma: no cover - depends on container contents
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).parent / "_stubs"))
 
 import numpy as np
 import pytest
@@ -11,6 +24,23 @@ from repro.core import set_gemm_mode
 def _default_gemm_mode():
     set_gemm_mode("xla")
     yield
+
+
+@pytest.fixture(autouse=True)
+def _isolated_kernel_registry(tmp_path, monkeypatch):
+    """Fresh global KernelRegistry per test, cache pointed into tmp.
+
+    Keeps tests hermetic: no test reads or writes the developer's real
+    tuning cache, and registry memoization never leaks across tests.
+    """
+    from repro.tuning import registry as treg
+
+    monkeypatch.setenv("REPRO_TUNING_CACHE",
+                       str(tmp_path / "tuning_cache.json"))
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    treg.reset_registry()
+    yield
+    treg.reset_registry()
 
 
 @pytest.fixture

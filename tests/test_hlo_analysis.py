@@ -70,8 +70,8 @@ import sys
 sys.path.insert(0, %r)
 from repro.launch import hlo_analysis as H
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 L, D = 7, 256
 
 def f(ws, x):

@@ -14,7 +14,8 @@ from repro.sharding.rules import pspec_for_def, pspecs_for_defs
 @pytest.fixture(scope="module")
 def mesh():
     # abstract mesh: no devices needed for spec computation
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    from repro.launch.mesh import abstract_mesh
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_tp_assignment(mesh):

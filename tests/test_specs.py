@@ -11,12 +11,14 @@ from repro.launch import specs as S
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    from repro.launch.mesh import abstract_mesh
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.fixture(scope="module")
 def mesh3():
-    return jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    from repro.launch.mesh import abstract_mesh
+    return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _check_divisible(sds, shardings, mesh):

@@ -1,0 +1,331 @@
+"""repro.tuning subsystem: cache persistence/atomicity, registry
+precedence (cache > autotune > analytic), and model-pruned search space
+legality."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import V5E, solve_tile_config, vmem_quantum
+from repro.core.io_model import TileConfig, tile_vmem_bytes
+from repro.tuning import (CacheEntry, KernelRegistry, TuningCache,
+                          autotune_gemm, cache_key, candidate_tile_configs,
+                          model_gemm_shapes, shape_bucket, warmup_model)
+from repro.tuning import cache as tcache
+from repro.tuning import registry as treg
+
+
+# ---------------------------------------------------------------------------
+# cache.py
+# ---------------------------------------------------------------------------
+
+def test_cache_round_trip(tmp_path):
+    path = tmp_path / "cache.json"
+    c = TuningCache(path)
+    entry = CacheEntry(bm=256, bn=512, bk=128, order="k_inner",
+                       measured_s=1e-3, predicted_s=9e-4, n_tried=5)
+    key = cache_key(1000, 2000, 3000, "bfloat16")
+    c.put(key, entry)
+    # A fresh instance reads the same entry back from disk.
+    c2 = TuningCache(path)
+    got = c2.get(key)
+    assert got == entry
+    assert got.to_tile() == TileConfig(bm=256, bn=512, bk=128)
+
+
+def test_cache_key_buckets_nearby_shapes():
+    assert shape_bucket(1000) == 1024 and shape_bucket(1024) == 1024
+    k1 = cache_key(1000, 2000, 3000, "bfloat16")
+    k2 = cache_key(1024, 1100, 2049, "bfloat16")
+    assert k1 == k2  # same power-of-two buckets
+    assert cache_key(1000, 2000, 3000, "float32") != k1
+    assert cache_key(1000, 2000, 3000, "bfloat16", "min_plus") != k1
+
+
+def test_cache_schema_version_invalidation(tmp_path):
+    path = tmp_path / "cache.json"
+    c = TuningCache(path)
+    c.put("some/key", CacheEntry(bm=8, bn=128, bk=128))
+    raw = json.loads(path.read_text())
+    assert raw["schema"] == tcache.SCHEMA_VERSION
+    # A writer with a different schema version: discard wholesale.
+    raw["schema"] = tcache.SCHEMA_VERSION + 1
+    path.write_text(json.dumps(raw))
+    assert len(TuningCache(path)) == 0
+
+
+def test_cache_corrupt_file_loads_empty(tmp_path):
+    path = tmp_path / "cache.json"
+    path.write_text("{not json at all")
+    c = TuningCache(path)
+    assert len(c) == 0
+    c.put("k", CacheEntry(bm=8, bn=128, bk=128))  # and is writable again
+    assert len(TuningCache(path)) == 1
+
+
+def test_cache_atomic_write_crash_safety(tmp_path, monkeypatch):
+    """A crash mid-save must leave the previous file intact."""
+    path = tmp_path / "cache.json"
+    c = TuningCache(path)
+    c.put("k1", CacheEntry(bm=8, bn=128, bk=128))
+    before = path.read_text()
+
+    def boom(src, dst):
+        raise OSError("simulated crash at publish")
+
+    monkeypatch.setattr(os, "replace", boom)
+    with pytest.raises(OSError):
+        c.put("k2", CacheEntry(bm=16, bn=128, bk=128))
+    monkeypatch.undo()
+    # On-disk file unchanged and still parseable; no temp litter.
+    assert path.read_text() == before
+    assert list(TuningCache(path).keys()) == ["k1"]
+    assert [p for p in tmp_path.iterdir()] == [path]
+
+
+# ---------------------------------------------------------------------------
+# space.py — model-pruned candidates are hardware-legal by construction
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(8, 1 << 14),
+    n=st.integers(8, 1 << 14),
+    k=st.integers(8, 1 << 14),
+    dt=st.sampled_from(["bfloat16", "float32", "int8"]),
+)
+def test_space_candidates_legal(m, n, k, dt):
+    dtype = jnp.dtype(dt)
+    cands = candidate_tile_configs(m, n, k, dtype_in=dtype, top_n=8)
+    assert cands, (m, n, k, dt)
+    qm, qn = vmem_quantum(dtype)
+    budget = 0.75 * V5E.vmem_bytes
+    for c in cands:
+        # (sublane, lane) quanta (Eq. 8 analog)
+        assert c.bm % qm == 0 and c.bn % qn == 0 and c.bk % V5E.lane == 0
+        # VMEM capacity constraint (Eq. 5)
+        assert tile_vmem_bytes(c.bm, c.bn, c.bk, dtype.itemsize, 4) <= budget
+        assert c.vmem_bytes <= budget
+
+
+def test_space_includes_analytic_solution():
+    t = solve_tile_config(4096, 4096, 4096, dtype_in=jnp.bfloat16)
+    cands = candidate_tile_configs(4096, 4096, 4096, dtype_in=jnp.bfloat16,
+                                   top_n=8)
+    assert any((c.bm, c.bn, c.bk) == (t.bm, t.bn, t.bk) for c in cands)
+
+
+def test_space_orders_cross_product():
+    cands = candidate_tile_configs(1024, 1024, 1024, dtype_in=jnp.float32,
+                                   top_n=3, orders=("k_inner", "k_outer"))
+    assert {c.order for c in cands} == {"k_inner", "k_outer"}
+
+
+def test_space_min_plus_respects_broadcast_footprint():
+    budget = 0.75 * V5E.vmem_bytes
+    cands = candidate_tile_configs(512, 512, 512, dtype_in=jnp.float32,
+                                   semiring="min_plus", top_n=6)
+    assert cands
+    for c in cands:
+        assert c.bm * c.bk * c.bn * 4 <= budget
+
+
+# ---------------------------------------------------------------------------
+# autotune.py
+# ---------------------------------------------------------------------------
+
+def _fake_timer_factory(calls, best=(256, 256, 128)):
+    def timer(tile):
+        calls.append((tile.bm, tile.bn, tile.bk, tile.order))
+        return 0.5 if (tile.bm, tile.bn, tile.bk) == best else 1.0
+    return timer
+
+
+def test_autotune_picks_measured_winner():
+    calls = []
+    cands = [TileConfig(128, 128, 128), TileConfig(256, 256, 128),
+             TileConfig(512, 512, 128)]
+    res = autotune_gemm(1024, 1024, 1024, dtype=jnp.float32,
+                        candidates=cands,
+                        timer=_fake_timer_factory(calls), patience=5)
+    assert (res.config.bm, res.config.bn, res.config.bk) == (256, 256, 128)
+    assert res.measured_s == 0.5
+    assert res.n_tried == len(calls) <= len(cands)
+
+
+def test_autotune_early_stops_on_patience():
+    calls = []
+
+    def timer(tile):
+        calls.append(tile)
+        return float(len(calls))  # monotonically worse: never improves
+
+    cands = [TileConfig(128 * i, 128, 128) for i in range(1, 9)]
+    res = autotune_gemm(1024, 1024, 1024, dtype=jnp.float32,
+                        candidates=cands, timer=timer, patience=2)
+    assert res.early_stopped
+    assert res.n_tried == 3  # first + 2 non-improving
+
+
+def test_autotune_interpret_mode_end_to_end():
+    """Real timing loop on CPU via pallas interpret — the CI smoke path."""
+    res = autotune_gemm(128, 128, 128, dtype=jnp.float32, interpret=True,
+                        max_candidates=2, iters=1, warmup=0)
+    assert res.measured_s > 0
+    assert res.config.bm % 8 == 0 and res.config.bn % 128 == 0
+
+
+# ---------------------------------------------------------------------------
+# registry.py — precedence cache > autotune > analytic
+# ---------------------------------------------------------------------------
+
+def _tuned_registry(tmp_path, calls, autotune_enabled=True):
+    cache = TuningCache(tmp_path / "reg_cache.json")
+
+    def tuner(m, n, k, dtype=jnp.bfloat16, semiring="plus_times", hw=V5E,
+              **kw):
+        return autotune_gemm(m, n, k, dtype=dtype, semiring=semiring, hw=hw,
+                             timer=_fake_timer_factory(calls), patience=2)
+
+    return KernelRegistry(cache=cache, autotune_enabled=autotune_enabled,
+                          tuner=tuner)
+
+
+def test_registry_analytic_fallback(tmp_path):
+    calls = []
+    r = _tuned_registry(tmp_path, calls, autotune_enabled=False)
+    got = r.resolve_full(512, 512, 512, dtype=jnp.float32)
+    assert got.source == "analytic"
+    assert calls == []  # never timed
+    t = solve_tile_config(512, 512, 512, dtype_in=jnp.float32)
+    assert (got.config.bm, got.config.bn, got.config.bk) == (t.bm, t.bn, t.bk)
+
+
+def test_registry_autotune_then_cached_no_retiming(tmp_path):
+    """Acceptance criterion: second resolve for the same key re-times
+    nothing — and the tuned config survives to a brand-new registry via
+    the persistent cache."""
+    calls = []
+    r = _tuned_registry(tmp_path, calls)
+    c1 = r.resolve(512, 512, 512, dtype=jnp.float32)
+    n_timed = len(calls)
+    assert n_timed > 0 and r.stats["autotune"] == 1
+
+    c2 = r.resolve(512, 512, 512, dtype=jnp.float32)
+    assert len(calls) == n_timed  # no re-timing
+    assert c2 == c1
+    assert r.stats["cache"] == 1
+
+    # Same bucket, slightly different shape: still a hit, still no timing.
+    c3 = r.resolve(500, 510, 512, dtype=jnp.float32)
+    assert len(calls) == n_timed
+    assert (c3.bm, c3.bn, c3.bk) == (c1.bm, c1.bn, c1.bk)
+
+    # New process analog: fresh registry, same cache file, no tuner calls.
+    calls2 = []
+    r2 = _tuned_registry(tmp_path, calls2)
+    c4 = r2.resolve_full(512, 512, 512, dtype=jnp.float32)
+    assert c4.source == "cache" and calls2 == []
+    assert (c4.config.bm, c4.config.bn, c4.config.bk) == (c1.bm, c1.bn, c1.bk)
+
+
+def test_registry_cache_beats_autotune(tmp_path):
+    """A pre-existing cache entry wins even with autotuning enabled."""
+    cache = TuningCache(tmp_path / "reg_cache.json")
+    key = cache_key(512, 512, 512, "float32")
+    cache.put(key, CacheEntry(bm=64, bn=128, bk=128, source="pinned"))
+
+    def exploding_tuner(*a, **kw):
+        raise AssertionError("tuner must not run on a cache hit")
+
+    r = KernelRegistry(cache=cache, autotune_enabled=True,
+                       tuner=exploding_tuner)
+    got = r.resolve_full(512, 512, 512, dtype=jnp.float32)
+    assert got.source == "cache"
+    assert (got.config.bm, got.config.bn, got.config.bk) == (64, 128, 128)
+
+
+def test_registry_env_toggle(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    assert KernelRegistry(cache=TuningCache(tmp_path / "c.json"))\
+        .autotune_enabled
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    assert not KernelRegistry(cache=TuningCache(tmp_path / "c.json"))\
+        .autotune_enabled
+
+
+def test_registry_analytic_plans_are_exact_shape(tmp_path):
+    """Regression: bucketing applies to *measured* entries only — two
+    shapes in one power-of-two bucket must each get their own analytic
+    solve (a 600-shape tile is wrong, and possibly non-dividing, for a
+    1024 problem)."""
+    r = _tuned_registry(tmp_path, [], autotune_enabled=False)
+    t600 = r.resolve(600, 600, 600, dtype=jnp.float32)
+    t1024 = r.resolve(1024, 1024, 1024, dtype=jnp.float32)
+    want = solve_tile_config(1024, 1024, 1024, dtype_in=jnp.float32)
+    assert (t1024.bm, t1024.bn, t1024.bk) == (want.bm, want.bn, want.bk)
+    assert t1024.bm % 8 == 0 and 1024 % min(t1024.bm, 1024) == 0
+    # and the exact-shape memo still serves repeats without re-solving
+    assert r.resolve(600, 600, 600, dtype=jnp.float32) == t600
+
+
+def test_registry_min_plus_analytic_fits_broadcast(tmp_path):
+    r = _tuned_registry(tmp_path, [], autotune_enabled=False)
+    t = r.resolve(512, 512, 512, dtype=jnp.float32, semiring="min_plus")
+    assert t.bm * t.bk * t.bn * 4 <= 0.75 * V5E.vmem_bytes
+
+
+# ---------------------------------------------------------------------------
+# consumers: gemm dispatch, kernels, serve/train warmup
+# ---------------------------------------------------------------------------
+
+def test_plan_for_routes_through_registry(tmp_path):
+    from repro.core import plan_for
+
+    calls = []
+    treg.set_registry(_tuned_registry(tmp_path, calls))
+    t = plan_for(512, 512, 512, jnp.float32)
+    assert calls, "plan_for must resolve via the registry's tuner"
+    assert treg.get_registry().stats["autotune"] == 1
+    # and the plan is the tuner's winner, served from cache on repeat
+    assert plan_for(512, 512, 512, jnp.float32) == t
+    assert treg.get_registry().stats["cache"] == 1
+
+
+def test_ca_mmm_none_defaults_use_registry_and_match_oracle():
+    from repro.kernels import ca_mmm_kernel
+
+    r = np.random.RandomState(0)
+    a = jnp.asarray(r.randn(128, 128), jnp.float32)
+    b = jnp.asarray(r.randn(128, 128), jnp.float32)
+    got = ca_mmm_kernel(a, b, interpret=True)  # no tile args at all
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(a) @ np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+    assert treg.get_registry().stats["analytic"] >= 1
+
+
+def test_model_gemm_shapes_and_warmup(tmp_path):
+    from repro.configs.base import ModelConfig
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=1000)
+    shapes = model_gemm_shapes(cfg, 32)
+    assert (32, cfg.d_ff, cfg.d_model) in shapes
+    assert (32, cfg.padded_vocab, cfg.d_model) in shapes
+
+    calls = []
+    treg.set_registry(_tuned_registry(tmp_path, calls, autotune_enabled=False))
+    sources = warmup_model(cfg, [32])
+    assert sources and set(sources.values()) == {"analytic"}
+    # Second warmup: served from the exact-shape analytic memo (the
+    # resolver runs again but nothing is re-solved or re-timed).
+    before = dict(treg.get_registry().stats)
+    warmup_model(cfg, [32])
+    after = treg.get_registry().stats
+    assert after["analytic"] >= before["analytic"] + len(sources)
+    assert after["autotune"] == before["autotune"] == 0
