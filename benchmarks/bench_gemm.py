@@ -7,6 +7,13 @@ headline column), modeled Q, and projected performance at the v5e
 roofline.  Wall-time is measured for the XLA path on this CPU host (the
 kernel itself is validated in interpret mode by tests/test_kernels.py).
 
+The **fused-epilogue** section runs a ragged decode shape (m=37 — a batch
+of decode tokens, never a tile multiple) through the pad-free kernel and
+compares the fused bias+activation drain against unfused GEMM + separate
+epilogue: planned Q (the paper's Eq. 6 + epilogue traffic), XLA
+``bytes accessed`` of the compiled computations, and a numerics check
+against the jnp oracle.
+
 ``--tuned`` additionally runs the empirical autotuner (repro.tuning)
 against the analytic plan on small shapes — in Pallas interpret mode on
 CPU, on the real kernel on TPU — and reports the tuned-vs-analytic
@@ -15,28 +22,44 @@ speedup per shape.
 Every run writes a machine-readable ``BENCH_gemm.json`` (stable schema,
 see ``JSON_SCHEMA_VERSION``) with this run's records; the perf trajectory
 across PRs lives in the file's git history, not in-file accumulation.
+When a committed baseline exists, runs print per-record deltas against
+it; ``--check-baseline`` turns a planned-bytes regression of the fused
+path into a nonzero exit (the CI gate).
 """
 
 import argparse
 import json
 import pathlib
+import sys
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import (V5E, arithmetic_intensity_ops_per_byte, gemm_roofline,
+from repro.core import (V5E, Epilogue, arithmetic_intensity_ops_per_byte,
+                        epilogue_q_elements, gemm_roofline,
                         io_volume_elements, solve_tile_config)
+from repro.kernels.epilogue import stream_cost
 from benchmarks.common import emit, time_call
 
 N = 16384  # paper's benchmark size
 
-JSON_SCHEMA_VERSION = 1
+# v2: adds per-record "kind" and the fused-epilogue section
+# (planned_q_bytes_fused / _unfused, xla bytes accessed for both paths).
+JSON_SCHEMA_VERSION = 2
 DEFAULT_JSON_PATH = "BENCH_gemm.json"
 
+# The ragged serving shape of the fused section: 37 decode tokens through
+# a d=1024 projection (m is deliberately not a multiple of any sublane
+# quantum; k, n are).
+FUSED_SHAPE = (37, 1024, 1024)
+FUSED_EPILOGUE = "bias+gelu"
 
-def _record(m, n, k, dtype, tile, source, median_s, model_s, **extra):
+
+def _record(m, n, k, dtype, tile, source, median_s, model_s, kind, **extra):
     """One stable-schema row for BENCH_gemm.json."""
     rec = {
+        "kind": kind,                      # analytic | tuned | fused_epilogue
         "shape": [int(m), int(n), int(k)],
         "dtype": jnp.dtype(dtype).name,
         "config": {"bm": tile.bm, "bn": tile.bn, "bk": tile.bk,
@@ -47,6 +70,23 @@ def _record(m, n, k, dtype, tile, source, median_s, model_s, **extra):
     }
     rec.update(extra)
     return rec
+
+
+def _baseline_index(baseline):
+    if not baseline:
+        return {}
+    return {(r.get("kind", "analytic"), tuple(r["shape"]), r["dtype"]): r
+            for r in baseline.get("results", [])}
+
+
+def _delta_note(rec, base_idx, field):
+    base = base_idx.get((rec["kind"], tuple(rec["shape"]), rec["dtype"]))
+    if not base or base.get(field) is None or rec.get(field) is None:
+        return "baseline=none"
+    b, c = float(base[field]), float(rec[field])
+    if b == 0:
+        return "baseline=0"
+    return f"baseline_{field}={b:.3g};delta={100.0 * (c - b) / b:+.1f}%"
 
 
 def run(records=None):
@@ -70,14 +110,113 @@ def run(records=None):
              f"vmem_util={t.utilization:.2f}")
         if records is not None:
             records.append(_record(
-                N, N, N, dt, t, "analytic", None, rl.time_s,
+                N, N, N, dt, t, "analytic", None, rl.time_s, "analytic",
                 ai_ops_per_byte=ai, q_gb=q_gb, projected_gops=gops,
                 bound=rl.bound, vmem_utilization=t.utilization,
                 host_xla_1024_us=us))
 
 
+def _xla_bytes(compiled) -> float:
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x: one dict per program
+        ca = ca[0] if ca else {}
+    return float(ca.get("bytes accessed", 0.0))
+
+
+def run_fused(records=None, shape=FUSED_SHAPE, dtypes=(jnp.float32,),
+              base_idx=()):
+    """Fused drain epilogue vs unfused GEMM + separate bias/activation.
+
+    Planned Q is the model's verdict (deterministic — the CI gate); XLA
+    ``bytes accessed`` of the compiled host computations corroborates it;
+    the interpret-mode kernel run checks numerics against the oracle.
+    """
+    from repro.tuning import get_registry
+
+    m, n, k = shape
+    n_mn, has_bias = stream_cost(FUSED_EPILOGUE)
+    r = np.random.RandomState(0)
+    for dt in dtypes:
+        dt = jnp.dtype(dt)
+        resolution = get_registry().resolve_full(m, n, k, dtype=dt,
+                                                 epilogue=FUSED_EPILOGUE)
+        tile = resolution.config
+        itemsize = dt.itemsize
+        q_gemm = io_volume_elements(m, n, k, min(tile.bm, m),
+                                    min(tile.bn, n))
+        q_fused = (q_gemm + epilogue_q_elements(m, n, n_mn, has_bias,
+                                                fused=True)) * itemsize
+        q_unfused = (q_gemm + epilogue_q_elements(m, n, n_mn, has_bias,
+                                                  fused=False)) * itemsize
+
+        a = jnp.asarray(r.randn(m, k), dt)
+        b = jnp.asarray(r.randn(k, n), dt)
+        bias = jnp.asarray(r.randn(n), dt)
+
+        # XLA view of the same fusion choice: one jit (epilogue fusable
+        # into the GEMM consumer) vs two jits (the unfused z round trip
+        # is forced through HBM).
+        def fused_fn(a, b, bias):
+            z = jnp.dot(a, b, preferred_element_type=jnp.float32)
+            return jax.nn.gelu(z + bias).astype(dt)
+
+        def gemm_fn(a, b):
+            return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+        def epi_fn(z, bias):
+            return jax.nn.gelu(z + bias).astype(dt)
+
+        fused_c = jax.jit(fused_fn).lower(a, b, bias).compile()
+        gemm_c = jax.jit(gemm_fn).lower(a, b).compile()
+        z_sds = jax.ShapeDtypeStruct((m, n), jnp.float32)
+        epi_c = jax.jit(epi_fn).lower(z_sds, bias).compile()
+        xla_fused = _xla_bytes(fused_c)
+        xla_unfused = _xla_bytes(gemm_c) + _xla_bytes(epi_c)
+
+        # Numerics: the pad-free fused kernel vs the oracle, on the
+        # ragged shape (masked edge tiles + drain epilogue).
+        from repro.kernels import fused_matmul
+
+        got = fused_matmul(a, b, Epilogue(bias=bias, activation="gelu"),
+                           tile, interpret=True)
+        want = jax.nn.gelu(
+            jnp.dot(a, b, preferred_element_type=jnp.float32)
+            + bias.astype(jnp.float32)).astype(got.dtype)
+        tol = 2e-2 if dt == jnp.bfloat16 else 1e-4
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+        med = time_call(jax.jit(fused_fn), a, b, bias)
+        rl = gemm_roofline(m, n, k, tile, dt)
+        rec = _record(
+            m, n, k, dt, tile, resolution.source, med * 1e-6, rl.time_s,
+            "fused_epilogue",
+            epilogue=FUSED_EPILOGUE,
+            planned_q_bytes_fused=q_fused,
+            planned_q_bytes_unfused=q_unfused,
+            planned_q_saved_frac=1.0 - q_fused / q_unfused,
+            xla_bytes_fused=xla_fused,
+            xla_bytes_unfused=xla_unfused,
+            numerics_ok=True)
+        note = _delta_note(rec, base_idx, "planned_q_bytes_fused") \
+            if base_idx else "baseline=none"
+        emit(f"gemm_fused_{dt.name}_m{m}", med,
+             f"epilogue={FUSED_EPILOGUE};tile={tile.bm}x{tile.bn}x{tile.bk};"
+             f"plannedQ_fused={q_fused / 1e6:.3f}MB;"
+             f"plannedQ_unfused={q_unfused / 1e6:.3f}MB;"
+             f"saved={100 * rec['planned_q_saved_frac']:.1f}%;"
+             f"xla_bytes_fused={xla_fused / 1e6:.3f}MB;"
+             f"xla_bytes_unfused={xla_unfused / 1e6:.3f}MB;{note}")
+        # A fused >= unfused regression is check_baseline's job to flag —
+        # raising here would skip write_json and lose the very numbers
+        # the CI artifact exists to preserve.
+        if records is not None:
+            records.append(rec)
+
+
 def run_tuned(sizes=(128, 256), dtypes=(jnp.float32,), iters=2,
-              max_candidates=4, records=None):
+              max_candidates=4, records=None, base_idx=()):
     """Tuned-vs-analytic comparison (the ``--tuned`` mode).
 
     Interpret-mode timings on CPU are only *relatively* meaningful — which
@@ -106,23 +245,56 @@ def run_tuned(sizes=(128, 256), dtypes=(jnp.float32,), iters=2,
                                 warmup=1, iters=iters)
             speedup = analytic_s / tuned_s
             rl = gemm_roofline(m, n, k, res.config, dt)
+            rec = _record(
+                m, n, k, dt, res.config, res.source,
+                tuned_s, rl.time_s, "tuned",
+                analytic_config={"bm": analytic.bm, "bn": analytic.bn,
+                                 "bk": analytic.bk,
+                                 "order": analytic.order},
+                analytic_median_s=float(analytic_s),
+                tuned_vs_analytic_speedup=float(speedup),
+                candidates_tried=entry.n_tried if entry else 0)
+            note = _delta_note(rec, base_idx, "median_s") if base_idx \
+                else "baseline=none"
             emit(f"gemm_tuned_{dt.name}_{size}", tuned_s * 1e6,
                  f"tuned={res.config.bm}x{res.config.bn}x{res.config.bk};"
                  f"analytic={analytic.bm}x{analytic.bn}x{analytic.bk};"
                  f"analytic_us={analytic_s * 1e6:.1f};"
                  f"speedup={speedup:.2f}x;"
                  f"tried={entry.n_tried if entry else 0};"
-                 f"registry_source={res.source}")
+                 f"registry_source={res.source};{note}")
             if records is not None:
-                records.append(_record(
-                    m, n, k, dt, res.config, res.source,
-                    tuned_s, rl.time_s,
-                    analytic_config={"bm": analytic.bm, "bn": analytic.bn,
-                                     "bk": analytic.bk,
-                                     "order": analytic.order},
-                    analytic_median_s=float(analytic_s),
-                    tuned_vs_analytic_speedup=float(speedup),
-                    candidates_tried=entry.n_tried if entry else 0))
+                records.append(rec)
+
+
+def check_baseline(records, base_idx) -> int:
+    """CI gate: fail if the fused path regresses planned bytes vs the
+    committed baseline (or stops beating the unfused path).
+
+    ``base_idx`` is the already-parsed index from ``_baseline_index``
+    (empty when no baseline file was readable — the fused-vs-unfused
+    invariant is still enforced)."""
+    failures = 0
+    for rec in records:
+        if rec["kind"] != "fused_epilogue":
+            continue
+        if rec["planned_q_bytes_fused"] >= rec["planned_q_bytes_unfused"]:
+            print(f"REGRESSION {rec['shape']}/{rec['dtype']}: fused planned "
+                  f"bytes not below unfused")
+            failures += 1
+        base = base_idx.get(("fused_epilogue", tuple(rec["shape"]),
+                             rec["dtype"]))
+        if base is None:
+            continue
+        if rec["planned_q_bytes_fused"] > base["planned_q_bytes_fused"]:
+            print(f"REGRESSION {rec['shape']}/{rec['dtype']}: planned fused "
+                  f"bytes {rec['planned_q_bytes_fused']:.0f} > baseline "
+                  f"{base['planned_q_bytes_fused']:.0f}")
+            failures += 1
+    if not failures:
+        print("# baseline check OK (fused planned bytes <= baseline, "
+              "< unfused)")
+    return failures
 
 
 def write_json(records, path=DEFAULT_JSON_PATH):
@@ -149,20 +321,43 @@ def main(argv=None):
     ap.add_argument("--json", default=DEFAULT_JSON_PATH,
                     help="output path for machine-readable results "
                          "('' disables)")
+    ap.add_argument("--baseline", default=DEFAULT_JSON_PATH,
+                    help="committed baseline JSON to print deltas against")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="exit nonzero if the fused path regresses planned "
+                         "bytes vs the baseline (CI gate)")
+    ap.add_argument("--skip-fused", action="store_true",
+                    help="skip the fused-epilogue section")
     args = ap.parse_args(argv)
     if any(s <= 0 for s in args.sizes):
         ap.error(f"--sizes must be positive, got {args.sizes}")
     if args.iters <= 0 or args.max_candidates <= 0:
         ap.error("--iters and --max-candidates must be positive")
 
+    base_idx = {}
+    try:
+        base_idx = _baseline_index(
+            json.loads(pathlib.Path(args.baseline).read_text()))
+    except (OSError, ValueError):
+        if args.check_baseline:
+            print(f"# no readable baseline at {args.baseline!r}; the gate "
+                  "checks only the fused-vs-unfused invariant")
+
     records = []
     run(records=records)
+    if not args.skip_fused:
+        run_fused(records=records, base_idx=base_idx)
     if args.tuned:
         run_tuned(sizes=tuple(args.sizes), iters=args.iters,
-                  max_candidates=args.max_candidates, records=records)
+                  max_candidates=args.max_candidates, records=records,
+                  base_idx=base_idx)
+    rc = 0
+    if args.check_baseline:
+        rc = check_baseline(records, base_idx)
     if args.json:
         write_json(records, args.json)
+    return rc
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

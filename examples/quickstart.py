@@ -16,7 +16,7 @@ import numpy as np
 from repro.core import (V5E, arithmetic_intensity_ops_per_byte,
                         choose_schedule, io_volume_elements,
                         io_lower_bound_elements, solve_tile_config)
-from repro.kernels import ca_mmm_padded
+from repro.kernels import ca_mmm_any
 
 
 def main():
@@ -37,7 +37,7 @@ def main():
     rng = np.random.RandomState(0)
     a = jnp.asarray(rng.randn(512, 384), jnp.float32)
     b = jnp.asarray(rng.randn(384, 256), jnp.float32)
-    c = ca_mmm_padded(a, b, interpret=True)
+    c = ca_mmm_any(a, b, interpret=True)
     err = float(jnp.max(jnp.abs(c - a @ b)))
     print(f"\nPallas CA-MMM (interpret) vs oracle: max|err| = {err:.2e}")
 

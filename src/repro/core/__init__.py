@@ -6,6 +6,7 @@ from repro.core.io_model import (
     TileConfig,
     arithmetic_intensity_ops_per_byte,
     computational_intensity,
+    epilogue_q_elements,
     gemm_roofline,
     io_lower_bound_elements,
     io_volume_elements,
@@ -15,6 +16,7 @@ from repro.core.io_model import (
 from repro.core.gemm import (
     ca_einsum, ca_matmul, gemm_mode, get_gemm_mode, plan_for, set_gemm_mode,
 )
+from repro.kernels.epilogue import Epilogue, EpilogueSpec
 from repro.core.distributed import (
     DistributedCost,
     choose_schedule,
@@ -27,9 +29,9 @@ __all__ = [
     "TpuTarget", "V5E", "V5P", "get_target",
     "TileConfig", "computational_intensity", "arithmetic_intensity_ops_per_byte",
     "io_volume_elements", "io_lower_bound_elements", "solve_tile_config",
-    "vmem_quantum", "gemm_roofline",
+    "vmem_quantum", "gemm_roofline", "epilogue_q_elements",
     "ca_matmul", "ca_einsum", "gemm_mode", "get_gemm_mode", "set_gemm_mode",
-    "plan_for",
+    "plan_for", "Epilogue", "EpilogueSpec",
     "DistributedCost", "choose_schedule", "dist_matmul",
     "dist_matmul_reference", "estimate_cost",
 ]

@@ -8,6 +8,12 @@
   this CPU container for model smoke tests/examples, and on TPU for shapes
   the planner deems too small to benefit.
 
+Bias / activation / GLU-gate / residual consumers of the GEMM output pass
+an :class:`Epilogue`: on the kernel paths the elementwise chain executes
+inside the drain phase (riding the single mandatory write-back of paper
+Sec. 4.4 — zero extra output traffic); on the XLA path the same fp32
+reference semantics apply, so numerics are mode-independent.
+
 The *plan* (tile solve) is computed in all modes, so the I/O model is part
 of the traced program's metadata regardless of backend, and the dry-run /
 benchmarks can report planned Q alongside compiled HLO bytes.
@@ -24,6 +30,7 @@ import jax.numpy as jnp
 from repro.core.hardware import TpuTarget, V5E
 from repro.core.io_model import TileConfig
 from repro.kernels import ops as kops
+from repro.kernels.epilogue import Epilogue, apply_reference
 
 _state = threading.local()
 
@@ -53,18 +60,36 @@ class gemm_mode:
         set_gemm_mode(self.prev)
 
 
-def plan_for(m: int, n: int, k: int, dtype, hw: TpuTarget = V5E) -> TileConfig:
+def plan_for(m: int, n: int, k: int, dtype, hw: TpuTarget = V5E,
+             epilogue: str = "none", layout: str = "nn") -> TileConfig:
     """Resolve the tile plan through the kernel-config registry.
 
     Precedence is cache hit > autotune (if ``REPRO_AUTOTUNE=1``) > the
     analytic :func:`solve_tile_config` — so by default this is exactly the
     paper's model, and a tuned deployment transparently serves measured
-    configs.  The registry memoizes per key, replacing the old local
-    ``_plan_cache``.
+    configs.  ``epilogue`` (spec tag) and ``layout`` ('nn'/'nt'/'tn') key
+    fused and transpose-streaming kernels distinctly.
     """
     from repro.tuning import get_registry  # lazy: tuning imports kernels
 
-    return get_registry().resolve(m, n, k, dtype=dtype, hw=hw)
+    return get_registry().resolve(m, n, k, dtype=dtype, hw=hw,
+                                  epilogue=epilogue, layout=layout)
+
+
+def _flatten_epilogue(epilogue: Optional[Epilogue], lead, m: int, n: int):
+    """Collapse leading batch dims of the (..., n) epilogue operands."""
+    if epilogue is None:
+        return None
+    mul = epilogue.mul
+    residual = epilogue.residual
+    if mul is not None:
+        assert mul.shape[-1] == n, (mul.shape, n)
+        mul = mul.reshape(m, n)
+    if residual is not None:
+        assert residual.shape[-1] == n, (residual.shape, n)
+        residual = residual.reshape(m, n)
+    return Epilogue(bias=epilogue.bias, activation=epilogue.activation,
+                    mul=mul, residual=residual)
 
 
 def ca_matmul(
@@ -74,8 +99,10 @@ def ca_matmul(
     out_dtype=None,
     hw: TpuTarget = V5E,
     mode: Optional[str] = None,
+    epilogue: Optional[Epilogue] = None,
 ) -> jax.Array:
-    """``x @ w`` with leading batch dims collapsed into the GEMM m-dim.
+    """``epilogue(x @ w)`` with leading batch dims collapsed into the GEMM
+    m-dim.
 
     x: (..., K), w: (K, N) -> (..., N).  This covers the projections, FFNs,
     expert matmuls and logit heads of every architecture in configs/.
@@ -92,13 +119,18 @@ def ca_matmul(
 
     if mode == "xla" or m == 0:
         acc = jnp.float32 if not jnp.issubdtype(x.dtype, jnp.integer) else jnp.int32
-        y = jnp.dot(x, w.astype(x.dtype) if acc != jnp.int32 else w,
+        z = jnp.dot(x, w.astype(x.dtype) if acc != jnp.int32 else w,
                     preferred_element_type=acc)
-        return y.astype(out_dtype)
+        if epilogue is not None:
+            z = apply_reference(z, epilogue.spec(), epilogue.operands())
+        return z.astype(out_dtype)
 
     x2 = x.reshape(m, k)
-    tile = plan_for(m, n, k, x.dtype, hw)
-    y2 = kops.ca_matmul_trainable(x2, w, tile, mode == "interpret")
+    epi2 = _flatten_epilogue(epilogue, lead, m, n)
+    tag = epi2.spec().tag() if epi2 is not None else "none"
+    tile = plan_for(m, n, k, x.dtype, hw, epilogue=tag)
+    y2 = kops.fused_matmul(x2, w, epi2, tile, interpret=(mode == "interpret"),
+                           out_dtype=out_dtype)
     return y2.reshape(*lead, n).astype(out_dtype)
 
 

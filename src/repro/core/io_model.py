@@ -84,6 +84,25 @@ def io_lower_bound_elements(m: int, n: int, k: int, s_words: int) -> float:
     return 2.0 * m * n * k / math.sqrt(s_words) + m * n
 
 
+def epilogue_q_elements(m: int, n: int, n_stream_mn: int = 0,
+                        has_bias: bool = False, fused: bool = True) -> float:
+    """Extra slow-memory traffic (elements) of a GEMM epilogue.
+
+    Fused (Sec. 4.4 extension): the elementwise chain runs on the VMEM
+    accumulator during the drain, so the output write is already counted
+    by Eq. 6's ``mn`` term — only the epilogue's *operand reads* are new
+    (each streamed (m, n) gate/residual once, plus a bias row).
+
+    Unfused (separate XLA op): the epilogue additionally re-reads the
+    GEMM result and re-writes the final output — one full (m, n) round
+    trip (``2mn``) that the fused drain never pays.
+    """
+    q = float(n_stream_mn) * m * n + (n if has_bias else 0)
+    if not fused:
+        q += 2.0 * m * n
+    return q
+
+
 def drain_overhead_fraction(m: int, n: int, k: int, y_c: int, n_c: int) -> float:
     """Sec. 4.4: cycles draining C vs. compute cycles.
 
@@ -127,7 +146,9 @@ def memory_utilization(bm: int, bn: int, bk: int, itemsize_in: int,
 
 def tile_vmem_bytes(bm: int, bn: int, bk: int, itemsize_in: int,
                     acc_bytes: int = 4, itemsize_out: Optional[int] = None,
-                    double_buffer_out: bool = False) -> int:
+                    double_buffer_out: bool = False,
+                    epilogue_mn_ops: int = 0,
+                    epilogue_bias: bool = False) -> int:
     """VMEM bytes claimed by one kernel instance.
 
     A and B stream blocks are double-buffered (Pallas pipeline = the
@@ -136,6 +157,10 @@ def tile_vmem_bytes(bm: int, bn: int, bk: int, itemsize_in: int,
     NOT double-buffer it, which is exactly the sqrt(2) intensity win the
     paper claims over Dou/Kumar.  ``double_buffer_out=True`` models the
     prior-work layout for the ablation benchmark.
+
+    A fused epilogue parks its operands in VMEM alongside the accumulator:
+    one (bm, bn) tile per streamed gate/residual (fetched once per (i, j)
+    step — the index map ignores k, so no double buffer) plus a bias row.
     """
     itemsize_out = itemsize_out if itemsize_out is not None else itemsize_in
     stream = 2 * (bm * bk + bk * bn) * itemsize_in
@@ -143,7 +168,10 @@ def tile_vmem_bytes(bm: int, bn: int, bk: int, itemsize_in: int,
     out = bm * bn * itemsize_out  # output block written at drain
     if double_buffer_out:
         acc *= 2
-    return stream + acc + out
+    epi = epilogue_mn_ops * bm * bn * itemsize_in
+    if epilogue_bias:
+        epi += bn * itemsize_in
+    return stream + acc + out + epi
 
 
 # ---------------------------------------------------------------------------

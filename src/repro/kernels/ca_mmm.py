@@ -17,7 +17,25 @@ Schedule (identical to the paper's, per DESIGN.md §2):
   on TPU the MXU pipelines fp accumulation natively, so the paper's
   integer-only k-inner variant (Sec. 4.2) is legal for all dtypes.
 
-Tile sizes (bm, bn, bk) come from :func:`repro.core.io_model.solve_tile_config`,
+Ragged shapes run **natively**: the grid is ceil-divided and edge tiles
+are masked in-kernel (zero fill for ``plus_times``, ``+inf`` for
+``min_plus``) — no padded operand copies in HBM.  The drain store is
+predicated by Pallas's block bounds, so a ragged C tile still causes
+exactly one (partial) write-back.
+
+The drain can also run a fused **epilogue** (bias / activation / GLU-gate
+/ residual, see :mod:`repro.kernels.epilogue`): the elementwise chain
+executes on the VMEM accumulator right before the single write-back, so a
+full projection/FFN layer emits no output traffic beyond Eq. 6's ``mn``
+term plus the epilogue's own operand reads.
+
+``transpose_a`` / ``transpose_b`` stream a transposed operand directly
+(swapped ``index_map`` + in-tile contraction on the other axis), so the
+backward GEMMs ``dC @ B^T`` and ``A^T @ dC`` never materialize ``.T`` in
+HBM — the paper's Sec. 4.3 on-the-fly transpose, done at the BlockSpec.
+
+Tile sizes (bm, bn, bk) come from the kernel-config registry
+(:mod:`repro.tuning`), which wraps :func:`repro.core.io_model.solve_tile_config`,
 the paper's Eq. 5–9 solved over VMEM capacity and (sublane, lane) quanta.
 
 The kernel also supports the **distance product** (min-plus semiring), the
@@ -35,6 +53,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
+from repro.kernels.epilogue import EpilogueSpec, act_fn
 
 
 def _acc_dtype(dtype) -> jnp.dtype:
@@ -43,28 +62,59 @@ def _acc_dtype(dtype) -> jnp.dtype:
     return jnp.dtype(jnp.float32)
 
 
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def layout_tag(transpose_a: bool, transpose_b: bool) -> str:
+    """Canonical operand-layout key: 'nn' | 'nt' | 'tn' | 'tt'."""
+    return ("t" if transpose_a else "n") + ("t" if transpose_b else "n")
+
+
 def _default_tiles(m: int, n: int, k: int, dtype, semiring: str,
-                   bm: Optional[int], bn: Optional[int],
-                   bk: Optional[int]):
+                   bm: Optional[int], bn: Optional[int], bk: Optional[int],
+                   epilogue_tag: str = "none", layout: str = "nn"):
     """None-means-solver: unspecified tile dims come from the registry.
 
     Callers can no longer silently bypass the I/O model with a stale
     literal default — an explicit (bm, bn, bk) is an intentional override,
     anything else is planned (cache > autotune > analytic precedence).
     """
-    if bm is not None and bn is not None and bk is not None:
-        return bm, bn, bk
-    from repro.tuning import get_registry  # lazy: tuning times this module
+    from repro.core.io_model import round_up_to  # lazy: cycle-free anyway
 
-    tile = get_registry().resolve(m, n, k, dtype=dtype, semiring=semiring)
-    return (bm if bm is not None else min(tile.bm, m),
-            bn if bn is not None else min(tile.bn, n),
-            bk if bk is not None else min(tile.bk, k))
+    if not (bm is not None and bn is not None and bk is not None):
+        from repro.tuning import get_registry  # lazy: tuning times this module
+
+        tile = get_registry().resolve(m, n, k, dtype=dtype, semiring=semiring,
+                                      epilogue=epilogue_tag, layout=layout)
+        bm = bm if bm is not None else tile.bm
+        bn = bn if bn is not None else tile.bn
+        bk = bk if bk is not None else tile.bk
+    # Clamp to the (quantized) problem size: a block larger than the
+    # rounded-up dim only wastes VMEM, never changes the result.
+    return (min(bm, round_up_to(m, 8)),
+            min(bn, round_up_to(n, 128)),
+            min(bk, round_up_to(k, 128)))
 
 
-def _mmm_kernel(a_ref, b_ref, c_ref, acc_ref, *, semiring: str):
-    """One grid step: accumulate a (bm, bk) x (bk, bn) product into VMEM."""
+def _mmm_kernel(*refs, semiring: str, spec: Optional[EpilogueSpec],
+                kdim: int, bk: int, transpose_a: bool, transpose_b: bool,
+                save_preact: bool):
+    """One grid step: accumulate a (bm, bk) x (bk, bn) product into VMEM,
+    masked k edge; fused epilogue + single write-back at the drain."""
+    n_extra = 0
+    if spec is not None:
+        n_extra = int(spec.has_bias) + int(spec.has_mul) + int(
+            spec.has_residual)
+    a_ref, b_ref = refs[0], refs[1]
+    extra_refs = refs[2:2 + n_extra]
+    out_refs = refs[2 + n_extra:-1]
+    acc_ref = refs[-1]
+    c_ref = out_refs[0]
+    h_ref = out_refs[1] if save_preact else None
+
     k = pl.program_id(2)
+    nk = pl.num_programs(2)
 
     @pl.when(k == 0)
     def _init():
@@ -73,9 +123,21 @@ def _mmm_kernel(a_ref, b_ref, c_ref, acc_ref, *, semiring: str):
         else:
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    def mask_k(x, axis, fill):
+        # Edge tile on the contraction dim: out-of-range lanes hold
+        # whatever the block fetch padded with (garbage) — neutralize
+        # them (0 for plus_times, +inf for min_plus).  Statically a
+        # no-op when bk divides k.
+        if kdim % bk == 0:
+            return x
+        idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, axis) + k * bk
+        return jnp.where(idx < kdim, x, jnp.asarray(fill, x.dtype))
+
     if semiring == "min_plus":
         a = a_ref[...].astype(jnp.float32)
         b = b_ref[...].astype(jnp.float32)
+        a = mask_k(a, 1, jnp.inf)
+        b = mask_k(b, 0, jnp.inf)
         # Tropical semiring: (min, +). Small bk keeps the broadcast in VMEM.
         cand = jnp.min(a[:, :, None] + b[None, :, :], axis=1)
         acc_ref[...] = jnp.minimum(acc_ref[...], cand)
@@ -87,14 +149,40 @@ def _mmm_kernel(a_ref, b_ref, c_ref, acc_ref, *, semiring: str):
         else:
             a = a_ref[...]
             b = b_ref[...]
-        acc_ref[...] += jnp.dot(a, b, preferred_element_type=acc_t)
+        a = mask_k(a, 0 if transpose_a else 1, 0)
+        b = mask_k(b, 1 if transpose_b else 0, 0)
+        # Contract the k axis of each *stored* tile — a transposed
+        # operand is consumed in its HBM layout (no .T materialization).
+        dims = (((0,) if transpose_a else (1,),
+                 (1,) if transpose_b else (0,)), ((), ()))
+        acc_ref[...] += jax.lax.dot_general(
+            a, b, dims, preferred_element_type=acc_t)
 
-    @pl.when(k == pl.num_programs(2) - 1)
+    @pl.when(k == nk - 1)
     def _drain():
         # Paper Sec. 4.4: the drain is a separate, sequential phase — the
         # single write-back below is all the output traffic this block
-        # ever causes (Q's mn term in Eq. 6).
-        c_ref[...] = acc_ref[...].astype(c_ref.dtype)
+        # ever causes (Q's mn term in Eq. 6).  The fused epilogue rides
+        # that one mandatory write: its elementwise chain runs on the
+        # VMEM accumulator, never on an HBM round trip.
+        z = acc_ref[...]
+        if spec is None or spec.is_identity:
+            if save_preact:
+                h_ref[...] = z.astype(h_ref.dtype)
+            c_ref[...] = z.astype(c_ref.dtype)
+        else:
+            it = iter(extra_refs)
+            zf = z.astype(jnp.float32)
+            if spec.has_bias:
+                zf = zf + next(it)[...].astype(jnp.float32)
+            if save_preact:
+                h_ref[...] = zf.astype(h_ref.dtype)
+            zf = act_fn(spec.activation)(zf)
+            if spec.has_mul:
+                zf = zf * next(it)[...].astype(jnp.float32)
+            if spec.has_residual:
+                zf = zf + next(it)[...].astype(jnp.float32)
+            c_ref[...] = zf.astype(c_ref.dtype)
 
 
 def ca_mmm(
@@ -107,41 +195,99 @@ def ca_mmm(
     out_dtype=None,
     semiring: str = "plus_times",
     interpret: bool = False,
-) -> jax.Array:
-    """C = A @ B with the paper's I/O-minimal schedule.
+    transpose_a: bool = False,
+    transpose_b: bool = False,
+    epilogue: Optional[EpilogueSpec] = None,
+    bias: Optional[jax.Array] = None,
+    mul: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    save_preact: bool = False,
+):
+    """C = op(A) @ op(B) (+ fused epilogue) with the paper's I/O-minimal
+    schedule, for arbitrary (non-tile-multiple) shapes.
 
     Tile dims default to the kernel-config registry's plan (None-means-
-    solver); pass explicit values only to override the model.  Requires
-    m % bm == n % bn == k % bk == 0 (``ops.ca_mmm_padded`` pads).
+    solver); pass explicit values only to override the model.  With
+    ``save_preact`` the drain additionally writes the fp32 pre-activation
+    (z + bias) and the call returns ``(y, preact)`` — the saved tensor the
+    trainable VJP differentiates the activation against.
     """
-    m, kdim = a.shape
-    k2, n = b.shape
+    if transpose_a:
+        kdim, m = a.shape
+    else:
+        m, kdim = a.shape
+    if transpose_b:
+        n, k2 = b.shape
+    else:
+        k2, n = b.shape
     assert kdim == k2, f"contraction mismatch {a.shape} @ {b.shape}"
-    bm, bn, bk = _default_tiles(m, n, kdim, a.dtype, semiring, bm, bn, bk)
-    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (
-        f"shapes {(m, n, kdim)} not divisible by tiles {(bm, bn, bk)}")
+    if semiring == "min_plus":
+        assert not (transpose_a or transpose_b or epilogue or save_preact), \
+            "min_plus supports plain (A, B) layouts only"
+    spec = epilogue
+    tag = spec.tag() if spec is not None else "none"
+    layout = layout_tag(transpose_a, transpose_b)
+    bm, bn, bk = _default_tiles(m, n, kdim, a.dtype, semiring, bm, bn, bk,
+                                epilogue_tag=tag, layout=layout)
     acc_t = _acc_dtype(a.dtype) if semiring == "plus_times" else jnp.float32
     out_dtype = out_dtype or (acc_t if acc_t == jnp.int32 else a.dtype)
     if semiring == "min_plus":
         out_dtype = jnp.float32
 
-    grid = (m // bm, n // bn, kdim // bk)
-    kernel = functools.partial(_mmm_kernel, semiring=semiring)
-    return pl.pallas_call(
+    grid = (_ceil(m, bm), _ceil(n, bn), _ceil(kdim, bk))
+
+    if transpose_a:
+        a_spec = pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i))
+    else:
+        a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    if transpose_b:
+        b_spec = pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk))
+    else:
+        b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    in_specs = [a_spec, b_spec]
+    operands = [a, b]
+
+    if spec is not None and not spec.is_identity:
+        if spec.has_bias:
+            assert bias is not None and bias.shape == (n,), (bias, n)
+            # (1, n) layout: a bias row block rides along each (i, j) tile.
+            operands.append(bias.reshape(1, n))
+            in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        for name, arr in (("mul", mul), ("residual", residual)):
+            if getattr(spec, "has_" + name):
+                assert arr is not None and arr.shape == (m, n), (name, arr)
+                # Streamed (m, n) epilogue operand: fetched once per
+                # (i, j) tile (index_map ignores kk — Pallas keeps the
+                # buffer across the k loop), consumed at the drain.
+                operands.append(arr)
+                in_specs.append(
+                    pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+
+    out_shape = [jax.ShapeDtypeStruct((m, n), out_dtype)]
+    out_specs = [pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))]
+    if save_preact:
+        out_shape.append(jax.ShapeDtypeStruct((m, n), jnp.float32))
+        out_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+
+    kernel = functools.partial(
+        _mmm_kernel, semiring=semiring, spec=spec, kdim=kdim, bk=bk,
+        transpose_a=transpose_a, transpose_b=transpose_b,
+        save_preact=save_preact)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bm, bn), acc_t)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(a, b)
+    )(*operands)
+    if save_preact:
+        return out[0], out[1]
+    return out[0]
 
 
 def ca_mmm_k_outer(
@@ -161,6 +307,7 @@ def ca_mmm_k_outer(
     ``mn (1 + k(1/x+1/y))`` to ``mnk/bk · 2 + ...``.  Used by
     ``benchmarks/bench_intensity.py`` to demonstrate the model's prediction.
     Tile dims default to the registry plan, as in :func:`ca_mmm`.
+    Tile-divisible shapes only (ablation; callers pad).
     """
     m, kdim = a.shape
     _, n = b.shape

@@ -1,0 +1,176 @@
+"""Fused GEMM epilogue: bias / activation / gating / residual riding the
+drain phase's single write-back.
+
+The paper's drain separation (Sec. 4.4) means each C tile is written to
+slow memory exactly once, from the VMEM accumulator.  Any elementwise
+consumer of C that runs as a *separate* XLA op re-reads the (m, n) result
+from HBM and writes it again — two extra slow-memory round trips the
+paper's Q (Eq. 6) never budgeted for.  Executing the epilogue inside the
+drain ``@pl.when`` makes it free: the only added traffic is the epilogue's
+own operands (a bias row, an optional streamed (m, n) gate/residual),
+which any schedule must read anyway.
+
+This module holds the pieces shared by the kernel, the ops-layer VJP, the
+XLA reference path and the tuning subsystem:
+
+* :class:`EpilogueSpec` — the *static* shape of an epilogue (which slots
+  are present, which activation).  Hashable, so it can ride custom-VJP
+  ``nondiff_argnums`` and registry cache keys.
+* :class:`Epilogue` — the user-facing bundle: spec + the actual arrays.
+* ``apply_reference`` — fp32 oracle semantics, used by the XLA dispatch
+  mode and by tests as the numerics contract.
+* ``tag`` / ``stream_cost`` — the canonical string form used in tuning
+  cache keys and the extra VMEM/HBM the tuner must budget for it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ACTIVATIONS = ("none", "relu", "gelu", "silu")
+
+
+def act_fn(name: str):
+    """fp32 elementwise activation by name (``none`` is identity)."""
+    if name == "none":
+        return lambda x: x
+    if name == "relu":
+        return jax.nn.relu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "silu":
+        return jax.nn.silu
+    raise ValueError(f"unknown activation {name!r}; expected {ACTIVATIONS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueSpec:
+    """Static epilogue description: presence flags + activation name.
+
+    Order of application (all math in fp32, matching ``apply_reference``):
+    ``y = act(z + bias) * mul + residual`` — each stage optional.
+    """
+
+    activation: str = "none"
+    has_bias: bool = False
+    has_mul: bool = False
+    has_residual: bool = False
+
+    def __post_init__(self):
+        assert self.activation in ACTIVATIONS, self.activation
+
+    @property
+    def is_identity(self) -> bool:
+        return (self.activation == "none" and not self.has_bias
+                and not self.has_mul and not self.has_residual)
+
+    @property
+    def needs_preact(self) -> bool:
+        """Backward needs the saved pre-activation z+bias iff some stage is
+        nonlinear in it (activation) or re-reads it (the mul gate's grad)."""
+        return self.activation != "none" or self.has_mul
+
+    def tag(self) -> str:
+        """Canonical cache-key fragment, e.g. ``bias+silu+mul+res``."""
+        if self.is_identity:
+            return "none"
+        parts = []
+        if self.has_bias:
+            parts.append("bias")
+        if self.activation != "none":
+            parts.append(self.activation)
+        if self.has_mul:
+            parts.append("mul")
+        if self.has_residual:
+            parts.append("res")
+        return "+".join(parts)
+
+
+IDENTITY = EpilogueSpec()
+
+
+def spec_from_tag(tag: str) -> EpilogueSpec:
+    """Inverse of :meth:`EpilogueSpec.tag` — the one parser of tag strings.
+
+    Rejects unknown parts instead of dropping them, so a tag minted by a
+    newer writer can never silently time/plan the wrong kernel variant.
+    """
+    if tag == "none":
+        return IDENTITY
+    parts = tag.split("+")
+    activation = "none"
+    flags = {"bias": False, "mul": False, "res": False}
+    for p in parts:
+        if p in flags:
+            flags[p] = True
+        elif p in ACTIVATIONS and p != "none":
+            activation = p
+        else:
+            raise ValueError(f"unknown epilogue tag part {p!r} in {tag!r}")
+    return EpilogueSpec(activation=activation, has_bias=flags["bias"],
+                        has_mul=flags["mul"], has_residual=flags["res"])
+
+
+def stream_cost(tag: str) -> Tuple[int, bool]:
+    """(number of streamed (m, n) operands, has_bias) for a spec tag.
+
+    The tuning space generator budgets VMEM for these extra drain-phase
+    tiles; the I/O model adds their one-time HBM reads to planned Q.
+    """
+    spec = spec_from_tag(tag)
+    return int(spec.has_mul) + int(spec.has_residual), spec.has_bias
+
+
+@dataclasses.dataclass
+class Epilogue:
+    """User-facing epilogue: optional arrays + activation.
+
+    ``bias``: (n,) added to each output row; ``mul``: (..., n) streamed
+    gate multiplied after activation (GLU-style); ``residual``: (..., n)
+    added last.  Leading dims of mul/residual must match the GEMM lhs.
+    """
+
+    bias: Optional[jax.Array] = None
+    activation: str = "none"
+    mul: Optional[jax.Array] = None
+    residual: Optional[jax.Array] = None
+
+    def spec(self) -> EpilogueSpec:
+        return EpilogueSpec(
+            activation=self.activation,
+            has_bias=self.bias is not None,
+            has_mul=self.mul is not None,
+            has_residual=self.residual is not None,
+        )
+
+    def operands(self) -> Dict[str, jax.Array]:
+        out = {}
+        if self.bias is not None:
+            out["bias"] = self.bias
+        if self.mul is not None:
+            out["mul"] = self.mul
+        if self.residual is not None:
+            out["residual"] = self.residual
+        return out
+
+
+def apply_reference(z: jax.Array, spec: EpilogueSpec,
+                    operands: Dict[str, jax.Array]) -> jax.Array:
+    """Oracle semantics: fp32 elementwise chain on the accumulator ``z``.
+
+    Returns fp32 (caller casts to the output dtype) so the fused kernel,
+    the XLA dispatch path and the VJP all share one numerics definition.
+    """
+    zf = z.astype(jnp.float32)
+    if spec.has_bias:
+        zf = zf + operands["bias"].astype(jnp.float32)
+    zf = act_fn(spec.activation)(zf)
+    if spec.has_mul:
+        zf = zf * operands["mul"].astype(jnp.float32)
+    if spec.has_residual:
+        zf = zf + operands["residual"].astype(jnp.float32)
+    return zf

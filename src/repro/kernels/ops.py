@@ -1,31 +1,47 @@
 """jit-ready wrappers around the Pallas CA-MMM kernel.
 
-Adds: shape padding to tile multiples, dtype plumbing, and a custom VJP so
-the kernel is trainable (both backward GEMMs reuse the same I/O-minimal
-schedule — dA = dC @ B^T and dB = A^T @ dC are themselves CA-MMMs).
+Adds: dtype plumbing, the fused-epilogue entry point and a custom VJP so
+the kernel is trainable.  Ragged shapes are handled *inside* the kernel
+(ceil-div grid + masked edge tiles) — the old ``jnp.pad``/slice copies,
+which cost two extra HBM round trips per ragged GEMM, are gone.
+
+Both backward GEMMs reuse the same I/O-minimal schedule and stream the
+transposed operand directly from its HBM layout (``transpose_a`` /
+``transpose_b`` BlockSpec swaps): dA = dC @ B^T and dB = A^T @ dC never
+materialize ``.T``.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.io_model import TileConfig, round_up_to
+from repro.kernels.epilogue import (Epilogue, EpilogueSpec, IDENTITY, act_fn,
+                                    apply_reference)
 import repro.kernels.ca_mmm as kern
 
 
 def _resolve_tile(m: int, n: int, k: int, dtype,
-                  semiring: str = "plus_times") -> TileConfig:
+                  semiring: str = "plus_times",
+                  epilogue: str = "none", layout: str = "nn") -> TileConfig:
     """Default tile plan: the kernel-config registry (cache > tune > model)."""
     from repro.tuning import get_registry  # lazy: tuning times this module
 
-    return get_registry().resolve(m, n, k, dtype=dtype, semiring=semiring)
+    return get_registry().resolve(m, n, k, dtype=dtype, semiring=semiring,
+                                  epilogue=epilogue, layout=layout)
 
 
 def _pad2(x: jax.Array, r0: int, r1: int) -> jax.Array:
+    """Pad a 2D array up to multiples of (r0, r1).
+
+    Only the ``k_outer`` ablation still needs this (its kernel keeps the
+    divisibility requirement); the production schedule runs ragged shapes
+    natively.
+    """
     p0 = round_up_to(x.shape[0], r0) - x.shape[0]
     p1 = round_up_to(x.shape[1], r1) - x.shape[1]
     if p0 or p1:
@@ -33,7 +49,7 @@ def _pad2(x: jax.Array, r0: int, r1: int) -> jax.Array:
     return x
 
 
-def ca_mmm_padded(
+def ca_mmm_any(
     a: jax.Array,
     b: jax.Array,
     tile: Optional[TileConfig] = None,
@@ -42,56 +58,145 @@ def ca_mmm_padded(
     interpret: bool = False,
     semiring: str = "plus_times",
 ) -> jax.Array:
-    """CA-MMM for arbitrary (m, k) x (k, n): pads to the plan, slices back."""
+    """CA-MMM for arbitrary (m, k) x (k, n): masked edge tiles, no padding."""
     m, k = a.shape
     _, n = b.shape
     if tile is None:
         tile = _resolve_tile(m, n, k, a.dtype, semiring)
-    bm = min(tile.bm, round_up_to(m, 8))
-    bn = min(tile.bn, round_up_to(n, 128))
-    bk = min(tile.bk, round_up_to(k, 128))
-    ap = _pad2(a, bm, bk)
-    bp = _pad2(b, bk, bn)
-    if semiring == "min_plus":
-        # Padding rows/cols must not win the min: pad with +inf on k.
-        if ap.shape[0] > m or ap.shape[1] > k:
-            ap = ap.at[m:, :].set(jnp.inf).at[:, k:].set(jnp.inf)
-        if bp.shape[0] > k or bp.shape[1] > n:
-            bp = bp.at[k:, :].set(jnp.inf).at[:, n:].set(jnp.inf)
-    c = kern.ca_mmm(ap, bp, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
-                    semiring=semiring, interpret=interpret)
-    return c[:m, :n]
+    return kern.ca_mmm(a, b, bm=tile.bm, bn=tile.bn, bk=tile.bk,
+                       out_dtype=out_dtype, semiring=semiring,
+                       interpret=interpret)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+# Historical name (the wrapper used to pad to tile multiples and slice the
+# result back); kept so downstream callers keep working.
+ca_mmm_padded = ca_mmm_any
+
+
+# ---------------------------------------------------------------------------
+# Fused-epilogue trainable matmul (custom VJP)
+# ---------------------------------------------------------------------------
+
+def _run_fused(a, b, extras: Dict[str, jax.Array], spec: EpilogueSpec,
+               tile: Optional[TileConfig], interpret: bool,
+               out_dtype_name: Optional[str], save_preact: bool):
+    m, k = a.shape
+    _, n = b.shape
+    if tile is None:
+        tile = _resolve_tile(m, n, k, a.dtype, epilogue=spec.tag())
+    out_dtype = jnp.dtype(out_dtype_name) if out_dtype_name else None
+    return kern.ca_mmm(
+        a, b, bm=tile.bm, bn=tile.bn, bk=tile.bk, out_dtype=out_dtype,
+        interpret=interpret, epilogue=spec,
+        bias=extras.get("bias"), mul=extras.get("mul"),
+        residual=extras.get("residual"), save_preact=save_preact)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _fused_mm(a, b, extras, spec: EpilogueSpec, tile, interpret,
+              out_dtype_name):
+    return _run_fused(a, b, extras, spec, tile, interpret, out_dtype_name,
+                      save_preact=False)
+
+
+def _fused_fwd(a, b, extras, spec, tile, interpret, out_dtype_name):
+    if spec.needs_preact:
+        y, h = _run_fused(a, b, extras, spec, tile, interpret,
+                          out_dtype_name, save_preact=True)
+    else:
+        y = _run_fused(a, b, extras, spec, tile, interpret, out_dtype_name,
+                       save_preact=False)
+        h = None
+    # Backward reads only the *value* of the mul gate; bias/residual are
+    # needed solely for their dtype (the gradient must match the primal
+    # aval) — save an empty carrier instead of pinning an activation-
+    # sized buffer until the backward pass.
+    saved = {k: (v if k == "mul" else jnp.empty((0,), v.dtype))
+             for k, v in extras.items()}
+    return y, (a, b, saved, h)
+
+
+def _fused_bwd(spec: EpilogueSpec, tile, interpret, out_dtype_name, res, g):
+    a, b, extras, h = res
+    g32 = g.astype(jnp.float32)
+    d_extras = {}
+    if spec.has_residual:
+        d_extras["residual"] = g.astype(extras["residual"].dtype)
+    if spec.has_mul:
+        # d_mul needs the post-activation; recompute it from the saved
+        # pre-activation h (the fused forward never wrote act(h) to HBM).
+        d_extras["mul"] = (g32 * act_fn(spec.activation)(h)).astype(
+            extras["mul"].dtype)
+        d_p = g32 * extras["mul"].astype(jnp.float32)
+    else:
+        d_p = g32
+    if spec.activation != "none":
+        # Activation derivative recomputed from the saved pre-activation.
+        _, act_vjp = jax.vjp(act_fn(spec.activation), h)
+        dz = act_vjp(d_p)[0]
+    else:
+        dz = d_p
+    if spec.has_bias:
+        d_extras["bias"] = dz.sum(axis=0).astype(extras["bias"].dtype)
+
+    dz_c = dz.astype(a.dtype)
+    m, k = a.shape
+    n = b.shape[1]
+    # Both backward products run through the same communication-avoiding
+    # schedule, streaming the transposed operand straight from its stored
+    # layout (BlockSpec index swap — no .T materialization in HBM).
+    da = kern.ca_mmm(dz_c, b, transpose_b=True, interpret=interpret,
+                     out_dtype=a.dtype,
+                     **_tile_kw(m, k, n, a.dtype, "nt"))
+    db = kern.ca_mmm(a, dz_c, transpose_a=True, interpret=interpret,
+                     out_dtype=b.dtype,
+                     **_tile_kw(k, n, m, a.dtype, "tn"))
+    return da, db, d_extras
+
+
+def _tile_kw(m: int, n: int, k: int, dtype, layout: str) -> dict:
+    t = _resolve_tile(m, n, k, dtype, layout=layout)
+    return {"bm": t.bm, "bn": t.bn, "bk": t.bk}
+
+
+_fused_mm.defvjp(_fused_fwd, _fused_bwd)
+
+
+def fused_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    epilogue: Optional[Epilogue] = None,
+    tile: Optional[TileConfig] = None,
+    *,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """``epilogue(A @ B)`` in one kernel pass — trainable (custom VJP).
+
+    The epilogue executes inside the drain phase on the VMEM accumulator;
+    the only HBM traffic beyond the GEMM's Eq. 6 volume is the epilogue's
+    own operand reads (bias row, streamed gate/residual tiles).
+    """
+    spec = epilogue.spec() if epilogue is not None else IDENTITY
+    extras = epilogue.operands() if epilogue is not None else {}
+    out_name = jnp.dtype(out_dtype).name if out_dtype is not None else None
+    return _fused_mm(a, b, extras, spec, tile, interpret, out_name)
+
+
 def ca_matmul_trainable(a: jax.Array, b: jax.Array,
                         tile: Optional[TileConfig] = None,
                         interpret: bool = False) -> jax.Array:
-    return ca_mmm_padded(a, b, tile, interpret=interpret)
-
-
-def _fwd(a, b, tile, interpret):
-    return ca_matmul_trainable(a, b, tile, interpret), (a, b)
-
-
-def _bwd(tile, interpret, res, g):
-    a, b = res
-    # Both backward products run through the same communication-avoiding
-    # schedule; transposes are layout changes fused by XLA.
-    ga = ca_mmm_padded(g.astype(a.dtype), b.T.astype(a.dtype), None,
-                       interpret=interpret)
-    gb = ca_mmm_padded(a.T, g.astype(a.dtype), None, interpret=interpret)
-    return ga.astype(a.dtype), gb.astype(b.dtype)
-
-
-ca_matmul_trainable.defvjp(_fwd, _bwd)
+    """Plain trainable CA-MMM (identity epilogue)."""
+    return fused_matmul(a, b, None, tile, interpret=interpret)
 
 
 def distance_product(a: jax.Array, b: jax.Array, *, interpret: bool = False,
                      tile: Optional[TileConfig] = None) -> jax.Array:
-    """Tropical (min, +) matrix product — paper Sec. 5.2 flexibility demo."""
-    if tile is None:
-        # The broadcast in the min-plus kernel is O(bm*bk*bn) VMEM-heavy;
-        # use small blocks.
-        tile = TileConfig(bm=128, bn=128, bk=128)
-    return ca_mmm_padded(a, b, tile, interpret=interpret, semiring="min_plus")
+    """Tropical (min, +) matrix product — paper Sec. 5.2 flexibility demo.
+
+    The tile plan resolves through the kernel-config registry with
+    ``semiring="min_plus"`` — the registry's analytic path draws from
+    :func:`repro.tuning.space.candidate_tile_configs`, whose VMEM guard
+    bounds the kernel's O(bm·bk·bn) broadcast.
+    """
+    return ca_mmm_any(a, b, tile, interpret=interpret, semiring="min_plus")

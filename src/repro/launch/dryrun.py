@@ -194,6 +194,12 @@ def run_cells(cells, multi_pod: bool, out_dir: str) -> int:
             art = lower_cell(arch, shape_name, multi_pod)
             with open(out_path, "w") as f:
                 json.dump(art, f, indent=1)
+            # A cell that failed in an earlier run leaves a .err next to
+            # the artifact; a later success supersedes it — drop it so
+            # the artifact dir reflects current state only.
+            err_path = out_path + ".err"
+            if os.path.exists(err_path):
+                os.remove(err_path)
             mem_gb = (art["memory"]["argument_bytes"]
                       + art["memory"]["temp_bytes"]) / 2 ** 30
             print(f"OK   {tag}  compile={art['compile_s']}s "

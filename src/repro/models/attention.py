@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.gemm import ca_matmul
+from repro.kernels.epilogue import Epilogue
 from repro.models import common as cm
 from repro.models.common import Defs, ParamDef
 
@@ -207,8 +208,14 @@ def gqa_defs(cfg: ModelConfig, depth_scale: float = 1.0) -> Defs:
 
 
 def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None,
-              step=None, mode: str = "train", max_len: int = None):
-    """mode: train | prefill (returns cache) | decode (uses+updates cache)."""
+              step=None, mode: str = "train", max_len: int = None,
+              residual=None):
+    """mode: train | prefill (returns cache) | decode (uses+updates cache).
+
+    ``residual`` (the block's pre-norm stream) is added inside the output
+    projection's drain phase — the attention block's ``x + attn(...)``
+    costs no extra HBM round trip over the GEMM's mandatory write-back.
+    """
     B, L, d = x.shape
     Dh = cfg.resolved_head_dim
     H, Kv = cfg.n_heads, cfg.n_kv_heads
@@ -241,7 +248,9 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None,
         if mode == "prefill":
             C = cache_len_for(cfg, max_len or L)
             new_cache = kv_cache_from_prefill(k, v, pos2d, C)
-    y = ca_matmul(out.reshape(B, L, H * Dh), p["wo"].astype(dt))
+    epi = Epilogue(residual=residual) if residual is not None else None
+    y = ca_matmul(out.reshape(B, L, H * Dh), p["wo"].astype(dt),
+                  epilogue=epi)
     return y, new_cache
 
 
@@ -302,7 +311,7 @@ def _mla_ckv(p, x, cfg, positions):
 
 
 def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, step=None,
-              mode: str = "train", max_len: int = None):
+              mode: str = "train", max_len: int = None, residual=None):
     """MLA with the compressed-KV cache.
 
     train/prefill: expand k_nope/v from c_kv and run flash attention.
@@ -385,7 +394,9 @@ def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, step=None,
                 c_kv, k_rope = c_kv[:, -C:], k_rope[:, -C:]
                 pos_c = pos_c[:, -C:]
             new_cache = {"c": c_kv, "k_rope": k_rope, "pos": pos_c}
-    y = ca_matmul(out.reshape(B, L, H * m.v_head_dim), p["wo"].astype(dt))
+    epi = Epilogue(residual=residual) if residual is not None else None
+    y = ca_matmul(out.reshape(B, L, H * m.v_head_dim), p["wo"].astype(dt),
+                  epilogue=epi)
     return y, new_cache
 
 

@@ -43,19 +43,23 @@ def transformer_block_defs(cfg: ModelConfig) -> Defs:
 def transformer_block_apply(p, x, cfg: ModelConfig, *, positions,
                             cache=None, step=None, mode="train",
                             max_len=None):
-    h, new_cache = attn.attn_apply(
+    # Both residual adds ride a GEMM drain phase (paper Sec. 4.4): the
+    # attention residual fuses into the output projection, the FFN
+    # residual into the down projection — the block's (tokens, d) stream
+    # is written to HBM exactly once per sub-layer.
+    x, new_cache = attn.attn_apply(
         cm.subtree(p, "attn"),
         cm.rms_norm(x, p["norm_attn/scale"], cfg.norm_eps),
         cfg, positions=positions, cache=cache, step=step, mode=mode,
-        max_len=max_len)
-    x = x + h
+        max_len=max_len, residual=x)
     x = maybe_shard(x, ("batch", "seq", None))
     u = cm.rms_norm(x, p["norm_ffn/scale"], cfg.norm_eps)
     if cfg.moe is not None and cfg.moe.n_experts:
-        h, aux = moe_mod.moe_apply(cm.subtree(p, "moe"), u, cfg)
+        x, aux = moe_mod.moe_apply(cm.subtree(p, "moe"), u, cfg,
+                                   residual=x)
     else:
-        h, aux = cm.mlp_apply(cm.subtree(p, "mlp"), u, cfg.act), 0.0
-    x = x + h
+        x, aux = cm.mlp_apply(cm.subtree(p, "mlp"), u, cfg.act,
+                              residual=x), 0.0
     x = maybe_shard(x, ("batch", "seq", None))
     return x, new_cache, aux
 
@@ -109,11 +113,10 @@ def shared_block_apply(p, x, emb0, cfg: ModelConfig, *, positions,
     u = jnp.concatenate([x, emb0], axis=-1)
     u = cm.rms_norm(u, p["norm_in/scale"], cfg.norm_eps)
     u = ca_matmul(u, p["w_in"].astype(dt))
-    h, new_cache = attn.gqa_apply(
+    x, new_cache = attn.gqa_apply(
         cm.subtree(p, "attn"), u, cfg, positions=positions, cache=cache,
-        step=step, mode=mode, max_len=max_len)
-    x = x + h
+        step=step, mode=mode, max_len=max_len, residual=x)
     u = cm.rms_norm(x, p["norm_ffn/scale"], cfg.norm_eps)
-    x = x + cm.mlp_apply(cm.subtree(p, "mlp"), u, cfg.act)
+    x = cm.mlp_apply(cm.subtree(p, "mlp"), u, cfg.act, residual=x)
     x = maybe_shard(x, ("batch", "seq", None))
     return x, new_cache

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gemm import ca_matmul
+from repro.kernels.epilogue import Epilogue
 
 
 # ---------------------------------------------------------------------------
@@ -165,15 +166,25 @@ def mlp_defs(d: int, f: int, act: str, depth_scale: float = 1.0) -> Defs:
     return defs
 
 
-def mlp_apply(p: Dict[str, jax.Array], x: jax.Array, act: str) -> jax.Array:
+def mlp_apply(p: Dict[str, jax.Array], x: jax.Array, act: str,
+              residual: Optional[jax.Array] = None) -> jax.Array:
+    """SwiGLU / GELU MLP with every epilogue fused into a GEMM drain.
+
+    The activation (and the GLU gate multiply) executes inside the gate
+    GEMM's drain phase; ``residual`` rides the down-projection's single
+    write-back — the (m, n) output never makes an extra HBM round trip
+    for elementwise work (paper Sec. 4.4 extended up the model stack).
+    """
     dt = x.dtype
-    up = ca_matmul(x, p["w_up"].astype(dt))
     if act == "silu":
-        gate = ca_matmul(x, p["w_gate"].astype(dt))
-        h = jax.nn.silu(gate.astype(jnp.float32)).astype(dt) * up
+        up = ca_matmul(x, p["w_up"].astype(dt))
+        h = ca_matmul(x, p["w_gate"].astype(dt),
+                      epilogue=Epilogue(activation="silu", mul=up))
     else:
-        h = jax.nn.gelu(up.astype(jnp.float32)).astype(dt)
-    return ca_matmul(h, p["w_down"].astype(dt))
+        h = ca_matmul(x, p["w_up"].astype(dt),
+                      epilogue=Epilogue(activation="gelu"))
+    down_epi = Epilogue(residual=residual) if residual is not None else None
+    return ca_matmul(h, p["w_down"].astype(dt), epilogue=down_epi)
 
 
 # ---------------------------------------------------------------------------

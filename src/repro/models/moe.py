@@ -49,15 +49,22 @@ def moe_defs(cfg: ModelConfig, depth_scale: float = 1.0) -> Defs:
 
 
 def moe_apply(p: Dict[str, jax.Array], x: jax.Array,
-              cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
-    """Returns (output, aux_load_balance_loss)."""
+              cfg: ModelConfig, residual=None) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_load_balance_loss).
+
+    ``residual`` is the block's pre-norm stream; with shared experts it
+    rides the shared FFN's down-projection drain (fused epilogue),
+    otherwise it is a plain add on the combined expert output.
+    """
     B0, L0, d = x.shape
     if L0 == 1 and B0 > 1:
         # Decode: one token per sequence.  Per-sequence groups would give
         # capacity ceil(k/E*cf) rounded up to 8 -> E*8 buffer rows per
         # token (32x wasted expert FLOPs for mixtral).  Group across the
         # batch instead: one group of B tokens.
-        y, aux = moe_apply(p, x.reshape(1, B0, d), cfg)
+        y, aux = moe_apply(p, x.reshape(1, B0, d), cfg,
+                           residual=None if residual is None
+                           else residual.reshape(1, B0, d))
         return y.reshape(B0, L0, d), aux
     B, L = B0, L0
     mo = cfg.moe
@@ -122,5 +129,10 @@ def moe_apply(p: Dict[str, jax.Array], x: jax.Array,
     y = y_tok.reshape(B, L, k, d).sum(axis=2)
 
     if mo.n_shared_experts:
-        y = y + cm.mlp_apply(cm.subtree(p, "shared"), x, "silu")
+        # The residual stream rides the shared FFN's down-projection
+        # drain; the routed-expert sum is one further add.
+        y = y + cm.mlp_apply(cm.subtree(p, "shared"), x, "silu",
+                             residual=residual)
+    elif residual is not None:
+        y = y + residual
     return y, aux

@@ -44,6 +44,8 @@ class ServeEngine:
         # Serve-time warmup: resolve every hot-path GEMM tile through the
         # kernel-config registry (cache > autotune > analytic) before the
         # first request, so no request pays tuning/solver latency.  The
+        # workload set carries each GEMM's (epilogue, layout) variant —
+        # fused gate/residual kernels plan under their own keys.  The
         # jitted prefill/decode steps below fetch the same configs via
         # ``core.gemm.plan_for`` at trace time.
         self.gemm_plan_sources = (

@@ -72,7 +72,9 @@ def build_train_step(
     """
 
     if warmup_gemm_rows:
-        warmup_model(cfg, [warmup_gemm_rows])
+        # train=True adds the backward GEMMs' transpose-streaming layouts
+        # and the fused-epilogue forward variants to the plan set.
+        warmup_model(cfg, [warmup_gemm_rows], train=True)
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 

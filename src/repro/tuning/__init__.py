@@ -18,7 +18,8 @@ from repro.tuning.cache import (SCHEMA_VERSION, CacheEntry, TuningCache,
 from repro.tuning.registry import (KernelRegistry, Resolution, get_registry,
                                    reset_registry, set_registry)
 from repro.tuning.space import candidate_tile_configs
-from repro.tuning.workload import model_gemm_shapes, warmup_model
+from repro.tuning.workload import (model_gemm_shapes, model_gemm_workloads,
+                                   warmup_model)
 
 __all__ = [
     "TuneResult", "autotune_gemm", "time_tile",
@@ -27,5 +28,5 @@ __all__ = [
     "KernelRegistry", "Resolution", "get_registry", "reset_registry",
     "set_registry",
     "candidate_tile_configs",
-    "model_gemm_shapes", "warmup_model",
+    "model_gemm_shapes", "model_gemm_workloads", "warmup_model",
 ]

@@ -63,14 +63,30 @@ def time_tile(
     interpret: Optional[bool] = None,
     warmup: int = DEFAULT_WARMUP,
     iters: int = DEFAULT_ITERS,
+    epilogue: str = "none",
+    layout: str = "nn",
 ) -> float:
-    """Median wall seconds of one CA-MMM call under ``tile``."""
-    from repro.kernels import ca_mmm_k_outer, ops  # lazy: avoid cycle
+    """Median wall seconds of one CA-MMM call under ``tile``.
+
+    ``epilogue``/``layout`` time the kernel variant the config will
+    actually serve: synthetic bias/gate/residual operands are attached
+    for a fused spec, and 'nt'/'tn' layouts stream the transposed
+    operand — so a fused/transposed cache entry holds a measurement of
+    the fused/transposed kernel, not a proxy.
+    """
+    from repro.kernels import ca_mmm_k_outer, ca_mmm_kernel, ops
+    from repro.kernels.epilogue import spec_from_tag
 
     interpret = _auto_interpret() if interpret is None else interpret
     a, b = _make_operands(m, n, k, dtype)
 
     if tile.order == "k_outer":
+        if epilogue != "none" or layout != "nn":
+            # The k_outer ablation kernel has no fused/transposed variant;
+            # timing it as a proxy would cache a measurement of the wrong
+            # kernel under a fused/transposed key.
+            raise ValueError(
+                f"k_outer cannot time epilogue={epilogue!r}/layout={layout!r}")
         from repro.core.io_model import round_up_to
 
         bm = min(tile.bm, round_up_to(m, 8))
@@ -82,10 +98,33 @@ def time_tile(
         def call():
             return ca_mmm_k_outer(ap, bp, bm=bm, bn=bn, bk=bk,
                                   interpret=interpret)
-    else:
+    elif semiring != "plus_times":
         def call():
-            return ops.ca_mmm_padded(a, b, tile, interpret=interpret,
-                                     semiring=semiring)
+            return ops.ca_mmm_any(a, b, tile, interpret=interpret,
+                                  semiring=semiring)
+    else:
+        # One branch covers all (epilogue, layout) combinations — the
+        # kernel treats them orthogonally, and the cache entry must hold
+        # a measurement of exactly the variant its key names.
+        ta, tb = layout[0] == "t", layout[1] == "t"
+        at = a.T if ta else a
+        bt = b.T if tb else b
+        spec = None
+        epi_kw = {}
+        if epilogue != "none":
+            spec = spec_from_tag(epilogue)
+            if spec.has_bias:
+                epi_kw["bias"] = jnp.ones((n,), a.dtype)
+            if spec.has_mul:
+                epi_kw["mul"] = jnp.ones((m, n), a.dtype)
+            if spec.has_residual:
+                epi_kw["residual"] = jnp.ones((m, n), a.dtype)
+
+        def call():
+            return ca_mmm_kernel(at, bt, bm=tile.bm, bn=tile.bn, bk=tile.bk,
+                                 transpose_a=ta, transpose_b=tb,
+                                 epilogue=spec, interpret=interpret,
+                                 **epi_kw)
 
     for _ in range(max(0, warmup)):
         jax.block_until_ready(call())
@@ -126,23 +165,33 @@ def autotune_gemm(
     warmup: int = DEFAULT_WARMUP,
     iters: int = DEFAULT_ITERS,
     timer: Optional[Callable[[TileConfig], float]] = None,
+    epilogue: str = "none",
+    layout: str = "nn",
 ) -> TuneResult:
     """Measure model-nominated candidates; return the fastest.
 
     ``timer`` injects a measurement function (tests use a stub; production
     uses :func:`time_tile`).  Candidates are measured best-prior-first.
+    ``epilogue``/``layout`` select the kernel variant being timed, so the
+    winner cached under a fused/transposed key was measured as one.
     """
     if candidates is None:
         candidates = tspace.candidate_tile_configs(
             m, n, k, dtype_in=dtype, hw=hw, top_n=max_candidates,
-            orders=orders, semiring=semiring)
+            orders=orders, semiring=semiring, epilogue=epilogue)
+    if epilogue != "none" or layout != "nn":
+        # k_outer has no fused/transposed kernel variant — timing it as a
+        # plain-GEMM proxy would let a wrong-variant measurement win the
+        # fused/transposed cache key.
+        candidates = [c for c in candidates if c.order != "k_outer"]
     if not candidates:
         raise ValueError(f"no legal tile candidates for {(m, n, k)}")
 
     if timer is None:
         def timer(tile: TileConfig) -> float:
             return time_tile(m, n, k, tile, dtype=dtype, semiring=semiring,
-                             interpret=interpret, warmup=warmup, iters=iters)
+                             interpret=interpret, warmup=warmup, iters=iters,
+                             epilogue=epilogue, layout=layout)
 
     # Roofline prior orders the measurements; a k_outer schedule re-reads
     # the C tile per k step, which the prior reflects via inflated Q.

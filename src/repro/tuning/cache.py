@@ -30,7 +30,10 @@ from typing import Dict, Optional
 from repro.core.hardware import TpuTarget, V5E
 from repro.core.io_model import TileConfig
 
-SCHEMA_VERSION = 1
+# v2: keys carry (epilogue, layout) — fused-epilogue and transpose-
+# streaming kernels tile (and time) differently from plain GEMMs, so they
+# cache distinctly.  v1 files (keys without the fields) are discarded.
+SCHEMA_VERSION = 2
 
 _ENV_PATH = "REPRO_TUNING_CACHE"
 
@@ -56,9 +59,18 @@ def shape_bucket(d: int) -> int:
 
 def cache_key(m: int, n: int, k: int, dtype_str: str,
               semiring: str = "plus_times",
-              hw: TpuTarget = V5E) -> str:
-    """Stable string key: shape-bucket + dtype + semiring + hardware."""
-    return (f"{hw.name}/{dtype_str}/{semiring}/"
+              hw: TpuTarget = V5E,
+              epilogue: str = "none",
+              layout: str = "nn") -> str:
+    """Stable string key: shape-bucket + dtype + semiring + hardware +
+    epilogue spec tag + operand layout.
+
+    ``epilogue`` is the :meth:`EpilogueSpec.tag` string (e.g.
+    ``bias+silu+mul``); ``layout`` is 'nn'/'nt'/'tn' for which operands
+    stream transposed.  Both change the kernel's VMEM footprint and
+    runtime, so fused/transposed kernels plan and cache distinctly.
+    """
+    return (f"{hw.name}/{dtype_str}/{semiring}/{epilogue}/{layout}/"
             f"m{shape_bucket(m)}n{shape_bucket(n)}k{shape_bucket(k)}")
 
 

@@ -80,11 +80,13 @@ class KernelRegistry:
     def resolve_full(self, m: int, n: int, k: int, dtype=jnp.bfloat16,
                      semiring: str = "plus_times",
                      hw: Optional[TpuTarget] = None,
+                     epilogue: str = "none",
+                     layout: str = "nn",
                      **tune_kwargs) -> Resolution:
         hw = hw or self.hw
         dtype_str = jnp.dtype(dtype).name
-        key = cache_key(m, n, k, dtype_str, semiring, hw)
-        exact = (m, n, k, dtype_str, semiring, hw.name)
+        key = cache_key(m, n, k, dtype_str, semiring, hw, epilogue, layout)
+        exact = (m, n, k, dtype_str, semiring, hw.name, epilogue, layout)
         with self._lock:
             hit = self._mem.get(key)
             if hit is not None:
@@ -111,7 +113,8 @@ class KernelRegistry:
         # tune twice; the writes are idempotent, so that's only waste.
         if autotune:
             result = self._tuner(m, n, k, dtype=dtype, semiring=semiring,
-                                 hw=hw, **tune_kwargs)
+                                 hw=hw, epilogue=epilogue, layout=layout,
+                                 **tune_kwargs)
             res = Resolution(result.config, "autotune", key)
             with self._lock:
                 prior = self._mem.get(key)
@@ -125,15 +128,15 @@ class KernelRegistry:
                 self.stats["autotune"] += 1
                 return res
 
-        if semiring == "plus_times":
+        if semiring == "plus_times" and epilogue == "none":
             tile = solve_tile_config(m, n, k, dtype_in=dtype, hw=hw)
         else:
-            # Non-standard semirings (min_plus) have kernel-specific
-            # VMEM footprints the plain solver doesn't model; take the
-            # space generator's top candidate, which does.
+            # Non-standard semirings (min_plus) and fused epilogues have
+            # kernel-specific VMEM footprints the plain solver doesn't
+            # model; take the space generator's top candidate, which does.
             tile = _space.candidate_tile_configs(
                 m, n, k, dtype_in=dtype, hw=hw, top_n=1,
-                semiring=semiring)[0]
+                semiring=semiring, epilogue=epilogue)[0]
         res = Resolution(tile, "analytic", key)
         with self._lock:
             self._analytic[exact] = res
@@ -143,22 +146,32 @@ class KernelRegistry:
     def resolve(self, m: int, n: int, k: int, dtype=jnp.bfloat16,
                 semiring: str = "plus_times",
                 hw: Optional[TpuTarget] = None,
+                epilogue: str = "none",
+                layout: str = "nn",
                 **tune_kwargs) -> TileConfig:
         """The everyday entry point: just the tile."""
         return self.resolve_full(m, n, k, dtype, semiring, hw,
+                                 epilogue=epilogue, layout=layout,
                                  **tune_kwargs).config
 
-    def warmup(self, shapes: Iterable[Tuple[int, int, int]],
+    def warmup(self, shapes: Iterable[Tuple],
                dtype=jnp.bfloat16,
                semiring: str = "plus_times") -> Dict[str, str]:
         """Resolve a batch of GEMM signatures ahead of first use.
 
-        Serve engines call this at startup so no request pays the tuning
-        (or even solver) latency.  Returns {key: source} for logging.
+        Each entry is ``(m, n, k)`` or ``(m, n, k, epilogue, layout)`` —
+        the latter pre-plans fused/transpose-streaming kernels under
+        their own cache keys.  Serve engines call this at startup so no
+        request pays the tuning (or even solver) latency.  Returns
+        {key: source} for logging.
         """
         out = {}
-        for (m, n, k) in shapes:
-            r = self.resolve_full(m, n, k, dtype, semiring)
+        for entry in shapes:
+            m, n, k = entry[:3]
+            epilogue, layout = (entry[3], entry[4]) if len(entry) > 3 \
+                else ("none", "nn")
+            r = self.resolve_full(m, n, k, dtype, semiring,
+                                  epilogue=epilogue, layout=layout)
             out[r.key] = r.source
         return out
 

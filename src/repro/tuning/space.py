@@ -68,13 +68,22 @@ def candidate_tile_configs(
     semiring: str = "plus_times",
     max_block: int = 8192,
     bk_candidates: Iterable[int] = DEFAULT_BK_CANDIDATES,
+    epilogue: str = "none",
 ) -> List[TileConfig]:
     """Model-pruned candidate list, best-first by effective intensity.
 
     Returns up to ``top_n`` tile shapes (each crossed with ``orders``), the
     analytic :func:`solve_tile_config` answer always among them, so the
     tuner can never do worse than the pure model by construction.
+
+    ``epilogue`` (an :meth:`EpilogueSpec.tag` string) charges the fused
+    drain's extra VMEM residents — one (bm, bn) tile per streamed
+    gate/residual operand plus a bias row — against the same budget, so a
+    fused kernel's candidates are feasible by construction too.
     """
+    from repro.kernels.epilogue import stream_cost  # no cycle: leaf module
+
+    epi_mn, epi_bias = stream_cost(epilogue)
     itemsize_in = jnp.dtype(dtype_in).itemsize
     acc_bytes = jnp.dtype(dtype_acc).itemsize
     budget = int(hw.vmem_bytes * vmem_fraction)
@@ -96,7 +105,9 @@ def candidate_tile_configs(
             return
         if bm > m_cap or bn > n_cap or bk > bk_cap:
             return
-        if tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes) > budget:
+        if tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes,
+                           epilogue_mn_ops=epi_mn,
+                           epilogue_bias=epi_bias) > budget:
             return
         if semiring == "min_plus" and not _min_plus_vmem_ok(bm, bn, bk,
                                                             budget):
@@ -120,7 +131,8 @@ def candidate_tile_configs(
             # geometric descent below it — the model says intensity falls
             # monotonically with bn at fixed bm, so deep descent is waste.
             fixed = 2 * bm * bk * itemsize_in
-            per_bn = 2 * bk * itemsize_in + bm * (acc_bytes + itemsize_in)
+            per_bn = 2 * bk * itemsize_in + bm * (acc_bytes + itemsize_in) \
+                + epi_mn * bm * itemsize_in + (itemsize_in if epi_bias else 0)
             bn_budget = (budget - fixed) // per_bn if budget > fixed else 0
             bn_top = min((int(bn_budget) // qn) * qn, n_cap)
             if semiring == "min_plus":
@@ -140,7 +152,9 @@ def candidate_tile_configs(
     out: List[TileConfig] = []
     for inten, (bm, bn, bk) in top:
         for order in orders:
-            vb = tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes)
+            vb = tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes,
+                                 epilogue_mn_ops=epi_mn,
+                                 epilogue_bias=epi_bias)
             out.append(TileConfig(
                 bm=bm, bn=bn, bk=bk, order=order, vmem_bytes=vb,
                 intensity=inten,

@@ -8,6 +8,13 @@ paper's ahead-of-time parameter selection.
 Only the *dominant* dense contractions are listed (projections, FFN,
 logits, expert FFNs); the cache's power-of-two shape bucketing means these
 cover every nearby shape the model actually emits.
+
+Entries carry the ``(epilogue, layout)`` fields of the cache key: the
+fused-epilogue GEMMs the model layers actually issue (gated FFN, residual
+write-backs) and — for training — the transpose-streaming backward
+layouts ('nt' for dC @ B^T, 'tn' for A^T @ dC) are planned under their
+own keys, so the first jitted step traces against configs for the exact
+kernel variants it lowers.
 """
 
 from __future__ import annotations
@@ -17,27 +24,58 @@ from typing import List, Tuple
 from repro.configs.base import ModelConfig
 
 GemmShape = Tuple[int, int, int]  # (m, n, k) as resolved by the registry
+# (m, n, k, epilogue_tag, layout) — the full registry key minus dtype/hw.
+GemmWorkload = Tuple[int, int, int, str, str]
 
 
 def model_gemm_shapes(cfg: ModelConfig, rows: int) -> List[GemmShape]:
     """(m, n, k) for the model's dense hot-path GEMMs at ``rows`` tokens."""
+    return sorted({w[:3] for w in model_gemm_workloads(cfg, rows)})
+
+
+def model_gemm_workloads(cfg: ModelConfig, rows: int,
+                         train: bool = False) -> List[GemmWorkload]:
+    """Hot-path GEMM signatures with their fused-epilogue/layout variants.
+
+    ``train=True`` adds the backward GEMMs' transposed-operand layouts for
+    every forward signature (same shapes, contraction dim rotated).
+    """
     d, f, v = cfg.d_model, cfg.d_ff, cfg.padded_vocab
-    shapes = {
-        (rows, d, d),      # attention / mixer projections
-        (rows, f, d),      # FFN up
-        (rows, d, f),      # FFN down
-        (rows, v, d),      # logits head
+    act = getattr(cfg, "act", "silu")
+    loads = {
+        (rows, d, d, "none", "nn"),     # attention / mixer projections
+        (rows, d, d, "res", "nn"),      # output projection + residual
+        (rows, v, d, "none", "nn"),     # logits head
     }
+    if f > 0:
+        if act == "silu":
+            loads.add((rows, f, d, "none", "nn"))       # FFN up
+            loads.add((rows, f, d, "silu+mul", "nn"))   # FFN gate (GLU)
+        else:
+            loads.add((rows, f, d, f"{act}", "nn"))     # FFN up + act
+        loads.add((rows, d, f, "res", "nn"))            # FFN down + residual
     if cfg.moe is not None and cfg.moe.d_ff_expert:
         fe = cfg.moe.d_ff_expert
-        shapes.add((rows, fe, d))
-        shapes.add((rows, d, fe))
+        loads.add((rows, fe, d, "none", "nn"))
+        loads.add((rows, d, fe, "none", "nn"))
+        if cfg.moe.n_shared_experts:
+            fs = cfg.moe.n_shared_experts * fe
+            loads.add((rows, fs, d, "none", "nn"))
+            loads.add((rows, fs, d, "silu+mul", "nn"))
+            loads.add((rows, d, fs, "res", "nn"))
+    if train:
+        # dA = dC @ B^T streams B transposed; dB = A^T @ dC streams A
+        # transposed — plan both layouts for every forward signature.
+        for (m, n, k, _epi, _lay) in list(loads):
+            loads.add((m, k, n, "none", "nt"))
+            loads.add((k, n, m, "none", "tn"))
     # Architectures may zero a dim out (e.g. SSM configs with d_ff=0 —
     # no dense FFN); a GEMM with an empty dim is not a GEMM.
-    return sorted(s for s in shapes if all(dim > 0 for dim in s))
+    return sorted(w for w in loads if all(dim > 0 for dim in w[:3]))
 
 
-def warmup_model(cfg: ModelConfig, rows_list, registry=None) -> dict:
+def warmup_model(cfg: ModelConfig, rows_list, registry=None,
+                 train: bool = False) -> dict:
     """Resolve every hot-path GEMM config for the given row counts.
 
     Returns {cache_key: source} so callers can log what was tuned, served
@@ -51,6 +89,7 @@ def warmup_model(cfg: ModelConfig, rows_list, registry=None) -> dict:
     for rows in rows_list:
         if rows <= 0:
             continue
-        resolved.update(registry.warmup(model_gemm_shapes(cfg, rows),
-                                        dtype=cfg.dtype()))
+        resolved.update(registry.warmup(
+            model_gemm_workloads(cfg, rows, train=train),
+            dtype=cfg.dtype()))
     return resolved

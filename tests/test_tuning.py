@@ -46,6 +46,42 @@ def test_cache_key_buckets_nearby_shapes():
     assert cache_key(1000, 2000, 3000, "bfloat16", "min_plus") != k1
 
 
+def test_cache_key_epilogue_and_layout_are_distinct():
+    """Fused-epilogue and transpose-streaming kernels cache separately:
+    same shape bucket, different (epilogue, layout) => different keys."""
+    base = cache_key(512, 512, 512, "float32")
+    fused = cache_key(512, 512, 512, "float32", epilogue="bias+silu+mul")
+    nt = cache_key(512, 512, 512, "float32", layout="nt")
+    tn = cache_key(512, 512, 512, "float32", layout="tn")
+    assert len({base, fused, nt, tn}) == 4
+    # defaults spelled out match the defaults
+    assert base == cache_key(512, 512, 512, "float32", epilogue="none",
+                             layout="nn")
+
+
+def test_registry_resolves_epilogue_and_layout_distinctly(tmp_path):
+    r = _tuned_registry(tmp_path, [], autotune_enabled=False)
+    r.resolve(512, 512, 512, dtype=jnp.float32)
+    r.resolve(512, 512, 512, dtype=jnp.float32, epilogue="bias+silu+mul")
+    r.resolve(512, 512, 512, dtype=jnp.float32, layout="nt")
+    # three distinct analytic resolutions, not one shared memo
+    assert r.stats["analytic"] == 3
+
+
+def test_space_epilogue_vmem_budget():
+    """Fused candidates charge the streamed epilogue tiles against the
+    VMEM budget (and remain feasible by construction)."""
+    from repro.core.io_model import tile_vmem_bytes as tvb
+
+    budget = 0.75 * V5E.vmem_bytes
+    cands = candidate_tile_configs(4096, 4096, 4096, dtype_in=jnp.float32,
+                                   top_n=6, epilogue="bias+silu+mul+res")
+    assert cands
+    for c in cands:
+        assert tvb(c.bm, c.bn, c.bk, 4, 4, epilogue_mn_ops=2,
+                   epilogue_bias=True) <= budget
+
+
 def test_cache_schema_version_invalidation(tmp_path):
     path = tmp_path / "cache.json"
     c = TuningCache(path)
@@ -317,6 +353,18 @@ def test_model_gemm_shapes_and_warmup(tmp_path):
     shapes = model_gemm_shapes(cfg, 32)
     assert (32, cfg.d_ff, cfg.d_model) in shapes
     assert (32, cfg.padded_vocab, cfg.d_model) in shapes
+
+    from repro.tuning import model_gemm_workloads
+
+    loads = model_gemm_workloads(cfg, 32)
+    # fused-epilogue variants are planned under their own keys
+    assert (32, cfg.d_ff, cfg.d_model, "silu+mul", "nn") in loads
+    assert (32, cfg.d_model, cfg.d_ff, "res", "nn") in loads
+    train_loads = model_gemm_workloads(cfg, 32, train=True)
+    # backward transpose-streaming layouts appear only for training
+    assert any(w[4] == "nt" for w in train_loads)
+    assert any(w[4] == "tn" for w in train_loads)
+    assert not any(w[4] != "nn" for w in loads)
 
     calls = []
     treg.set_registry(_tuned_registry(tmp_path, calls, autotune_enabled=False))
