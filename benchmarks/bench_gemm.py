@@ -14,6 +14,13 @@ epilogue: planned Q (the paper's Eq. 6 + epilogue traffic), XLA
 ``bytes accessed`` of the compiled computations, and a numerics check
 against the jnp oracle.
 
+The **quant** section (repro.quant) compares the int8-weight scaled-GEMM
+plan against the bf16 plan on the same ragged decode shape: itemsize-
+split planned bytes (the weight panel at 1 B/element), the drain-fused
+dequant's scale-read-only overhead, and numerics vs both the
+dequantized-weight oracle and the dense fp32 oracle.  ``--check-baseline``
+gates the planned int8w/bf16 ratio at ``QUANT_RATIO_GATE``.
+
 ``--tuned`` additionally runs the empirical autotuner (repro.tuning)
 against the analytic plan on small shapes — in Pallas interpret mode on
 CPU, on the real kernel on TPU — and reports the tuned-vs-analytic
@@ -37,7 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (V5E, Epilogue, arithmetic_intensity_ops_per_byte,
-                        epilogue_q_elements, gemm_roofline,
+                        epilogue_q_elements, gemm_roofline, io_volume_bytes,
                         io_volume_elements, solve_tile_config)
 from repro.kernels.epilogue import stream_cost
 from benchmarks.common import emit, time_call
@@ -46,7 +53,9 @@ N = 16384  # paper's benchmark size
 
 # v2: adds per-record "kind" and the fused-epilogue section
 # (planned_q_bytes_fused / _unfused, xla bytes accessed for both paths).
-JSON_SCHEMA_VERSION = 2
+# v3: adds the "quant" section (int8-weight vs bf16 planned bytes on the
+# ragged decode shape, drain-fused dequant numerics vs the fp32 oracle).
+JSON_SCHEMA_VERSION = 3
 DEFAULT_JSON_PATH = "BENCH_gemm.json"
 
 # The ragged serving shape of the fused section: 37 decode tokens through
@@ -54,6 +63,11 @@ DEFAULT_JSON_PATH = "BENCH_gemm.json"
 # quantum; k, n are).
 FUSED_SHAPE = (37, 1024, 1024)
 FUSED_EPILOGUE = "bias+gelu"
+
+# The quant section reuses the ragged decode shape (weight-panel traffic
+# dominates at small m — the regime quantization halves) and gates the
+# planned int8w/bf16 byte ratio at this ceiling in CI.
+QUANT_RATIO_GATE = 0.6
 
 
 def _record(m, n, k, dtype, tile, source, median_s, model_s, kind, **extra):
@@ -215,6 +229,94 @@ def run_fused(records=None, shape=FUSED_SHAPE, dtypes=(jnp.float32,),
             records.append(rec)
 
 
+def run_quant(records=None, shape=FUSED_SHAPE, base_idx=()):
+    """int8-weight vs bf16 GEMM on the ragged decode shape (m=37).
+
+    Planned streamed bytes come from the itemsize-split Eq. 6
+    (``io_volume_bytes``): the weight panel moves 1 B/element instead of
+    2, and at decode-m the weight term dominates, so the planned ratio
+    lands near 0.5 — gated at <= 0.6 by ``--check-baseline``.  The
+    dequant is drain-fused (an epilogue stage), so the quantized plan
+    adds only the fp32 scale-row read — zero extra (m, n) round trips,
+    which the planned-bytes identity below checks explicitly.
+    """
+    from repro.kernels import quant_matmul
+    from repro.kernels.epilogue import with_dequant
+    from repro.quant import quant_dtype_str, quantize
+    from repro.tuning import get_registry
+
+    m, n, k = shape
+    act_dt = jnp.dtype(jnp.bfloat16)
+    dtype_str = quant_dtype_str(act_dt, jnp.int8)
+    r = np.random.RandomState(0)
+    w32 = r.randn(k, n).astype(np.float32)
+    a32 = r.randn(m, k).astype(np.float32)
+    qw = quantize(jnp.asarray(w32), axis=-2)
+
+    reg = get_registry()
+    res_q = reg.resolve_full(m, n, k, dtype=act_dt, dtype_b=jnp.int8,
+                             epilogue=with_dequant("none", "b"))
+    res_bf = reg.resolve_full(m, n, k, dtype=act_dt)
+    tq, tb = res_q.config, res_bf.config
+
+    def planned(tile, b_is):
+        return io_volume_bytes(m, n, k, min(tile.bm, m), min(tile.bn, n),
+                               a_itemsize=2, b_itemsize=b_is,
+                               out_itemsize=2)
+
+    # Scale-row read: the dequant stage's entire extra traffic (fp32).
+    scale_bytes = 4.0 * epilogue_q_elements(m, n, scale_b_elements=n)
+    q_int8w = planned(tq, 1) + scale_bytes
+    q_bf16 = planned(tb, 2)
+    ratio = q_int8w / q_bf16
+
+    # Numerics: drain-fused dequant kernel vs (a) its dequantized-weight
+    # oracle (kernel correctness, tight) and (b) the dense fp32 oracle
+    # (end-to-end accuracy incl. quantization error, the documented band).
+    a_bf = jnp.asarray(a32, act_dt)
+    got = np.asarray(quant_matmul(a_bf, qw, interpret=True), np.float32)
+    oracle_deq = np.asarray(
+        jnp.dot(a_bf, qw.dequantize(act_dt),
+                preferred_element_type=jnp.float32), np.float32)
+    oracle_f32 = a32 @ w32
+    scale_ref = np.abs(oracle_f32).max()
+    err_kernel = np.abs(got - oracle_deq).max() / scale_ref
+    err_quant = np.abs(got - oracle_f32).max() / scale_ref
+    assert err_kernel < 5e-3, err_kernel      # kernel == dequant oracle
+    assert err_quant < 5e-2, err_quant        # int8 band (docs/QUANT.md)
+
+    # Wall proxy matching the record's dtype story: bf16 activations
+    # against the dequantized weight (XLA view of the quantized GEMM),
+    # the convention the fused section follows with its dtype-matched fn.
+    med = time_call(
+        jax.jit(lambda a, w: jnp.dot(
+            a, w, preferred_element_type=jnp.float32).astype(act_dt)),
+        a_bf, qw.dequantize(act_dt))
+    rl = gemm_roofline(m, n, k, tq, act_dt)
+    rec = _record(m, n, k, act_dt, tq, res_q.source, med * 1e-6, rl.time_s,
+                  "quant")
+    rec["dtype"] = dtype_str  # composite key: int8 weights, bf16 acts
+    rec.update(
+        epilogue=with_dequant("none", "b"),
+        planned_q_bytes_int8w=q_int8w,
+        planned_q_bytes_bf16=q_bf16,
+        planned_ratio=ratio,
+        planned_q_saved_frac=1.0 - ratio,
+        dequant_scale_bytes=scale_bytes,
+        max_rel_err_vs_dequant_oracle=float(err_kernel),
+        max_rel_err_vs_fp32_oracle=float(err_quant),
+        numerics_ok=True)
+    note = _delta_note(rec, base_idx, "planned_q_bytes_int8w") \
+        if base_idx else "baseline=none"
+    emit(f"gemm_quant_{dtype_str}_m{m}", med,
+         f"tile={tq.bm}x{tq.bn}x{tq.bk};"
+         f"plannedQ_int8w={q_int8w / 1e6:.3f}MB;"
+         f"plannedQ_bf16={q_bf16 / 1e6:.3f}MB;ratio={ratio:.3f};"
+         f"err_vs_fp32={err_quant:.2e};{note}")
+    if records is not None:
+        records.append(rec)
+
+
 def run_tuned(sizes=(128, 256), dtypes=(jnp.float32,), iters=2,
               max_candidates=4, records=None, base_idx=()):
     """Tuned-vs-analytic comparison (the ``--tuned`` mode).
@@ -276,6 +378,24 @@ def check_baseline(records, base_idx) -> int:
     invariant is still enforced)."""
     failures = 0
     for rec in records:
+        if rec["kind"] == "quant":
+            # Quantization's whole value is the byte ratio: planned int8w
+            # bytes must stay at or below the gate vs the bf16 plan, and
+            # must never regress vs the committed baseline.
+            if rec["planned_ratio"] > QUANT_RATIO_GATE:
+                print(f"REGRESSION {rec['shape']}/{rec['dtype']}: planned "
+                      f"int8w/bf16 ratio {rec['planned_ratio']:.3f} > "
+                      f"{QUANT_RATIO_GATE}")
+                failures += 1
+            base = base_idx.get(("quant", tuple(rec["shape"]),
+                                 rec["dtype"]))
+            if base is not None and rec["planned_q_bytes_int8w"] \
+                    > base["planned_q_bytes_int8w"]:
+                print(f"REGRESSION {rec['shape']}/{rec['dtype']}: planned "
+                      f"int8w bytes {rec['planned_q_bytes_int8w']:.0f} > "
+                      f"baseline {base['planned_q_bytes_int8w']:.0f}")
+                failures += 1
+            continue
         if rec["kind"] != "fused_epilogue":
             continue
         if rec["planned_q_bytes_fused"] >= rec["planned_q_bytes_unfused"]:
@@ -293,7 +413,7 @@ def check_baseline(records, base_idx) -> int:
             failures += 1
     if not failures:
         print("# baseline check OK (fused planned bytes <= baseline, "
-              "< unfused)")
+              "< unfused; quant ratio <= gate)")
     return failures
 
 
@@ -328,6 +448,8 @@ def main(argv=None):
                          "bytes vs the baseline (CI gate)")
     ap.add_argument("--skip-fused", action="store_true",
                     help="skip the fused-epilogue section")
+    ap.add_argument("--skip-quant", action="store_true",
+                    help="skip the int8-weight quantized section")
     args = ap.parse_args(argv)
     if any(s <= 0 for s in args.sizes):
         ap.error(f"--sizes must be positive, got {args.sizes}")
@@ -347,6 +469,8 @@ def main(argv=None):
     run(records=records)
     if not args.skip_fused:
         run_fused(records=records, base_idx=base_idx)
+    if not args.skip_quant:
+        run_quant(records=records, base_idx=base_idx)
     if args.tuned:
         run_tuned(sizes=tuple(args.sizes), iters=args.iters,
                   max_candidates=args.max_candidates, records=records,

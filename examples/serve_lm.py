@@ -1,21 +1,53 @@
 """Serving example: batched requests, greedy + sampled, across families.
 
   PYTHONPATH=src python examples/serve_lm.py
+  PYTHONPATH=src python examples/serve_lm.py --quantize int8
+
+``--quantize int8`` demonstrates the weight-quantized serve path:
+load (init stands in for a checkpoint restore) -> ``quantize_params``
+(every ca_matmul-routed projection becomes an int8 QTensor with fp32
+per-channel scales) -> engine startup warmup (the kernel-config registry
+plans the ``int8w_*``/dequant-fused variants) -> generate.  The int8
+bytes are what streams from HBM; the dequant runs inside the GEMM drain
+(see docs/QUANT.md).
 """
+
+import argparse
 
 import jax
 import numpy as np
 
 from repro.configs import get_reduced
+from repro.models import common as cm
 from repro.models import model as M
+from repro.quant import QuantConfig
 from repro.serve.engine import Request, ServeEngine
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quantize", choices=["none", "int8"], default="none",
+                    help="weight-quantize the serve params (int8 payload, "
+                         "fp32 per-channel scales, drain-fused dequant)")
+    args = ap.parse_args(argv)
+
     for arch in ("stablelm-1.6b", "mamba2-370m", "zamba2-7b"):
         cfg = get_reduced(arch)
         params = M.init_params(cfg, jax.random.PRNGKey(0))
+        note = ""
+        if args.quantize == "int8":
+            dense_bytes = sum(int(np.asarray(v).nbytes)
+                              for v in params.values())
+            params = cm.quantize_params(params, qconfig=QuantConfig())
+            q_bytes = sum(v.nbytes if hasattr(v, "nbytes")
+                          else int(np.asarray(v).nbytes)
+                          for v in params.values())
+            note = f" int8w params={q_bytes / 1e6:.2f}MB" \
+                   f" ({q_bytes / dense_bytes:.2f}x of dense)"
         eng = ServeEngine(params, cfg, batch_size=2, max_len=40)
+        if args.quantize == "int8":
+            n_q = sum(1 for k in eng.gemm_plan_sources if "int8w_" in k)
+            note += f" quant-plans={n_q}"
         rng = np.random.RandomState(0)
         for uid in range(2):
             eng.submit(Request(uid=uid,
@@ -24,7 +56,7 @@ def main():
                                temperature=0.0 if uid == 0 else 0.7))
         done = eng.run()
         outs = {u: r.generated for u, r in done.items()}
-        print(f"{arch:16s} greedy={outs[0]} sampled={outs[1]}")
+        print(f"{arch:16s} greedy={outs[0]} sampled={outs[1]}{note}")
 
 
 if __name__ == "__main__":

@@ -34,7 +34,10 @@ def _flatten(tree) -> Dict[str, Any]:
     flat = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+        # DictKey -> .key, SequenceKey -> .idx, GetAttrKey (e.g. the
+        # QTensor pytree's data/scale children) -> .name.
+        key = "/".join(str(getattr(p, "key",
+                           getattr(p, "idx", getattr(p, "name", p))))
                        for p in path)
         out[key] = leaf
     return out
@@ -141,3 +144,29 @@ class CheckpointManager:
         leaves, treedef = jax.tree_util.tree_flatten(like)
         keys = list(_flatten(like).keys())
         return treedef.unflatten([restored[k] for k in keys])
+
+    # -- quantized serving restore ----------------------------------------
+    def restore_quantized(self, like, step: Optional[int] = None, *,
+                          qconfig=None, predicate=None, shardings=None,
+                          host_id: int = 0):
+        """Restore a *dense* checkpoint and weight-quantize it for serving.
+
+        Training checkpoints stay full-precision (the master weights the
+        optimizer differentiates); quantization is deployment-time
+        surgery on the restored copy — every eligible projection becomes
+        a ``repro.quant.QTensor`` (int8 payload + fp32 scales) that the
+        serve path streams at half the bf16 bytes (see
+        ``models.common.quantize_params``).  A tree that already holds
+        QTensor leaves (``like`` built from a quantized save) restores
+        structurally instead and is returned as-is.
+        """
+        from repro.models.common import quantize_params
+        from repro.quant import QTensor
+
+        tree = self.restore(like, step, shardings=shardings,
+                            host_id=host_id)
+        leaves = jax.tree_util.tree_leaves(
+            tree, is_leaf=lambda x: isinstance(x, QTensor))
+        if any(isinstance(l, QTensor) for l in leaves):
+            return tree  # already-quantized checkpoint: nothing to do
+        return quantize_params(tree, qconfig=qconfig, predicate=predicate)

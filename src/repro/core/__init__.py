@@ -9,6 +9,7 @@ from repro.core.io_model import (
     epilogue_q_elements,
     gemm_roofline,
     io_lower_bound_elements,
+    io_volume_bytes,
     io_volume_elements,
     solve_tile_config,
     vmem_quantum,
@@ -28,7 +29,8 @@ from repro.core.distributed import (
 __all__ = [
     "TpuTarget", "V5E", "V5P", "get_target",
     "TileConfig", "computational_intensity", "arithmetic_intensity_ops_per_byte",
-    "io_volume_elements", "io_lower_bound_elements", "solve_tile_config",
+    "io_volume_elements", "io_volume_bytes", "io_lower_bound_elements",
+    "solve_tile_config",
     "vmem_quantum", "gemm_roofline", "epilogue_q_elements",
     "ca_matmul", "ca_einsum", "gemm_mode", "get_gemm_mode", "set_gemm_mode",
     "plan_for", "Epilogue", "EpilogueSpec",

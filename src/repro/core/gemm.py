@@ -61,19 +61,23 @@ class gemm_mode:
 
 
 def plan_for(m: int, n: int, k: int, dtype, hw: TpuTarget = V5E,
-             epilogue: str = "none", layout: str = "nn") -> TileConfig:
+             epilogue: str = "none", layout: str = "nn",
+             dtype_b=None) -> TileConfig:
     """Resolve the tile plan through the kernel-config registry.
 
     Precedence is cache hit > autotune (if ``REPRO_AUTOTUNE=1``) > the
     analytic :func:`solve_tile_config` — so by default this is exactly the
     paper's model, and a tuned deployment transparently serves measured
     configs.  ``epilogue`` (spec tag) and ``layout`` ('nn'/'nt'/'tn') key
-    fused and transpose-streaming kernels distinctly.
+    fused and transpose-streaming kernels distinctly; ``dtype_b`` keys a
+    mixed-precision (quantized-weight) GEMM under its composite dtype
+    (``"int8w_bf16a"``).
     """
     from repro.tuning import get_registry  # lazy: tuning imports kernels
 
     return get_registry().resolve(m, n, k, dtype=dtype, hw=hw,
-                                  epilogue=epilogue, layout=layout)
+                                  epilogue=epilogue, layout=layout,
+                                  dtype_b=dtype_b)
 
 
 def _flatten_epilogue(epilogue: Optional[Epilogue], lead, m: int, n: int):
@@ -94,28 +98,64 @@ def _flatten_epilogue(epilogue: Optional[Epilogue], lead, m: int, n: int):
 
 def ca_matmul(
     x: jax.Array,
-    w: jax.Array,
+    w=None,
     *,
     out_dtype=None,
     hw: TpuTarget = V5E,
     mode: Optional[str] = None,
     epilogue: Optional[Epilogue] = None,
+    quant=None,
 ) -> jax.Array:
     """``epilogue(x @ w)`` with leading batch dims collapsed into the GEMM
     m-dim.
 
     x: (..., K), w: (K, N) -> (..., N).  This covers the projections, FFNs,
     expert matmuls and logit heads of every architecture in configs/.
+
+    A quantized weight — ``quant=QTensor`` or ``w`` itself being a
+    :class:`repro.quant.QTensor` (the form checkpoint-quantized param
+    trees arrive in) — routes through the scaled-GEMM path: int8 tiles
+    stream from HBM and the dequant runs inside the drain as an epilogue
+    stage, so only the streamed bytes change (~0.5x of bf16 for the
+    weight panel), never the number of HBM round trips.  The XLA mode
+    dequantizes up front instead (numerics oracle; no byte savings).
     """
+    from repro.quant.scales import QTensor  # leaf module, cycle-free
+
+    if quant is None and isinstance(w, QTensor):
+        quant = w
     mode = mode or get_gemm_mode()
-    assert x.shape[-1] == w.shape[0], (x.shape, w.shape)
+    if quant is not None:
+        assert quant.ndim == 2, quant.shape
+        w = None
+        k_w, n = quant.shape
+    else:
+        k_w, n = w.shape
+    assert x.shape[-1] == k_w, (x.shape, k_w, n)
     out_dtype = out_dtype or x.dtype
     lead = x.shape[:-1]
     k = x.shape[-1]
-    n = w.shape[-1]
     m = 1
     for d in lead:
         m *= d
+
+    if quant is not None and (mode == "xla" or m == 0
+                              or quant.fmt != "int8"):
+        # Oracle path: dequantize (weight-sized fp copy — fine on the XLA
+        # fallback, defeats the purpose on a kernel path) then plain GEMM.
+        z = jnp.dot(x, quant.dequantize(x.dtype),
+                    preferred_element_type=jnp.float32)
+        if epilogue is not None:
+            z = apply_reference(z, epilogue.spec(), epilogue.operands())
+        return z.astype(out_dtype)
+
+    if quant is not None:
+        x2 = x.reshape(m, k)
+        epi2 = _flatten_epilogue(epilogue, lead, m, n)
+        y2 = kops.quant_matmul(x2, quant, epi2,
+                               interpret=(mode == "interpret"),
+                               out_dtype=out_dtype, hw=hw)
+        return y2.reshape(*lead, n).astype(out_dtype)
 
     if mode == "xla" or m == 0:
         acc = jnp.float32 if not jnp.issubdtype(x.dtype, jnp.integer) else jnp.int32

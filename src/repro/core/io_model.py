@@ -79,13 +79,33 @@ def io_volume_elements(m: int, n: int, k: int, x_tot: int, y_tot: int) -> float:
     return m * n * (1.0 + k * (1.0 / x_tot + 1.0 / y_tot))
 
 
+def io_volume_bytes(m: int, n: int, k: int, x_tot: int, y_tot: int, *,
+                    a_itemsize: int, b_itemsize: int,
+                    out_itemsize: Optional[int] = None) -> float:
+    """Eq. 6 with per-operand itemsizes — the quantized-GEMM accounting.
+
+    Eq. 6's stream terms split by operand: the ``k/y_tot`` term is the A
+    panel traffic (each A element re-read once per column stripe of C,
+    ``mnk/y`` elements total) and ``k/x_tot`` is B's (``mnk/x``).  With
+    int8 weights and bf16 activations those move bytes at different
+    rates, and for serve-shape GEMMs (small m => small x_tot) the B term
+    dominates — which is exactly why weight-only quantization roughly
+    halves planned Q there without touching the schedule.
+    """
+    out_itemsize = a_itemsize if out_itemsize is None else out_itemsize
+    return (m * n * out_itemsize
+            + m * n * k * (a_itemsize / y_tot + b_itemsize / x_tot))
+
+
 def io_lower_bound_elements(m: int, n: int, k: int, s_words: int) -> float:
     """Eq. 7 consequence: Q >= 2mnk/sqrt(S) (+ the mandatory mn write)."""
     return 2.0 * m * n * k / math.sqrt(s_words) + m * n
 
 
 def epilogue_q_elements(m: int, n: int, n_stream_mn: int = 0,
-                        has_bias: bool = False, fused: bool = True) -> float:
+                        has_bias: bool = False, fused: bool = True,
+                        scale_a_elements: int = 0,
+                        scale_b_elements: int = 0) -> float:
     """Extra slow-memory traffic (elements) of a GEMM epilogue.
 
     Fused (Sec. 4.4 extension): the elementwise chain runs on the VMEM
@@ -96,8 +116,18 @@ def epilogue_q_elements(m: int, n: int, n_stream_mn: int = 0,
     Unfused (separate XLA op): the epilogue additionally re-reads the
     GEMM result and re-writes the final output — one full (m, n) round
     trip (``2mn``) that the fused drain never pays.
+
+    A drain-fused dequant stage (repro.quant) reads its scale vectors
+    once: ``scale_b_elements`` (n per-channel, or ceil(k/g)·n per-tile)
+    and ``scale_a_elements`` (m, the "ab" path).  Scales are fp32 —
+    byte-counting callers charge them at 4 B/element even when the GEMM
+    operands are narrower.  There is deliberately no unfused dequant
+    variant: an XLA dequant materializes the *weight* at full precision
+    (mk extra elements), which is the whole regression the fused stage
+    exists to avoid.
     """
-    q = float(n_stream_mn) * m * n + (n if has_bias else 0)
+    q = (float(n_stream_mn) * m * n + (n if has_bias else 0)
+         + float(scale_a_elements) + float(scale_b_elements))
     if not fused:
         q += 2.0 * m * n
     return q
@@ -148,7 +178,8 @@ def tile_vmem_bytes(bm: int, bn: int, bk: int, itemsize_in: int,
                     acc_bytes: int = 4, itemsize_out: Optional[int] = None,
                     double_buffer_out: bool = False,
                     epilogue_mn_ops: int = 0,
-                    epilogue_bias: bool = False) -> int:
+                    epilogue_bias: bool = False,
+                    itemsize_b: Optional[int] = None) -> int:
     """VMEM bytes claimed by one kernel instance.
 
     A and B stream blocks are double-buffered (Pallas pipeline = the
@@ -161,9 +192,17 @@ def tile_vmem_bytes(bm: int, bn: int, bk: int, itemsize_in: int,
     A fused epilogue parks its operands in VMEM alongside the accumulator:
     one (bm, bn) tile per streamed gate/residual (fetched once per (i, j)
     step — the index map ignores k, so no double buffer) plus a bias row.
+
+    ``itemsize_b`` splits the stream-buffer budget by operand for
+    mixed-precision GEMMs (int8 weights under bf16 activations): B's
+    double buffer shrinks with its dtype, which widens the feasible
+    (bm, bn) region — quantization buys intensity, not just bandwidth.
+    Dequant scale vectors (O(bm + bn) fp32) are below the budget's
+    resolution and are not charged.
     """
     itemsize_out = itemsize_out if itemsize_out is not None else itemsize_in
-    stream = 2 * (bm * bk + bk * bn) * itemsize_in
+    itemsize_b = itemsize_b if itemsize_b is not None else itemsize_in
+    stream = 2 * (bm * bk * itemsize_in + bk * bn * itemsize_b)
     acc = bm * bn * acc_bytes
     out = bm * bn * itemsize_out  # output block written at drain
     if double_buffer_out:
@@ -217,6 +256,7 @@ def solve_tile_config(
     max_block: int = 8192,
     double_buffer_out: bool = False,
     bk_max: int = 2048,
+    dtype_b=None,
 ) -> TileConfig:
     """Solve the paper's optimization problem (Eqs. 5-9) for one TPU chip.
 
@@ -226,8 +266,14 @@ def solve_tile_config(
     is smaller than the square optimum the solver degrades to the best
     rectangle, mirroring the paper's narrow-compute-tile discussion
     (Sec. 4.1: keep x_tot and y_tot "as similar as possible").
+
+    ``dtype_b`` (default: ``dtype_in``) is the B-operand/weight dtype for
+    mixed-precision GEMMs — its itemsize shrinks B's double buffer in the
+    capacity constraint (see :func:`tile_vmem_bytes`).
     """
     itemsize_in = jnp.dtype(dtype_in).itemsize
+    itemsize_b = jnp.dtype(dtype_b).itemsize if dtype_b is not None \
+        else itemsize_in
     acc_bytes = jnp.dtype(dtype_acc).itemsize
     budget = int(hw.vmem_bytes * vmem_fraction)
     qm, qn = vmem_quantum(dtype_in, hw)
@@ -250,7 +296,7 @@ def solve_tile_config(
             # down (Eq. 9: floor to a whole number of hardware steps).
             # stream + (acc+out) <= budget
             fixed = 2 * bm * bk * itemsize_in
-            per_bn = 2 * bk * itemsize_in + bm * (
+            per_bn = 2 * bk * itemsize_b + bm * (
                 acc_bytes * (2 if double_buffer_out else 1) + itemsize_in
             )
             bn_max = (budget - fixed) // per_bn if budget > fixed else 0
@@ -258,7 +304,8 @@ def solve_tile_config(
             if bn <= 0 or bn_max < qn:
                 continue
             vb = tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes,
-                                 double_buffer_out=double_buffer_out)
+                                 double_buffer_out=double_buffer_out,
+                                 itemsize_b=itemsize_b)
             if vb > budget:
                 continue
             inten = effective_intensity(bm, bn, bk, itemsize_in)
@@ -281,7 +328,8 @@ def solve_tile_config(
         # k quantum and the solver's bk cap (the old ``min(qk, round_up)``
         # always collapsed to qk — dead rounding).
         bm, bn, bk = qm, qn, bk_cap
-        vb = tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes)
+        vb = tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes,
+                             itemsize_b=itemsize_b)
         best = TileConfig(
             bm=bm, bn=bn, bk=bk,
             vmem_bytes=vb,

@@ -13,12 +13,13 @@ from repro.kernels.ca_mmm import ca_mmm_k_outer, layout_tag
 from repro.kernels.epilogue import Epilogue, EpilogueSpec
 from repro.kernels.flash_attn import flash_attention_tpu
 from repro.kernels.ops import (ca_matmul_trainable, ca_mmm_any,
-                               ca_mmm_padded, distance_product, fused_matmul)
+                               ca_mmm_padded, distance_product, fused_matmul,
+                               quant_matmul)
 from repro.kernels import ref
 
 __all__ = [
     "ca_mmm_kernel", "ca_mmm_k_outer", "ca_mmm_any", "ca_mmm_padded",
-    "ca_matmul_trainable", "fused_matmul", "distance_product",
-    "Epilogue", "EpilogueSpec", "layout_tag",
+    "ca_matmul_trainable", "fused_matmul", "quant_matmul",
+    "distance_product", "Epilogue", "EpilogueSpec", "layout_tag",
     "flash_attention_tpu", "ref",
 ]

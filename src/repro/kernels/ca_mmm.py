@@ -99,19 +99,34 @@ def _default_tiles(m: int, n: int, k: int, dtype, semiring: str,
 
 def _mmm_kernel(*refs, semiring: str, spec: Optional[EpilogueSpec],
                 kdim: int, bk: int, transpose_a: bool, transpose_b: bool,
-                save_preact: bool):
+                save_preact: bool, sb_per_tile: bool):
     """One grid step: accumulate a (bm, bk) x (bk, bn) product into VMEM,
-    masked k edge; fused epilogue + single write-back at the drain."""
+    masked k edge; fused epilogue + single write-back at the drain.
+
+    Quantized operands (repro.quant) ride the same schedule: int8 tiles
+    stream from HBM, the cast to the compute dtype happens in VMEM, and
+    the dequant rescale is either a drain stage (per-channel scales) or a
+    per-k-step multiply of the partial product (per-tile scales,
+    ``sb_per_tile``) — in both cases zero extra slow-memory traffic."""
+    deq = spec.dequant if spec is not None else "none"
     n_extra = 0
     if spec is not None:
-        n_extra = int(spec.has_bias) + int(spec.has_mul) + int(
-            spec.has_residual)
+        n_extra = (int(spec.has_bias) + int(spec.has_mul)
+                   + int(spec.has_residual) + int(deq == "ab")
+                   + int(deq != "none"))
     a_ref, b_ref = refs[0], refs[1]
     extra_refs = refs[2:2 + n_extra]
     out_refs = refs[2 + n_extra:-1]
     acc_ref = refs[-1]
     c_ref = out_refs[0]
     h_ref = out_refs[1] if save_preact else None
+
+    # Dequant scale refs lead the extra-operand pack (same order as the
+    # wrapper appends them): [scale_a], [scale_b], bias, mul, residual.
+    scale_refs = iter(extra_refs)
+    sa_ref = next(scale_refs) if deq == "ab" else None
+    sb_ref = next(scale_refs) if deq != "none" else None
+    epi_refs = extra_refs[int(deq == "ab") + int(deq != "none"):]
 
     k = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -148,15 +163,27 @@ def _mmm_kernel(*refs, semiring: str, spec: Optional[EpilogueSpec],
             b = b_ref[...].astype(jnp.int32)
         else:
             a = a_ref[...]
+            # Weight-only quantization: int8 B tiles streamed, cast to the
+            # activation dtype in VMEM (int8 values are exact in bf16) —
+            # the HBM bytes are the int8 bytes, the MXU sees its native
+            # float pairing.
             b = b_ref[...]
+            if b.dtype != a.dtype and jnp.issubdtype(b.dtype, jnp.integer):
+                b = b.astype(a.dtype)
         a = mask_k(a, 0 if transpose_a else 1, 0)
         b = mask_k(b, 1 if transpose_b else 0, 0)
         # Contract the k axis of each *stored* tile — a transposed
         # operand is consumed in its HBM layout (no .T materialization).
         dims = (((0,) if transpose_a else (1,),
                  (1,) if transpose_b else (0,)), ((), ()))
-        acc_ref[...] += jax.lax.dot_general(
-            a, b, dims, preferred_element_type=acc_t)
+        part = jax.lax.dot_general(a, b, dims,
+                                   preferred_element_type=acc_t)
+        if sb_per_tile:
+            # Per-tile weight scales: this k-block's scale row rescales
+            # the partial product before accumulation (different blocks,
+            # different scales — a drain-time rescale would be wrong).
+            part = part * sb_ref[...].astype(acc_t)
+        acc_ref[...] += part
 
     @pl.when(k == nk - 1)
     def _drain():
@@ -171,8 +198,14 @@ def _mmm_kernel(*refs, semiring: str, spec: Optional[EpilogueSpec],
                 h_ref[...] = z.astype(h_ref.dtype)
             c_ref[...] = z.astype(c_ref.dtype)
         else:
-            it = iter(extra_refs)
+            it = iter(epi_refs)
             zf = z.astype(jnp.float32)
+            # Dequant first: later stages (bias/act/gate/residual) want
+            # real units.  Per-tile "b" scales already applied per k-step.
+            if deq != "none" and not sb_per_tile:
+                zf = zf * sb_ref[...].astype(jnp.float32)
+            if deq == "ab":
+                zf = zf * sa_ref[...].astype(jnp.float32)
             if spec.has_bias:
                 zf = zf + next(it)[...].astype(jnp.float32)
             if save_preact:
@@ -202,6 +235,9 @@ def ca_mmm(
     mul: Optional[jax.Array] = None,
     residual: Optional[jax.Array] = None,
     save_preact: bool = False,
+    scale_a: Optional[jax.Array] = None,
+    scale_b: Optional[jax.Array] = None,
+    scale_b_block: int = 0,
 ):
     """C = op(A) @ op(B) (+ fused epilogue) with the paper's I/O-minimal
     schedule, for arbitrary (non-tile-multiple) shapes.
@@ -211,6 +247,16 @@ def ca_mmm(
     ``save_preact`` the drain additionally writes the fp32 pre-activation
     (z + bias) and the call returns ``(y, preact)`` — the saved tensor the
     trainable VJP differentiates the activation against.
+
+    A quantized GEMM (``epilogue.dequant != "none"``) streams int8
+    operand tiles and rescales inside the kernel: ``scale_b`` is the
+    weight's per-channel column scale ((n,) fp32) or — with
+    ``scale_b_block=g`` — per-tile scales of shape (ceil(k/g), n), in
+    which case the kernel's k-tile is pinned to ``g`` so each streamed
+    block sees exactly one scale row; ``scale_a`` ((m,) fp32) is the
+    activation's per-row scale for the full int8xint8 path ("ab").
+    Dequant adds no output traffic: it rides the drain (or the VMEM
+    partial product), never an HBM round trip.
     """
     if transpose_a:
         kdim, m = a.shape
@@ -225,16 +271,44 @@ def ca_mmm(
         assert not (transpose_a or transpose_b or epilogue or save_preact), \
             "min_plus supports plain (A, B) layouts only"
     spec = epilogue
+    deq = spec.dequant if spec is not None else "none"
+    per_tile = scale_b_block > 0
+    if deq != "none":
+        assert semiring == "plus_times" and not (transpose_a or transpose_b), \
+            "quantized streaming supports the plain 'nn' layout"
+        assert scale_b is not None, "dequant needs the weight scales"
+        if deq == "ab":
+            assert scale_a is not None and scale_a.size == m, (scale_a, m)
+            assert not per_tile, "per-tile scales are weight-only ('b')"
+    else:
+        assert scale_a is None and scale_b is None and not per_tile
+    if per_tile:
+        # Per-tile dequant rescales each k-step's partial product, so the
+        # kernel k-tile must equal the quantization block.
+        bk = scale_b_block
     tag = spec.tag() if spec is not None else "none"
     layout = layout_tag(transpose_a, transpose_b)
     bm, bn, bk = _default_tiles(m, n, kdim, a.dtype, semiring, bm, bn, bk,
                                 epilogue_tag=tag, layout=layout)
-    acc_t = _acc_dtype(a.dtype) if semiring == "plus_times" else jnp.float32
-    out_dtype = out_dtype or (acc_t if acc_t == jnp.int32 else a.dtype)
+    a_is_int = jnp.issubdtype(a.dtype, jnp.integer)
+    if deq != "none" and (per_tile or not a_is_int):
+        # Weight-only dequant (fp activations) and per-tile rescale both
+        # accumulate in fp32 (the partial product is float either way).
+        acc_t = jnp.dtype(jnp.float32)
+    else:
+        acc_t = _acc_dtype(a.dtype) if semiring == "plus_times" \
+            else jnp.float32
+    if deq != "none":
+        out_dtype = out_dtype or (jnp.float32 if a_is_int else a.dtype)
+    else:
+        out_dtype = out_dtype or (acc_t if acc_t == jnp.int32 else a.dtype)
     if semiring == "min_plus":
         out_dtype = jnp.float32
 
     grid = (_ceil(m, bm), _ceil(n, bn), _ceil(kdim, bk))
+    if per_tile:
+        assert scale_b.shape == (_ceil(kdim, bk), n), \
+            (scale_b.shape, _ceil(kdim, bk), n)
 
     if transpose_a:
         a_spec = pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i))
@@ -248,6 +322,21 @@ def ca_mmm(
     operands = [a, b]
 
     if spec is not None and not spec.is_identity:
+        if deq == "ab":
+            # Per-row activation scales: an (bm, 1) column rides each i.
+            operands.append(scale_a.reshape(m, 1).astype(jnp.float32))
+            in_specs.append(pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)))
+        if deq != "none":
+            if per_tile:
+                # One (1, bn) scale row per k-step — index follows kk.
+                operands.append(scale_b.astype(jnp.float32))
+                in_specs.append(
+                    pl.BlockSpec((1, bn), lambda i, j, kk: (kk, j)))
+            else:
+                # Per-channel column scales: one row, fetched like a bias.
+                operands.append(scale_b.reshape(1, n).astype(jnp.float32))
+                in_specs.append(
+                    pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
         if spec.has_bias:
             assert bias is not None and bias.shape == (n,), (bias, n)
             # (1, n) layout: a bias row block rides along each (i, j) tile.
@@ -272,7 +361,7 @@ def ca_mmm(
     kernel = functools.partial(
         _mmm_kernel, semiring=semiring, spec=spec, kdim=kdim, bk=bk,
         transpose_a=transpose_a, transpose_b=transpose_b,
-        save_preact=save_preact)
+        save_preact=save_preact, sb_per_tile=per_tile)
     out = pl.pallas_call(
         kernel,
         grid=grid,

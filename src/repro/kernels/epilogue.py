@@ -33,6 +33,11 @@ import jax.numpy as jnp
 
 ACTIVATIONS = ("none", "relu", "gelu", "silu")
 
+# Dequant stage of the drain chain (repro.quant): "b" rescales the
+# accumulator by the weight's per-channel column scales, "ab" additionally
+# by the activation's per-row scales (full int8xint8 GEMM, int32 acc).
+DEQUANTS = ("none", "b", "ab")
+
 
 def act_fn(name: str):
     """fp32 elementwise activation by name (``none`` is identity)."""
@@ -52,21 +57,29 @@ class EpilogueSpec:
     """Static epilogue description: presence flags + activation name.
 
     Order of application (all math in fp32, matching ``apply_reference``):
-    ``y = act(z + bias) * mul + residual`` — each stage optional.
+    ``y = act(z·s_a·s_b + bias) * mul + residual`` — each stage optional.
+    The dequant rescale runs *first*: the accumulator of a quantized GEMM
+    is in integer (or pre-scale float) units, and every later stage wants
+    real units.  Per-channel scales apply at the drain; per-tile weight
+    scales apply per k-step in the main loop (a kernel-level static flag —
+    the spec only records that a "b" dequant exists).
     """
 
     activation: str = "none"
     has_bias: bool = False
     has_mul: bool = False
     has_residual: bool = False
+    dequant: str = "none"
 
     def __post_init__(self):
         assert self.activation in ACTIVATIONS, self.activation
+        assert self.dequant in DEQUANTS, self.dequant
 
     @property
     def is_identity(self) -> bool:
         return (self.activation == "none" and not self.has_bias
-                and not self.has_mul and not self.has_residual)
+                and not self.has_mul and not self.has_residual
+                and self.dequant == "none")
 
     @property
     def needs_preact(self) -> bool:
@@ -75,10 +88,12 @@ class EpilogueSpec:
         return self.activation != "none" or self.has_mul
 
     def tag(self) -> str:
-        """Canonical cache-key fragment, e.g. ``bias+silu+mul+res``."""
+        """Canonical cache-key fragment, e.g. ``dqb+bias+silu+mul+res``."""
         if self.is_identity:
             return "none"
         parts = []
+        if self.dequant != "none":
+            parts.append("dq" + self.dequant)
         if self.has_bias:
             parts.append("bias")
         if self.activation != "none":
@@ -103,16 +118,20 @@ def spec_from_tag(tag: str) -> EpilogueSpec:
         return IDENTITY
     parts = tag.split("+")
     activation = "none"
+    dequant = "none"
     flags = {"bias": False, "mul": False, "res": False}
     for p in parts:
         if p in flags:
             flags[p] = True
         elif p in ACTIVATIONS and p != "none":
             activation = p
+        elif p in ("dqb", "dqab"):
+            dequant = p[2:]
         else:
             raise ValueError(f"unknown epilogue tag part {p!r} in {tag!r}")
     return EpilogueSpec(activation=activation, has_bias=flags["bias"],
-                        has_mul=flags["mul"], has_residual=flags["res"])
+                        has_mul=flags["mul"], has_residual=flags["res"],
+                        dequant=dequant)
 
 
 def stream_cost(tag: str) -> Tuple[int, bool]:
@@ -120,9 +139,18 @@ def stream_cost(tag: str) -> Tuple[int, bool]:
 
     The tuning space generator budgets VMEM for these extra drain-phase
     tiles; the I/O model adds their one-time HBM reads to planned Q.
+    Dequant scale vectors (an fp32 row per ``dqb``, plus a column per
+    ``dqab``) are O(bm + bn) against an O(bm·bn) accumulator — below the
+    budget's resolution, so they are deliberately not charged here;
+    their HBM reads are counted by ``io_model.epilogue_q_elements``.
     """
     spec = spec_from_tag(tag)
     return int(spec.has_mul) + int(spec.has_residual), spec.has_bias
+
+
+def with_dequant(tag: str, mode: str = "b") -> str:
+    """Prefix an epilogue tag with a dequant stage (idempotent per mode)."""
+    return dataclasses.replace(spec_from_tag(tag), dequant=mode).tag()
 
 
 @dataclasses.dataclass
@@ -164,8 +192,16 @@ def apply_reference(z: jax.Array, spec: EpilogueSpec,
 
     Returns fp32 (caller casts to the output dtype) so the fused kernel,
     the XLA dispatch path and the VJP all share one numerics definition.
+    For a dequant stage the operands carry per-channel ``scale_b``
+    ((n,) or (1, n)) and — for "ab" — per-row ``scale_a`` ((m,) or
+    (m, 1)); per-tile weight scales have no post-GEMM reference form
+    (they apply before accumulation) — dequantize the weight instead.
     """
     zf = z.astype(jnp.float32)
+    if spec.dequant != "none":
+        zf = zf * operands["scale_b"].reshape(1, -1).astype(jnp.float32)
+        if spec.dequant == "ab":
+            zf = zf * operands["scale_a"].reshape(-1, 1).astype(jnp.float32)
     if spec.has_bias:
         zf = zf + operands["bias"].astype(jnp.float32)
     zf = act_fn(spec.activation)(zf)

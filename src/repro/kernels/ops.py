@@ -13,6 +13,7 @@ materialize ``.T``.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Dict, Optional, Tuple
 
@@ -27,12 +28,14 @@ import repro.kernels.ca_mmm as kern
 
 def _resolve_tile(m: int, n: int, k: int, dtype,
                   semiring: str = "plus_times",
-                  epilogue: str = "none", layout: str = "nn") -> TileConfig:
+                  epilogue: str = "none", layout: str = "nn",
+                  dtype_b=None, hw=None) -> TileConfig:
     """Default tile plan: the kernel-config registry (cache > tune > model)."""
     from repro.tuning import get_registry  # lazy: tuning times this module
 
     return get_registry().resolve(m, n, k, dtype=dtype, semiring=semiring,
-                                  epilogue=epilogue, layout=layout)
+                                  epilogue=epilogue, layout=layout,
+                                  dtype_b=dtype_b, hw=hw)
 
 
 def _pad2(x: jax.Array, r0: int, r1: int) -> jax.Array:
@@ -181,6 +184,70 @@ def fused_matmul(
     extras = epilogue.operands() if epilogue is not None else {}
     out_name = jnp.dtype(out_dtype).name if out_dtype is not None else None
     return _fused_mm(a, b, extras, spec, tile, interpret, out_name)
+
+
+# ---------------------------------------------------------------------------
+# Quantized (drain-fused dequant) matmul — repro.quant consumer
+# ---------------------------------------------------------------------------
+
+def quant_matmul(
+    a: jax.Array,
+    qw,
+    epilogue: Optional[Epilogue] = None,
+    tile: Optional[TileConfig] = None,
+    *,
+    scale_a: Optional[jax.Array] = None,
+    interpret: bool = False,
+    out_dtype=None,
+    hw=None,
+) -> jax.Array:
+    """``epilogue(dequant(A @ Q))`` in one kernel pass.
+
+    ``qw`` is a :class:`repro.quant.QTensor` int8 weight (per-channel or
+    per-tile scales).  The int8 tiles stream straight from HBM — half the
+    bytes of bf16, a quarter of fp32 — and the dequant rescale runs on
+    the VMEM accumulator inside the drain (per-channel) or on the partial
+    product (per-tile): streamed bytes change, HBM round trips don't.
+    With ``scale_a`` the activations are int8 too (full int8xint8, int32
+    accumulation, ``acc * s_a ⊗ s_b`` at the drain).
+
+    Serve-path only (no VJP): quantized weights are frozen by
+    construction; training differentiates the dense master weights.
+    """
+    from repro.quant.scales import QTensor  # leaf module, cycle-free
+
+    assert isinstance(qw, QTensor), type(qw)
+    assert qw.fmt == "int8", \
+        f"kernel path consumes int8 payloads; {qw.fmt!r} tensors " \
+        "dequantize on the XLA path"
+    assert qw.ndim == 2, qw.shape
+    # The weight must be quantized along its contraction (k) axis — a
+    # wrong-axis QTensor would pass the reshape below for square weights
+    # and mis-scale silently.
+    assert qw.axis in (-2, 0), \
+        f"weight quantized along axis {qw.axis}, expected the k axis (-2)"
+    m, k = a.shape
+    k2, n = qw.shape
+    assert k == k2, (a.shape, qw.shape)
+
+    base = epilogue.spec() if epilogue is not None else IDENTITY
+    extras = dict(epilogue.operands()) if epilogue is not None else {}
+    deq = "ab" if scale_a is not None else "b"
+    spec = dataclasses.replace(base, dequant=deq)
+    if qw.block:
+        scale_b = qw.scale            # (ceil(k/block), n) per-tile rows
+    else:
+        scale_b = qw.scale.reshape(n)  # (1, n) keepdims -> flat channels
+
+    if tile is None:
+        tile = _resolve_tile(m, n, k, a.dtype, epilogue=spec.tag(),
+                             dtype_b=jnp.int8, hw=hw)
+    return kern.ca_mmm(
+        a, qw.data, bm=tile.bm, bn=tile.bn, bk=tile.bk,
+        out_dtype=out_dtype, interpret=interpret, epilogue=spec,
+        bias=extras.get("bias"), mul=extras.get("mul"),
+        residual=extras.get("residual"),
+        scale_a=scale_a, scale_b=scale_b, scale_b_block=qw.block)
 
 
 def ca_matmul_trainable(a: jax.Array, b: jax.Array,

@@ -220,9 +220,9 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None,
     Dh = cfg.resolved_head_dim
     H, Kv = cfg.n_heads, cfg.n_kv_heads
     dt = x.dtype
-    q = ca_matmul(x, p["wq"].astype(dt)).reshape(B, L, H, Dh)
-    k = ca_matmul(x, p["wk"].astype(dt)).reshape(B, L, Kv, Dh)
-    v = ca_matmul(x, p["wv"].astype(dt)).reshape(B, L, Kv, Dh)
+    q = ca_matmul(x, cm.wcast(p["wq"], dt)).reshape(B, L, H, Dh)
+    k = ca_matmul(x, cm.wcast(p["wk"], dt)).reshape(B, L, Kv, Dh)
+    v = ca_matmul(x, cm.wcast(p["wv"], dt)).reshape(B, L, Kv, Dh)
 
     rope_pos = positions if cfg.rope_kind == "rope" else positions
     q = cm.apply_rope(q, rope_pos, cfg.rope_theta,
@@ -249,7 +249,7 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None,
             C = cache_len_for(cfg, max_len or L)
             new_cache = kv_cache_from_prefill(k, v, pos2d, C)
     epi = Epilogue(residual=residual) if residual is not None else None
-    y = ca_matmul(out.reshape(B, L, H * Dh), p["wo"].astype(dt),
+    y = ca_matmul(out.reshape(B, L, H * Dh), cm.wcast(p["wo"], dt),
                   epilogue=epi)
     return y, new_cache
 
@@ -287,11 +287,11 @@ def _mla_q(p, x, cfg, positions):
     H = cfg.n_heads
     dt = x.dtype
     if m.q_lora_rank:
-        cq = ca_matmul(x, p["wq_a"].astype(dt))
+        cq = ca_matmul(x, cm.wcast(p["wq_a"], dt))
         cq = cm.rms_norm(cq, p["q_norm"], cfg.norm_eps)
-        q = ca_matmul(cq, p["wq_b"].astype(dt))
+        q = ca_matmul(cq, cm.wcast(p["wq_b"], dt))
     else:
-        q = ca_matmul(x, p["wq"].astype(dt))
+        q = ca_matmul(x, cm.wcast(p["wq"], dt))
     q = q.reshape(B, L, H, m.qk_nope_dim + m.qk_rope_dim)
     q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
     q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
@@ -302,7 +302,7 @@ def _mla_ckv(p, x, cfg, positions):
     """Compressed KV stream: c_kv (B, L, r) and shared rotary key."""
     m = cfg.mla
     dt = x.dtype
-    ckv = ca_matmul(x, p["wkv_a"].astype(dt))
+    ckv = ca_matmul(x, cm.wcast(p["wkv_a"], dt))
     c, k_rope = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
     c = cm.rms_norm(c, p["kv_norm"], cfg.norm_eps)
     k_rope = cm.apply_rope(k_rope[:, :, None, :], positions,
@@ -395,7 +395,7 @@ def mla_apply(p, x, cfg: ModelConfig, *, positions, cache=None, step=None,
                 pos_c = pos_c[:, -C:]
             new_cache = {"c": c_kv, "k_rope": k_rope, "pos": pos_c}
     epi = Epilogue(residual=residual) if residual is not None else None
-    y = ca_matmul(out.reshape(B, L, H * m.v_head_dim), p["wo"].astype(dt),
+    y = ca_matmul(out.reshape(B, L, H * m.v_head_dim), cm.wcast(p["wo"], dt),
                   epilogue=epi)
     return y, new_cache
 

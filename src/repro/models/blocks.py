@@ -112,7 +112,7 @@ def shared_block_apply(p, x, emb0, cfg: ModelConfig, *, positions,
     dt = x.dtype
     u = jnp.concatenate([x, emb0], axis=-1)
     u = cm.rms_norm(u, p["norm_in/scale"], cfg.norm_eps)
-    u = ca_matmul(u, p["w_in"].astype(dt))
+    u = ca_matmul(u, cm.wcast(p["w_in"], dt))
     x, new_cache = attn.gqa_apply(
         cm.subtree(p, "attn"), u, cfg, positions=positions, cache=cache,
         step=step, mode=mode, max_len=max_len, residual=x)

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.gemm import ca_matmul
 from repro.kernels.epilogue import Epilogue
+from repro.quant.scales import QTensor
 
 
 # ---------------------------------------------------------------------------
@@ -90,7 +91,83 @@ def subtree(params: Dict[str, jax.Array], prefix: str) -> Dict[str, jax.Array]:
 
 
 def count_params(params: Dict[str, jax.Array]) -> int:
-    return int(sum(p.size for p in params.values()))
+    return int(sum(p.size for p in params.values()
+                   if not isinstance(p, QTensor)) +
+               sum(p.data.size for p in params.values()
+                   if isinstance(p, QTensor)))
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization (repro.quant integration)
+# ---------------------------------------------------------------------------
+
+def wcast(w, dtype):
+    """Compute-dtype cast for a projection weight.
+
+    Dense weights cast as before; a :class:`repro.quant.QTensor` passes
+    through untouched — its int8 payload is the serving format, and the
+    cast to the compute dtype happens inside the kernel *after* the int8
+    bytes streamed (the whole point of quantizing).
+    """
+    if isinstance(w, QTensor):
+        return w
+    return w.astype(dtype)
+
+
+# Projection weights that flow through ``ca_matmul`` as plain (k, n)
+# operands.  Deliberately absent: ``wkv_b`` (consumed reshaped per-head),
+# embedding tables (gather, not GEMM), MoE routed-expert banks (batched
+# einsum — 4D when layer-stacked, which the ndim check below also
+# rejects), norm gains and other vectors.
+QUANTIZABLE_SUFFIXES = (
+    "wq", "wk", "wv", "wo", "wq_a", "wq_b", "wkv_a",
+    "w_up", "w_gate", "w_down", "w_in", "in_proj", "out_proj",
+)
+
+
+def default_quant_predicate(key: str, leaf) -> bool:
+    """Should this param leaf be weight-quantized?
+
+    2D (k, n) or layer-stacked 3D (L, k, n) projection matrices routed
+    through ``ca_matmul`` only; the logits head (``head/w``) qualifies in
+    its single-head 2D form.
+    """
+    if getattr(leaf, "ndim", 0) not in (2, 3):
+        return False
+    base = key.rsplit("/", 1)[-1]
+    if base in QUANTIZABLE_SUFFIXES:
+        return True
+    return key.endswith("head/w") and leaf.ndim == 2
+
+
+def quantize_params(params: Dict[str, jax.Array], qconfig=None,
+                    predicate=None) -> Dict[str, jax.Array]:
+    """Weight-quantize a parameter dict for serving.
+
+    Every eligible projection matrix becomes a
+    :class:`repro.quant.QTensor` (int8 payload + fp32 scales along the
+    contraction axis — per-channel by default, per-tile with
+    ``qconfig.block``); everything else is untouched.  The models'
+    ``wcast`` call sites then hand the QTensor to ``ca_matmul``, which
+    streams the int8 bytes and dequantizes inside the GEMM drain —
+    roughly halving the weight-panel HBM traffic of every serve-path
+    projection without adding a single extra round trip.
+
+    This is serving-state surgery, not training: keep the dense params
+    for optimization and quantize a copy at deployment (see
+    ``CheckpointManager.restore_quantized``).
+    """
+    from repro.quant import QuantConfig, quantize_tensor
+
+    qconfig = qconfig or QuantConfig()
+    predicate = predicate or default_quant_predicate
+    out = {}
+    for key, leaf in params.items():
+        if not isinstance(leaf, QTensor) and predicate(key, leaf):
+            out[key] = quantize_tensor(leaf, qconfig, axis=-2)
+        else:
+            out[key] = leaf
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -177,14 +254,14 @@ def mlp_apply(p: Dict[str, jax.Array], x: jax.Array, act: str,
     """
     dt = x.dtype
     if act == "silu":
-        up = ca_matmul(x, p["w_up"].astype(dt))
-        h = ca_matmul(x, p["w_gate"].astype(dt),
+        up = ca_matmul(x, wcast(p["w_up"], dt))
+        h = ca_matmul(x, wcast(p["w_gate"], dt),
                       epilogue=Epilogue(activation="silu", mul=up))
     else:
-        h = ca_matmul(x, p["w_up"].astype(dt),
+        h = ca_matmul(x, wcast(p["w_up"], dt),
                       epilogue=Epilogue(activation="gelu"))
     down_epi = Epilogue(residual=residual) if residual is not None else None
-    return ca_matmul(h, p["w_down"].astype(dt), epilogue=down_epi)
+    return ca_matmul(h, wcast(p["w_down"], dt), epilogue=down_epi)
 
 
 # ---------------------------------------------------------------------------
@@ -207,7 +284,7 @@ def unembed_defs(d: int, vocab: int, n_heads: int = 1) -> Defs:
 
 def unembed_apply(p: Dict[str, jax.Array], x: jax.Array, dtype,
                   n_heads: int = 1) -> jax.Array:
-    w = p["w"].astype(dtype)
+    w = wcast(p["w"], dtype)
     if n_heads == 1:
         return ca_matmul(x, w, out_dtype=jnp.float32)
     # musicgen: one head per codebook -> (..., n_heads, vocab)

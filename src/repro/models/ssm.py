@@ -132,7 +132,7 @@ def mamba2_apply(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
     dt_ = x.dtype
     P = s.head_dim
 
-    zxbcdt = ca_matmul(x, p["in_proj"].astype(dt_))
+    zxbcdt = ca_matmul(x, cm.wcast(p["in_proj"], dt_))
     z, xin, b, c, dtv = _split_proj(cfg, zxbcdt)
     conv_in = jnp.concatenate([xin, b, c], axis=-1)
 
@@ -178,5 +178,5 @@ def mamba2_apply(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
     # gated RMSNorm (Mamba2): norm(y * silu(z))
     y = cm.rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_),
                     p["norm"], cfg.norm_eps)
-    out = ca_matmul(y, p["out_proj"].astype(dt_))
+    out = ca_matmul(y, cm.wcast(p["out_proj"], dt_))
     return out, new_cache

@@ -1,0 +1,31 @@
+"""repro.quant — communication-avoiding quantization for the CA-MMM stack.
+
+The paper's flexibility claim ("supports arbitrary data types") is an I/O
+claim: narrower operands are the cheapest way to cut the streamed-byte
+volume Q that the whole :mod:`repro.core.io_model` stack optimizes.  This
+package supplies the missing producer side:
+
+* :mod:`.scales`    — per-channel / per-tile (bk-aligned) scale math, the
+  :class:`QTensor` pytree (int8 payload + fp32 scales, fp8-via-int8
+  emulation hook), and the mixed-precision dtype strings
+  (``"int8w_bf16a"``) that key the tuning cache.
+* :mod:`.calibrate` — absmax / percentile calibration over sample streams
+  and :class:`QuantConfig`, the one knob bundle the checkpoint loader and
+  the serve engine share.
+
+The *consumer* side lives where the bytes move: the dequant
+(``acc * s_a ⊗ s_b``) executes inside the CA-MMM drain phase as an
+:class:`repro.kernels.epilogue.EpilogueSpec` stage (``dequant=``), so
+quantization changes only streamed bytes — never adds an HBM round trip.
+"""
+
+from repro.quant.scales import (QTensor, absmax_scale, dequantize,
+                                dtype_short, quant_dtype_str, quantize)
+from repro.quant.calibrate import (Calibrator, QuantConfig,
+                                   quantize_tensor)
+
+__all__ = [
+    "QTensor", "absmax_scale", "dequantize", "quantize",
+    "dtype_short", "quant_dtype_str",
+    "Calibrator", "QuantConfig", "quantize_tensor",
+]

@@ -1,0 +1,105 @@
+"""Calibration: turn observed tensors into quantization scales.
+
+Two producers:
+
+* **Weights** are static — :func:`quantize_tensor` computes scales from
+  the tensor itself (absmax or percentile), per-channel or per-tile.
+* **Activations** are a stream — :class:`Calibrator` folds a running
+  channel-wise absmax over sample batches and emits the scale once the
+  stream is exhausted (the classic post-training static calibration
+  loop; percentile mode keeps a bounded reservoir instead).
+
+Both funnel through one :class:`QuantConfig`, which is also what
+``models.common.quantize_params`` / the checkpoint loader accept — so a
+serve deployment's whole quantization policy is a single dataclass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.scales import FORMATS, QTensor, absmax_scale, quantize
+
+_MAX_RESERVOIR = 64  # percentile mode: batches kept for the final quantile
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """One knob bundle for a quantization policy.
+
+    ``fmt``        — "int8" (kernel path) or "fp8_e4m3"/"fp8_e5m2"
+                     (emulation hook, XLA dequant path).
+    ``method``     — "absmax" | "percentile".
+    ``percentile`` — used when method == "percentile" (e.g. 99.9 clips
+                     the top 0.1% of |x| into saturation).
+    ``block``      — 0 = per-channel; g > 0 = per-tile with k-blocks of
+                     g rows (must be a multiple of 128, the kernel's
+                     k-tile quantum, so the drain-fused dequant stays
+                     one scale row per streamed block).
+    """
+
+    fmt: str = "int8"
+    method: str = "absmax"
+    percentile: float = 99.9
+    block: int = 0
+
+    def __post_init__(self):
+        assert self.fmt in FORMATS, self.fmt
+        assert self.method in ("absmax", "percentile"), self.method
+        assert self.block % 128 == 0, \
+            f"per-tile block {self.block} must be bk-aligned (128-multiple)"
+
+    @property
+    def effective_percentile(self) -> float:
+        return self.percentile if self.method == "percentile" else 100.0
+
+
+def quantize_tensor(w: jax.Array, cfg: QuantConfig = QuantConfig(),
+                    axis: int = -2) -> QTensor:
+    """Quantize a (weight) tensor under ``cfg`` along its contraction axis."""
+    return quantize(w, axis=axis, block=cfg.block,
+                    percentile=cfg.effective_percentile, fmt=cfg.fmt)
+
+
+class Calibrator:
+    """Streaming scale estimation for activation tensors.
+
+    ``observe`` batches of shape (..., k); ``scale()`` returns the fp32
+    per-channel scale over everything seen.  absmax mode folds a running
+    max (O(k) state); percentile mode keeps up to ``_MAX_RESERVOIR``
+    per-batch |x| snapshots and quantiles them at the end.
+    """
+
+    def __init__(self, cfg: QuantConfig = QuantConfig(), axis: int = -1):
+        self.cfg = cfg
+        self.axis = axis
+        self._amax: Optional[jax.Array] = None
+        self._reservoir: List[jax.Array] = []
+        self.n_observed = 0
+
+    def observe(self, x: jax.Array) -> None:
+        self.n_observed += 1
+        ax = tuple(i for i in range(x.ndim)
+                   if i != (x.ndim + self.axis if self.axis < 0 else self.axis))
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=ax)
+        if self.cfg.method == "percentile":
+            if len(self._reservoir) < _MAX_RESERVOIR:
+                self._reservoir.append(
+                    jnp.abs(x.astype(jnp.float32)).reshape(-1, amax.shape[-1]))
+        self._amax = amax if self._amax is None \
+            else jnp.maximum(self._amax, amax)
+
+    def scale(self) -> jax.Array:
+        assert self.n_observed > 0, "observe() at least one batch first"
+        if self.cfg.method == "percentile" and self._reservoir:
+            stacked = jnp.concatenate(self._reservoir, axis=0)
+            return absmax_scale(stacked, axis=0,
+                                percentile=self.cfg.percentile,
+                                fmt=self.cfg.fmt)[0]
+        from repro.quant.scales import _FMT_MAX
+
+        return jnp.maximum(self._amax, 1e-12) / _FMT_MAX[self.cfg.fmt]

@@ -1,0 +1,228 @@
+"""Scale computation and the QTensor pytree.
+
+Scale layouts (for a weight ``w`` of shape ``(..., k, n)``, contraction
+axis ``k`` = ``axis=-2``):
+
+* **per-channel** (``block=0``): one fp32 scale per output channel —
+  ``scale.shape = (..., 1, n)``.  The dequant ``acc * s_b`` is a rank-1
+  column broadcast, so it folds into the GEMM drain phase (a single
+  multiply on the VMEM accumulator before the one mandatory write-back).
+* **per-tile** (``block=g``): the contraction axis is split into
+  ``ceil(k/g)`` blocks, one scale row per block —
+  ``scale.shape = (..., ceil(k/g), n)``.  ``g`` must be a multiple of the
+  kernel's k-tile quantum (the lane width, 128) so each streamed
+  ``(bk, bn)`` block sees exactly one scale row; the kernel then applies
+  the block's scale to that k-step's *partial product* — still VMEM-only,
+  still zero extra HBM traffic.
+
+``fmt="fp8_e4m3"`` / ``"fp8_e5m2"`` is the fp8-via-int8 emulation hook:
+the payload holds the fp8 **bit pattern** viewed as int8 (jax's ml_dtypes
+float8 types do the rounding), so the streamed bytes are identical to
+int8 while the value grid is floating point.  The Pallas kernel path
+currently consumes ``fmt="int8"`` only; fp8 tensors dequantize on the
+XLA path (``QTensor.dequantize``) until the MXU path grows a native fp8
+port.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT_FORMATS = ("int8",)
+FP8_FORMATS = ("fp8_e4m3", "fp8_e5m2")
+FORMATS = INT_FORMATS + FP8_FORMATS
+
+# Largest representable magnitude per format: int8 symmetric [-127, 127]
+# (−128 is excluded so the grid is symmetric), fp8 per ml_dtypes.
+_FMT_MAX = {"int8": 127.0, "fp8_e4m3": 448.0, "fp8_e5m2": 57344.0}
+
+
+def _fp8_dtype(fmt: str):
+    return jnp.float8_e4m3fn if fmt == "fp8_e4m3" else jnp.float8_e5m2
+
+
+def dtype_short(dtype) -> str:
+    """Short dtype name used in mixed-precision cache keys."""
+    name = jnp.dtype(dtype).name if not isinstance(dtype, str) else dtype
+    return {"bfloat16": "bf16", "float32": "f32", "float16": "f16",
+            "float64": "f64"}.get(name, name)
+
+
+def quant_dtype_str(act_dtype, weight_dtype) -> str:
+    """Cache-key dtype string for a mixed-precision GEMM.
+
+    ``quant_dtype_str(jnp.bfloat16, jnp.int8) == "int8w_bf16a"`` — weight
+    dtype first (it is what quantization changed), activation second.
+    Keys minted this way can never collide with the plain single-dtype
+    keys (``jnp.dtype(...).name`` never contains an underscore).
+    """
+    return f"{dtype_short(weight_dtype)}w_{dtype_short(act_dtype)}a"
+
+
+def _norm_axis(ndim: int, axis: int) -> int:
+    axis = axis if axis >= 0 else ndim + axis
+    assert 0 <= axis < ndim, (axis, ndim)
+    return axis
+
+
+def _split_blocks(x: jax.Array, axis: int, block: int) -> jax.Array:
+    """Reshape ``axis`` into (n_blocks, block), NaN-padding the ragged
+    tail so reductions can ignore the padding (nanmax / nanpercentile)."""
+    d = x.shape[axis]
+    nb = -(-d // block)
+    pad = nb * block - d
+    x = x.astype(jnp.float32)  # scales are fp32 regardless of input dtype
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths, constant_values=jnp.nan)
+    new_shape = x.shape[:axis] + (nb, block) + x.shape[axis + 1:]
+    return x.reshape(new_shape)
+
+
+def absmax_scale(x: jax.Array, axis: int = -2, block: int = 0,
+                 percentile: float = 100.0, fmt: str = "int8",
+                 eps: float = 1e-12) -> jax.Array:
+    """fp32 scales such that ``x / scale`` fits the format's grid.
+
+    ``percentile < 100`` clips outliers: the scale covers the p-th
+    percentile of |x| instead of the max (saturating the tail in exchange
+    for finer resolution of the bulk — the classic calibration trade).
+    """
+    assert fmt in FORMATS, fmt
+    axis = _norm_axis(x.ndim, axis)
+    xf = jnp.abs(x.astype(jnp.float32))
+    if block:
+        xb = jnp.abs(_split_blocks(x, axis, block))
+        red_axis = axis + 1
+        if percentile >= 100.0:
+            amax = jnp.nanmax(xb, axis=red_axis)
+        else:
+            amax = jnp.nanpercentile(xb, percentile, axis=red_axis)
+    else:
+        if percentile >= 100.0:
+            amax = jnp.max(xf, axis=axis, keepdims=True)
+        else:
+            amax = jnp.percentile(xf, percentile, axis=axis, keepdims=True)
+    return jnp.maximum(amax, eps) / _FMT_MAX[fmt]
+
+
+def _expand_scale(scale: jax.Array, shape: Tuple[int, ...], axis: int,
+                  block: int) -> jax.Array:
+    """Broadcast a (per-channel or per-tile) scale over the full shape."""
+    if not block:
+        return scale  # keepdims layout broadcasts directly
+    rep = jnp.repeat(scale, block, axis=axis)
+    idx = [slice(None)] * len(shape)
+    idx[axis] = slice(0, shape[axis])
+    return rep[tuple(idx)]
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class QTensor:
+    """Quantized tensor: int8 payload + fp32 scales, as one pytree leaf
+    bundle.
+
+    ``data``  — int8; same shape as the logical tensor (for fp8 formats
+    it holds the fp8 *bit pattern* viewed as int8, so streamed bytes are
+    the int8 bytes either way).
+    ``scale`` — fp32; per-channel ``(..., 1, n)`` or per-tile
+    ``(..., ceil(k/block), n)`` (see module docstring).
+    ``axis``/``block``/``fmt`` are static (pytree aux data), so jit,
+    ``lax.scan`` slicing and checkpoint flattening all treat a QTensor
+    like any other parameter pair.
+    """
+
+    data: jax.Array
+    scale: jax.Array
+    axis: int = -2
+    block: int = 0
+    fmt: str = "int8"
+
+    # -- pytree protocol ----------------------------------------------------
+
+    def tree_flatten_with_keys(self):
+        return ((( jax.tree_util.GetAttrKey("data"), self.data),
+                 (jax.tree_util.GetAttrKey("scale"), self.scale)),
+                (self.axis, self.block, self.fmt))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scale = children
+        axis, block, fmt = aux
+        return cls(data=data, scale=scale, axis=axis, block=block, fmt=fmt)
+
+    # -- array-ish surface ---------------------------------------------------
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.data.shape)
+
+    @property
+    def ndim(self) -> int:
+        return self.data.ndim
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.data.size * 1 + self.scale.size * 4)
+
+    @property
+    def dtype_str(self) -> str:
+        return "int8" if self.fmt == "int8" else self.fmt
+
+    def astype(self, dtype):
+        """No-op: a quantized weight is served as-is (the compute dtype
+        cast happens inside the kernel, after the int8 bytes streamed)."""
+        return self
+
+    def __getitem__(self, idx):
+        """Leading-axis indexing (layer-stacked weights): payload and
+        scales slice together, aux metadata rides along — valid because
+        the quantization axis is stored from the end (negative)."""
+        return QTensor(data=self.data[idx], scale=self.scale[idx],
+                       axis=self.axis, block=self.block, fmt=self.fmt)
+
+    def per_channel_scale(self) -> Optional[jax.Array]:
+        """The ``(..., 1, n)`` scale when per-channel, else None."""
+        return None if self.block else self.scale
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        axis = _norm_axis(self.data.ndim, self.axis)
+        if self.fmt in FP8_FORMATS:
+            vals = jax.lax.bitcast_convert_type(
+                self.data, _fp8_dtype(self.fmt)).astype(jnp.float32)
+        else:
+            vals = self.data.astype(jnp.float32)
+        s = _expand_scale(self.scale, self.shape, axis, self.block)
+        return (vals * s).astype(dtype)
+
+
+def quantize(x: jax.Array, axis: int = -2, block: int = 0,
+             percentile: float = 100.0, fmt: str = "int8") -> QTensor:
+    """Quantize ``x`` along ``axis`` (the GEMM contraction dim).
+
+    int8: symmetric round-to-nearest onto [-127, 127].  fp8 formats: cast
+    through the ml_dtypes float8 grid, payload = bit pattern as int8.
+    """
+    assert fmt in FORMATS, fmt
+    axis = _norm_axis(x.ndim, axis)
+    scale = absmax_scale(x, axis=axis, block=block, percentile=percentile,
+                         fmt=fmt)
+    s = _expand_scale(scale, x.shape, axis, block)
+    scaled = x.astype(jnp.float32) / s
+    if fmt in FP8_FORMATS:
+        data = jax.lax.bitcast_convert_type(
+            scaled.astype(_fp8_dtype(fmt)), jnp.int8)
+    else:
+        data = jnp.clip(jnp.round(scaled), -127, 127).astype(jnp.int8)
+    return QTensor(data=data, scale=scale, axis=axis - x.ndim,  # store neg
+                   block=block, fmt=fmt)
+
+
+def dequantize(q: QTensor, dtype=jnp.float32) -> jax.Array:
+    return q.dequantize(dtype)

@@ -19,7 +19,14 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.quant import QTensor
 from repro.tuning import warmup_model
+
+
+def _is_quantized(params) -> bool:
+    leaves = jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, QTensor))
+    return any(isinstance(l, QTensor) for l in leaves)
 
 
 @dataclasses.dataclass
@@ -45,11 +52,16 @@ class ServeEngine:
         # kernel-config registry (cache > autotune > analytic) before the
         # first request, so no request pays tuning/solver latency.  The
         # workload set carries each GEMM's (epilogue, layout) variant —
-        # fused gate/residual kernels plan under their own keys.  The
+        # fused gate/residual kernels plan under their own keys, and a
+        # weight-quantized param tree warms the int8-weight variants
+        # (dequant-fused epilogue tags, ``int8w_*`` dtype keys) instead,
+        # since those are the kernels its projections will issue.  The
         # jitted prefill/decode steps below fetch the same configs via
         # ``core.gemm.plan_for`` at trace time.
+        self.quantized = _is_quantized(params)
         self.gemm_plan_sources = (
-            warmup_model(cfg, [batch_size, batch_size * max_len])
+            warmup_model(cfg, [batch_size, batch_size * max_len],
+                         quant=self.quantized)
             if warmup_gemms else {})
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, b, cfg, max_len=max_len))

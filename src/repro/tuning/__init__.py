@@ -14,19 +14,21 @@ the model's top candidates and remembering the winners:
 
 from repro.tuning.autotune import TuneResult, autotune_gemm, time_tile
 from repro.tuning.cache import (SCHEMA_VERSION, CacheEntry, TuningCache,
-                                cache_key, default_cache_path, shape_bucket)
+                                cache_key, default_cache_path, merge_caches,
+                                shape_bucket)
 from repro.tuning.registry import (KernelRegistry, Resolution, get_registry,
                                    reset_registry, set_registry)
 from repro.tuning.space import candidate_tile_configs
 from repro.tuning.workload import (model_gemm_shapes, model_gemm_workloads,
-                                   warmup_model)
+                                   quantize_workloads, warmup_model)
 
 __all__ = [
     "TuneResult", "autotune_gemm", "time_tile",
     "SCHEMA_VERSION", "CacheEntry", "TuningCache", "cache_key",
-    "default_cache_path", "shape_bucket",
+    "default_cache_path", "merge_caches", "shape_bucket",
     "KernelRegistry", "Resolution", "get_registry", "reset_registry",
     "set_registry",
     "candidate_tile_configs",
-    "model_gemm_shapes", "model_gemm_workloads", "warmup_model",
+    "model_gemm_shapes", "model_gemm_workloads", "quantize_workloads",
+    "warmup_model",
 ]

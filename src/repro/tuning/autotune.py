@@ -65,6 +65,7 @@ def time_tile(
     iters: int = DEFAULT_ITERS,
     epilogue: str = "none",
     layout: str = "nn",
+    dtype_b=None,
 ) -> float:
     """Median wall seconds of one CA-MMM call under ``tile``.
 
@@ -72,13 +73,18 @@ def time_tile(
     actually serve: synthetic bias/gate/residual operands are attached
     for a fused spec, and 'nt'/'tn' layouts stream the transposed
     operand — so a fused/transposed cache entry holds a measurement of
-    the fused/transposed kernel, not a proxy.
+    the fused/transposed kernel, not a proxy.  ``dtype_b`` (with a
+    ``dq*`` epilogue tag) times the quantized-weight kernel: int8 B
+    operand, unit per-channel scales — the streamed bytes and the
+    drain-fused dequant are the real thing.
     """
     from repro.kernels import ca_mmm_k_outer, ca_mmm_kernel, ops
     from repro.kernels.epilogue import spec_from_tag
 
     interpret = _auto_interpret() if interpret is None else interpret
     a, b = _make_operands(m, n, k, dtype)
+    if dtype_b is not None and jnp.dtype(dtype_b) != jnp.dtype(dtype):
+        _, b = _make_operands(m, n, k, dtype_b)
 
     if tile.order == "k_outer":
         if epilogue != "none" or layout != "nn":
@@ -119,6 +125,10 @@ def time_tile(
                 epi_kw["mul"] = jnp.ones((m, n), a.dtype)
             if spec.has_residual:
                 epi_kw["residual"] = jnp.ones((m, n), a.dtype)
+            if spec.dequant != "none":
+                epi_kw["scale_b"] = jnp.ones((n,), jnp.float32)
+            if spec.dequant == "ab":
+                epi_kw["scale_a"] = jnp.ones((m,), jnp.float32)
 
         def call():
             return ca_mmm_kernel(at, bt, bm=tile.bm, bn=tile.bn, bk=tile.bk,
@@ -167,18 +177,21 @@ def autotune_gemm(
     timer: Optional[Callable[[TileConfig], float]] = None,
     epilogue: str = "none",
     layout: str = "nn",
+    dtype_b=None,
 ) -> TuneResult:
     """Measure model-nominated candidates; return the fastest.
 
     ``timer`` injects a measurement function (tests use a stub; production
     uses :func:`time_tile`).  Candidates are measured best-prior-first.
-    ``epilogue``/``layout`` select the kernel variant being timed, so the
-    winner cached under a fused/transposed key was measured as one.
+    ``epilogue``/``layout``/``dtype_b`` select the kernel variant being
+    timed, so the winner cached under a fused/transposed/quantized key
+    was measured as one.
     """
     if candidates is None:
         candidates = tspace.candidate_tile_configs(
             m, n, k, dtype_in=dtype, hw=hw, top_n=max_candidates,
-            orders=orders, semiring=semiring, epilogue=epilogue)
+            orders=orders, semiring=semiring, epilogue=epilogue,
+            dtype_b=dtype_b)
     if epilogue != "none" or layout != "nn":
         # k_outer has no fused/transposed kernel variant — timing it as a
         # plain-GEMM proxy would let a wrong-variant measurement win the
@@ -191,7 +204,8 @@ def autotune_gemm(
         def timer(tile: TileConfig) -> float:
             return time_tile(m, n, k, tile, dtype=dtype, semiring=semiring,
                              interpret=interpret, warmup=warmup, iters=iters,
-                             epilogue=epilogue, layout=layout)
+                             epilogue=epilogue, layout=layout,
+                             dtype_b=dtype_b)
 
     # Roofline prior orders the measurements; a k_outer schedule re-reads
     # the C tile per k step, which the prior reflects via inflated Q.

@@ -16,16 +16,27 @@ Design constraints:
   file or the new file, never a torn one.
 * **Corruption tolerance** — an unreadable/garbage file loads as empty (a
   cache must never take the process down).
+* **Fleet merging** — the key's leading ``hw.name`` field partitions one
+  file into per-target sections for free; the ``merge`` CLI below unions
+  caches collected on different machines, newest ``updated_at`` winning
+  per key:
+
+  .. code-block:: console
+
+     python -m repro.tuning.cache merge a.json b.json -o merged.json
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import json
 import os
 import pathlib
+import sys
 import tempfile
-from typing import Dict, Optional
+import time
+from typing import Dict, Optional, Sequence
 
 from repro.core.hardware import TpuTarget, V5E
 from repro.core.io_model import TileConfig
@@ -86,6 +97,10 @@ class CacheEntry:
     predicted_s: float = 0.0
     n_tried: int = 0
     source: str = "autotune"
+    # Unix time of the measurement — the merge CLI's newest-wins arbiter.
+    # Optional (0.0 = unknown age): v2 files without it still load, and
+    # from_json's unknown-field filter keeps the file forward-compatible.
+    updated_at: float = 0.0
 
     def to_tile(self) -> TileConfig:
         return TileConfig(bm=self.bm, bn=self.bn, bk=self.bk,
@@ -94,11 +109,16 @@ class CacheEntry:
     @staticmethod
     def from_tile(tile: TileConfig, *, measured_s: float = 0.0,
                   predicted_s: float = 0.0, n_tried: int = 0,
-                  source: str = "autotune") -> "CacheEntry":
+                  source: str = "autotune",
+                  updated_at: Optional[float] = None) -> "CacheEntry":
+        # Measurement-derived entries are stamped (merge's newest-wins
+        # arbiter) unless the caller carries an existing timestamp.
         return CacheEntry(bm=tile.bm, bn=tile.bn, bk=tile.bk,
                           order=tile.order, measured_s=measured_s,
                           predicted_s=predicted_s, n_tried=n_tried,
-                          source=source)
+                          source=source,
+                          updated_at=time.time() if updated_at is None
+                          else updated_at)
 
     def to_json(self) -> Dict:
         return dataclasses.asdict(self)
@@ -181,3 +201,55 @@ class TuningCache:
         self._entries = {}
         if self.autosave:
             self.save()
+
+
+# ---------------------------------------------------------------------------
+# Multi-target DB merging (ROADMAP: fleet-collected caches)
+# ---------------------------------------------------------------------------
+
+def merge_caches(paths: Sequence[os.PathLike],
+                 out_path: os.PathLike) -> TuningCache:
+    """Union several cache files into one, newest ``updated_at`` winning
+    per key (ties — e.g. two un-stamped v2-era entries — go to the later
+    argument, so the command line reads oldest-to-newest).
+
+    Keys already carry ``hw.name``, so caches collected on different
+    targets merge without collisions: the result is a fleet DB a serve
+    host can point ``REPRO_TUNING_CACHE`` at and get hits for *its* own
+    hardware section only.
+    """
+    merged = TuningCache(out_path, autosave=False)
+    merged.clear()
+    for path in paths:
+        src = TuningCache(path, autosave=False)
+        for key in src.keys():
+            entry = src.get(key)
+            prior = merged.get(key)
+            if prior is None or entry.updated_at >= prior.updated_at:
+                merged._entries[key] = entry  # keep original timestamp
+    merged.save()
+    return merged
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tuning.cache",
+        description="Tuning-cache maintenance tools.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    mp = sub.add_parser(
+        "merge", help="union caches from several targets, newest-wins")
+    mp.add_argument("inputs", nargs="+", help="cache JSON files to union")
+    mp.add_argument("-o", "--output", required=True, help="merged output")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "merge":
+        merged = merge_caches([pathlib.Path(p) for p in args.inputs],
+                              pathlib.Path(args.output))
+        targets = sorted({k.split("/", 1)[0] for k in merged.keys()})
+        print(f"merged {len(args.inputs)} caches -> {args.output}: "
+              f"{len(merged)} entries across targets {targets}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

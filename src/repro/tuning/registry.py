@@ -82,9 +82,20 @@ class KernelRegistry:
                      hw: Optional[TpuTarget] = None,
                      epilogue: str = "none",
                      layout: str = "nn",
+                     dtype_b=None,
                      **tune_kwargs) -> Resolution:
+        """``dtype_b`` is the weight/B-operand dtype of a mixed-precision
+        (quantized) GEMM; it changes the cache key's dtype field to the
+        composite form (``"int8w_bf16a"``) and the VMEM budgets the
+        analytic/space paths solve under."""
         hw = hw or self.hw
-        dtype_str = jnp.dtype(dtype).name
+        if dtype_b is not None and jnp.dtype(dtype_b) != jnp.dtype(dtype):
+            from repro.quant.scales import quant_dtype_str  # leaf module
+
+            dtype_str = quant_dtype_str(dtype, dtype_b)
+        else:
+            dtype_str = jnp.dtype(dtype).name
+            dtype_b = None
         key = cache_key(m, n, k, dtype_str, semiring, hw, epilogue, layout)
         exact = (m, n, k, dtype_str, semiring, hw.name, epilogue, layout)
         with self._lock:
@@ -112,6 +123,8 @@ class KernelRegistry:
         # can keep resolving other keys.  Two threads racing on one key
         # tune twice; the writes are idempotent, so that's only waste.
         if autotune:
+            if dtype_b is not None:
+                tune_kwargs = dict(tune_kwargs, dtype_b=dtype_b)
             result = self._tuner(m, n, k, dtype=dtype, semiring=semiring,
                                  hw=hw, epilogue=epilogue, layout=layout,
                                  **tune_kwargs)
@@ -129,14 +142,15 @@ class KernelRegistry:
                 return res
 
         if semiring == "plus_times" and epilogue == "none":
-            tile = solve_tile_config(m, n, k, dtype_in=dtype, hw=hw)
+            tile = solve_tile_config(m, n, k, dtype_in=dtype, hw=hw,
+                                     dtype_b=dtype_b)
         else:
             # Non-standard semirings (min_plus) and fused epilogues have
             # kernel-specific VMEM footprints the plain solver doesn't
             # model; take the space generator's top candidate, which does.
             tile = _space.candidate_tile_configs(
                 m, n, k, dtype_in=dtype, hw=hw, top_n=1,
-                semiring=semiring, epilogue=epilogue)[0]
+                semiring=semiring, epilogue=epilogue, dtype_b=dtype_b)[0]
         res = Resolution(tile, "analytic", key)
         with self._lock:
             self._analytic[exact] = res
@@ -148,30 +162,35 @@ class KernelRegistry:
                 hw: Optional[TpuTarget] = None,
                 epilogue: str = "none",
                 layout: str = "nn",
+                dtype_b=None,
                 **tune_kwargs) -> TileConfig:
         """The everyday entry point: just the tile."""
         return self.resolve_full(m, n, k, dtype, semiring, hw,
                                  epilogue=epilogue, layout=layout,
-                                 **tune_kwargs).config
+                                 dtype_b=dtype_b, **tune_kwargs).config
 
     def warmup(self, shapes: Iterable[Tuple],
                dtype=jnp.bfloat16,
                semiring: str = "plus_times") -> Dict[str, str]:
         """Resolve a batch of GEMM signatures ahead of first use.
 
-        Each entry is ``(m, n, k)`` or ``(m, n, k, epilogue, layout)`` —
-        the latter pre-plans fused/transpose-streaming kernels under
-        their own cache keys.  Serve engines call this at startup so no
-        request pays the tuning (or even solver) latency.  Returns
-        {key: source} for logging.
+        Each entry is ``(m, n, k)``, ``(m, n, k, epilogue, layout)`` or
+        ``(m, n, k, epilogue, layout, weight_dtype_str)`` — the longer
+        forms pre-plan fused/transpose-streaming and quantized-weight
+        kernels under their own cache keys.  Serve engines call this at
+        startup so no request pays the tuning (or even solver) latency.
+        Returns {key: source} for logging.
         """
         out = {}
         for entry in shapes:
             m, n, k = entry[:3]
             epilogue, layout = (entry[3], entry[4]) if len(entry) > 3 \
                 else ("none", "nn")
+            dtype_b = jnp.dtype(entry[5]) if len(entry) > 5 and entry[5] \
+                else None
             r = self.resolve_full(m, n, k, dtype, semiring,
-                                  epilogue=epilogue, layout=layout)
+                                  epilogue=epilogue, layout=layout,
+                                  dtype_b=dtype_b)
             out[r.key] = r.source
         return out
 

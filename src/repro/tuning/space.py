@@ -69,6 +69,7 @@ def candidate_tile_configs(
     max_block: int = 8192,
     bk_candidates: Iterable[int] = DEFAULT_BK_CANDIDATES,
     epilogue: str = "none",
+    dtype_b=None,
 ) -> List[TileConfig]:
     """Model-pruned candidate list, best-first by effective intensity.
 
@@ -80,11 +81,18 @@ def candidate_tile_configs(
     drain's extra VMEM residents — one (bm, bn) tile per streamed
     gate/residual operand plus a bias row — against the same budget, so a
     fused kernel's candidates are feasible by construction too.
+
+    ``dtype_b`` (mixed-precision GEMMs, e.g. int8 weights under bf16
+    activations) shrinks the B stream buffers in the budget: a quantized
+    kernel's feasible region is *wider* than the uniform-dtype one, and
+    the candidates here exploit that instead of inheriting bf16 limits.
     """
     from repro.kernels.epilogue import stream_cost  # no cycle: leaf module
 
     epi_mn, epi_bias = stream_cost(epilogue)
     itemsize_in = jnp.dtype(dtype_in).itemsize
+    itemsize_b = jnp.dtype(dtype_b).itemsize if dtype_b is not None \
+        else itemsize_in
     acc_bytes = jnp.dtype(dtype_acc).itemsize
     budget = int(hw.vmem_bytes * vmem_fraction)
     qm, qn = vmem_quantum(dtype_in, hw)
@@ -107,7 +115,8 @@ def candidate_tile_configs(
             return
         if tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes,
                            epilogue_mn_ops=epi_mn,
-                           epilogue_bias=epi_bias) > budget:
+                           epilogue_bias=epi_bias,
+                           itemsize_b=itemsize_b) > budget:
             return
         if semiring == "min_plus" and not _min_plus_vmem_ok(bm, bn, bk,
                                                             budget):
@@ -122,7 +131,7 @@ def candidate_tile_configs(
     solved = solve_tile_config(m, n, k, dtype_in=dtype_in,
                                dtype_acc=dtype_acc, hw=hw,
                                vmem_fraction=vmem_fraction,
-                               max_block=max_block)
+                               max_block=max_block, dtype_b=dtype_b)
     consider(solved.bm, solved.bn, solved.bk)
 
     for bk in bks:
@@ -131,7 +140,7 @@ def candidate_tile_configs(
             # geometric descent below it — the model says intensity falls
             # monotonically with bn at fixed bm, so deep descent is waste.
             fixed = 2 * bm * bk * itemsize_in
-            per_bn = 2 * bk * itemsize_in + bm * (acc_bytes + itemsize_in) \
+            per_bn = 2 * bk * itemsize_b + bm * (acc_bytes + itemsize_in) \
                 + epi_mn * bm * itemsize_in + (itemsize_in if epi_bias else 0)
             bn_budget = (budget - fixed) // per_bn if budget > fixed else 0
             bn_top = min((int(bn_budget) // qn) * qn, n_cap)
@@ -154,7 +163,8 @@ def candidate_tile_configs(
         for order in orders:
             vb = tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes,
                                  epilogue_mn_ops=epi_mn,
-                                 epilogue_bias=epi_bias)
+                                 epilogue_bias=epi_bias,
+                                 itemsize_b=itemsize_b)
             out.append(TileConfig(
                 bm=bm, bn=bn, bk=bk, order=order, vmem_bytes=vb,
                 intensity=inten,

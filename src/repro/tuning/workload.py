@@ -33,6 +33,26 @@ def model_gemm_shapes(cfg: ModelConfig, rows: int) -> List[GemmShape]:
     return sorted({w[:3] for w in model_gemm_workloads(cfg, rows)})
 
 
+def quantize_workloads(loads) -> List[Tuple]:
+    """Rewrite forward workload entries as their int8-weight variants.
+
+    Each ('nn'-layout) entry gains a ``dqb`` dequant stage in its
+    epilogue tag and an ``"int8"`` weight-dtype field — the exact
+    registry key the quantized serve path resolves, so warmup plans the
+    kernels that will actually run.  Backward/transposed layouts pass
+    through unquantized (training differentiates dense master weights).
+    """
+    from repro.kernels.epilogue import with_dequant  # leaf module
+
+    out = []
+    for (m, n, k, epi, lay) in loads:
+        if lay == "nn":
+            out.append((m, n, k, with_dequant(epi, "b"), lay, "int8"))
+        else:
+            out.append((m, n, k, epi, lay))
+    return sorted(out)
+
+
 def model_gemm_workloads(cfg: ModelConfig, rows: int,
                          train: bool = False) -> List[GemmWorkload]:
     """Hot-path GEMM signatures with their fused-epilogue/layout variants.
@@ -75,11 +95,14 @@ def model_gemm_workloads(cfg: ModelConfig, rows: int,
 
 
 def warmup_model(cfg: ModelConfig, rows_list, registry=None,
-                 train: bool = False) -> dict:
+                 train: bool = False, quant: bool = False) -> dict:
     """Resolve every hot-path GEMM config for the given row counts.
 
-    Returns {cache_key: source} so callers can log what was tuned, served
-    from cache, or fell back to the analytic model.
+    ``quant=True`` plans the int8-weight variants instead (dequant-fused
+    epilogue tags, ``int8w_*`` cache keys) — what a weight-quantized
+    serve engine will actually issue.  Returns {cache_key: source} so
+    callers can log what was tuned, served from cache, or fell back to
+    the analytic model.
     """
     if registry is None:
         from repro.tuning.registry import get_registry
@@ -89,7 +112,8 @@ def warmup_model(cfg: ModelConfig, rows_list, registry=None,
     for rows in rows_list:
         if rows <= 0:
             continue
-        resolved.update(registry.warmup(
-            model_gemm_workloads(cfg, rows, train=train),
-            dtype=cfg.dtype()))
+        loads = model_gemm_workloads(cfg, rows, train=train)
+        if quant:
+            loads = quantize_workloads(loads)
+        resolved.update(registry.warmup(loads, dtype=cfg.dtype()))
     return resolved

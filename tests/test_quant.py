@@ -1,0 +1,381 @@
+"""repro.quant: scale/dequant round-trip properties, the drain-fused
+dequant kernel vs the fp32 oracle, and the serve-path integration
+(quantize_params -> QTensor-routed ca_matmul -> checkpoint round trip).
+
+Tolerance contract (documented in docs/QUANT.md): per-channel int8
+absmax quantization bounds the element error of the dequantized weight
+by ``amax_channel / 127`` (half a grid step after rounding), so a GEMM
+against quantized weights stays within a few 1e-2 *relative* of the
+dense fp32 oracle for randn-scaled data — while the kernel itself must
+match the dequantized-weight oracle to float tolerance (the fused
+dequant is exact math, not an approximation).
+"""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ca_matmul, gemm_mode, io_volume_bytes
+from repro.core.io_model import epilogue_q_elements
+from repro.kernels import ca_mmm_kernel, quant_matmul
+from repro.kernels.epilogue import (Epilogue, EpilogueSpec, spec_from_tag,
+                                    with_dequant)
+from repro.quant import (Calibrator, QTensor, QuantConfig, quant_dtype_str,
+                         quantize, quantize_tensor)
+
+
+def _randn(shape, seed, dtype=jnp.float32):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# scales.py — round-trip properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [64, 100, 257])  # incl. ragged k
+def test_per_channel_round_trip_bound(k):
+    w = _randn((k, 96), 0)
+    q = quantize(w, axis=-2)
+    assert q.data.dtype == jnp.int8 and q.scale.shape == (1, 96)
+    err = np.abs(np.asarray(q.dequantize()) - np.asarray(w))
+    # Half-step bound per channel: |err| <= scale/2 (+ fp slack).
+    bound = np.asarray(q.scale)[0] / 2 + 1e-6
+    assert (err <= bound[None, :]).all()
+
+
+@pytest.mark.parametrize("k,block", [(256, 128), (300, 128), (100, 128)])
+def test_per_tile_round_trip_ragged_k_edge(k, block):
+    """Per-tile scales: ceil(k/block) rows, ragged last block included."""
+    r = np.random.RandomState(1)
+    # Blocks with wildly different magnitude: per-tile must adapt.
+    w = r.randn(k, 64) * (1.0 + 100.0 * (np.arange(k)[:, None] >= block))
+    q = quantize(jnp.asarray(w, jnp.float32), axis=-2, block=block)
+    nb = -(-k // block)
+    assert q.scale.shape == (nb, 64)
+    deq = np.asarray(q.dequantize())
+    for b in range(nb):
+        lo, hi = b * block, min((b + 1) * block, k)
+        bound = np.asarray(q.scale)[b] / 2 + 1e-5
+        assert (np.abs(deq[lo:hi] - w[lo:hi]) <= bound[None, :]).all(), b
+
+
+def test_per_tile_beats_per_channel_on_blocky_tensors():
+    r = np.random.RandomState(2)
+    w = r.randn(256, 32) * (1.0 + 200.0 * (np.arange(256)[:, None] >= 128))
+    w = jnp.asarray(w, jnp.float32)
+    e_tile = float(jnp.abs(quantize(w, block=128).dequantize() - w).mean())
+    e_chan = float(jnp.abs(quantize(w).dequantize() - w).mean())
+    assert e_tile < e_chan
+
+
+def test_percentile_scale_clips_outliers():
+    r = np.random.RandomState(3)
+    w = r.randn(512, 16).astype(np.float32)
+    w[0, :] = 1e3  # one outlier row per channel
+    w = jnp.asarray(w)
+    q_pct = quantize(w, percentile=99.0)
+    q_max = quantize(w)
+    # Percentile scale resolves the bulk finer (smaller scale)...
+    assert (np.asarray(q_pct.scale) < np.asarray(q_max.scale)).all()
+    # ...at the cost of saturating the outlier (clipped to 127).
+    assert int(np.abs(np.asarray(q_pct.data)[0]).min()) == 127
+
+
+def test_fp8_emulation_hook_round_trip():
+    w = _randn((64, 32), 4)
+    q = quantize(w, fmt="fp8_e4m3")
+    assert q.data.dtype == jnp.int8  # fp8 bits ride an int8 payload
+    rel = float(jnp.abs(q.dequantize() - w).max() / jnp.abs(w).max())
+    assert rel < 0.08  # e4m3: 3 mantissa bits ~ 6% worst-case step
+
+
+def test_stacked_weights_quantize_and_slice():
+    """Layer-stacked (L, k, n) weights: per-layer scales, and lax.scan's
+    leading-axis slicing must produce a valid per-layer QTensor."""
+    w = _randn((3, 40, 24), 5)
+    q = quantize(w, axis=-2)
+    assert q.scale.shape == (3, 1, 24)
+    sliced = jax.tree.map(lambda t: t[1], q)
+    assert isinstance(sliced, QTensor) and sliced.shape == (40, 24)
+    np.testing.assert_allclose(np.asarray(sliced.dequantize()),
+                               np.asarray(q.dequantize()[1]), rtol=1e-6)
+
+
+def test_calibrator_streaming_absmax():
+    cal = Calibrator(QuantConfig(), axis=-1)
+    batches = [_randn((8, 16), s) for s in range(4)]
+    for b in batches:
+        cal.observe(b)
+    all_x = jnp.concatenate(batches, axis=0)
+    want = jnp.max(jnp.abs(all_x), axis=0) / 127.0
+    np.testing.assert_allclose(np.asarray(cal.scale()), np.asarray(want),
+                               rtol=1e-6)
+
+
+def test_quant_dtype_str_and_tags():
+    assert quant_dtype_str(jnp.bfloat16, jnp.int8) == "int8w_bf16a"
+    assert quant_dtype_str(jnp.float32, jnp.int8) == "int8w_f32a"
+    assert with_dequant("silu+mul") == "dqb+silu+mul"
+    assert with_dequant("none") == "dqb"
+    spec = spec_from_tag("dqab+bias+gelu")
+    assert spec.dequant == "ab" and spec.has_bias
+    assert spec.tag() == "dqab+bias+gelu"  # round trip
+    assert not EpilogueSpec(dequant="b").is_identity
+
+
+# ---------------------------------------------------------------------------
+# Kernel: drain-fused dequant vs oracles
+# ---------------------------------------------------------------------------
+
+QSHAPES = [(37, 96, 100), (5, 130, 70), (1, 128, 128), (16, 64, 300)]
+
+
+@pytest.mark.parametrize("m,n,k", QSHAPES)
+def test_quant_matmul_per_channel_vs_oracle(m, n, k):
+    a = _randn((m, k), 10)
+    w = _randn((k, n), 11)
+    qw = quantize(w, axis=-2)
+    got = quant_matmul(a, qw, interpret=True)
+    # Kernel == dequantized-weight oracle to float tolerance.
+    want_deq = a @ qw.dequantize()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_deq),
+                               rtol=1e-4, atol=1e-4)
+    # And within the documented int8 band of the dense fp32 oracle.
+    want = np.asarray(a) @ np.asarray(w)
+    scale = np.abs(want).max()
+    assert np.abs(np.asarray(got) - want).max() / scale < 5e-2
+
+
+def test_quant_matmul_per_tile_vs_oracle():
+    m, n, k, g = 37, 64, 300, 128
+    a = _randn((m, k), 12)
+    w = np.random.RandomState(13).randn(k, n) * (
+        1.0 + 50.0 * (np.arange(k)[:, None] >= g))
+    qw = quantize(jnp.asarray(w, jnp.float32), axis=-2, block=g)
+    assert qw.scale.shape == (3, n)  # ragged k edge: 128+128+44
+    got = quant_matmul(a, qw, interpret=True)
+    want = a @ qw.dequantize()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-3)
+
+
+def test_quant_matmul_bf16_activations():
+    m, n, k = 21, 128, 96
+    a = _randn((m, k), 14, jnp.bfloat16)
+    qw = quantize(_randn((k, n), 15), axis=-2)
+    got = quant_matmul(a, qw, interpret=True)
+    assert got.dtype == jnp.bfloat16
+    want = jnp.dot(a, qw.dequantize(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+    rel = float(jnp.abs(got.astype(jnp.float32) - want).max()
+                / jnp.abs(want).max())
+    assert rel < 2e-2  # bf16 rounding band
+
+
+def test_quant_matmul_fused_epilogue_composes():
+    """Dequant stage + bias/act/gate/residual in one drain chain."""
+    m, n, k = 37, 96, 64
+    a = _randn((m, k), 16)
+    qw = quantize(_randn((k, n), 17), axis=-2)
+    epi = Epilogue(bias=_randn((n,), 18), activation="silu",
+                   mul=_randn((m, n), 19), residual=_randn((m, n), 20))
+    got = quant_matmul(a, qw, epi, interpret=True)
+    z = a @ qw.dequantize()
+    want = jax.nn.silu(z + epi.bias) * epi.mul + epi.residual
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_w8a8_int32_accumulation_dequant_at_drain():
+    """Full int8xint8: int32 accumulator, acc * s_a (x) s_b at the drain."""
+    m, n, k = 24, 64, 80
+    x = _randn((m, k), 21)
+    w = _randn((k, n), 22)
+    qx = quantize(x, axis=-1)   # per-row scales (m, 1)
+    qw = quantize(w, axis=-2)   # per-channel scales (1, n)
+    got = ca_mmm_kernel(qx.data, qw.data,
+                        epilogue=EpilogueSpec(dequant="ab"),
+                        scale_a=qx.scale.reshape(m),
+                        scale_b=qw.scale.reshape(n), interpret=True)
+    want = qx.dequantize() @ qw.dequantize()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    scale = float(jnp.abs(jnp.asarray(x @ w)).max())
+    assert float(jnp.abs(got - x @ w).max()) / scale < 5e-2
+
+
+def test_ca_matmul_qtensor_modes_agree():
+    """xla (dequantize up front) and interpret (drain-fused dequant)
+    dispatch agree, with leading batch dims collapsed."""
+    x = _randn((2, 13, 48), 23)
+    qw = quantize(_randn((48, 72), 24), axis=-2)
+    epi = Epilogue(bias=_randn((72,), 25), activation="gelu")
+    with gemm_mode("xla"):
+        y1 = ca_matmul(x, qw, epilogue=epi)
+    with gemm_mode("interpret"):
+        y2 = ca_matmul(x, qw, epilogue=epi)
+    assert y1.shape == (2, 13, 72)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_quant_matmul_rejects_wrong_axis_quantization():
+    """A weight quantized along the wrong (n) axis must be rejected —
+    for square weights the scale shapes coincide and would otherwise
+    mis-scale silently."""
+    w = _randn((64, 64), 31)
+    qw_wrong = quantize(w, axis=-1)
+    with pytest.raises(AssertionError, match="axis"):
+        quant_matmul(_randn((8, 64), 32), qw_wrong, interpret=True)
+
+
+def test_scales_are_fp32_for_bf16_inputs():
+    """Scale dtype contract: fp32 regardless of input dtype, block-aligned
+    (no ragged pad) included."""
+    w = _randn((256, 32), 33, jnp.bfloat16)
+    for block in (0, 128):  # 256 % 128 == 0: the no-pad branch
+        q = quantize(w, block=block)
+        assert q.scale.dtype == jnp.float32, (block, q.scale.dtype)
+
+
+def test_quant_kernel_rejects_fp8_payloads():
+    qw = quantize(_randn((64, 32), 26), fmt="fp8_e4m3")
+    with pytest.raises(AssertionError):
+        quant_matmul(_randn((8, 64), 27), qw, interpret=True)
+    # ...but the XLA dispatch path serves fp8 via dequantize.
+    with gemm_mode("xla"):
+        y = ca_matmul(_randn((8, 64), 27), qw)
+    assert y.shape == (8, 32)
+
+
+# ---------------------------------------------------------------------------
+# I/O model: quantization changes streamed bytes, not round trips
+# ---------------------------------------------------------------------------
+
+def test_planned_bytes_int8_weights_below_0p6x():
+    """Acceptance gate: on the ragged decode shape the int8-weight plan
+    streams <= 0.6x the bf16 plan's bytes, dequant scale reads included,
+    with zero additional (m, n) round trips."""
+    from repro.tuning import get_registry
+
+    m, n, k = 37, 1024, 1024
+    reg = get_registry()
+    tq = reg.resolve(m, n, k, dtype=jnp.bfloat16, dtype_b=jnp.int8,
+                     epilogue="dqb")
+    tb = reg.resolve(m, n, k, dtype=jnp.bfloat16)
+    q_int8 = io_volume_bytes(m, n, k, min(tq.bm, m), min(tq.bn, n),
+                             a_itemsize=2, b_itemsize=1, out_itemsize=2) \
+        + 4.0 * epilogue_q_elements(m, n, scale_b_elements=n)
+    q_bf16 = io_volume_bytes(m, n, k, min(tb.bm, m), min(tb.bn, n),
+                             a_itemsize=2, b_itemsize=2, out_itemsize=2)
+    assert q_int8 <= 0.6 * q_bf16, (q_int8, q_bf16)
+    # Fused dequant adds only the scale read — the no-extra-round-trip
+    # identity: planned quant bytes == split-Eq.6 + n fp32 elements.
+    assert epilogue_q_elements(m, n, scale_b_elements=n) == n
+
+
+def test_io_volume_bytes_splits_operand_itemsize():
+    m, n, k, bm, bn = 64, 256, 512, 64, 128
+    uniform = io_volume_bytes(m, n, k, bm, bn, a_itemsize=2, b_itemsize=2,
+                              out_itemsize=2)
+    from repro.core import io_volume_elements
+
+    assert uniform == pytest.approx(
+        2 * io_volume_elements(m, n, k, bm, bn))
+    mixed = io_volume_bytes(m, n, k, bm, bn, a_itemsize=2, b_itemsize=1,
+                            out_itemsize=2)
+    # Exactly the B-panel bytes are halved.
+    assert uniform - mixed == pytest.approx(m * n * k / bm)
+
+
+# ---------------------------------------------------------------------------
+# Model / checkpoint / serve integration
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    from repro.configs.base import ModelConfig
+
+    return ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=500,
+                       compute_dtype="float32", param_dtype="float32")
+
+
+def test_quantize_params_predicate_and_forward():
+    from repro.models import common as cm
+    from repro.models import model as M
+
+    cfg = _tiny_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    qparams = cm.quantize_params(params)
+    qt = {k for k, v in qparams.items() if isinstance(v, QTensor)}
+    # projections quantized; embeddings and norms untouched
+    assert any(k.endswith("w_up") for k in qt)
+    assert "head/w" in qt
+    assert not any("embed" in k or "norm" in k for k in qt)
+
+    toks = jnp.asarray(np.random.RandomState(0).randint(0, 500, (1, 8)),
+                       jnp.int32)
+    ld, _ = M.prefill(params, {"tokens": toks}, cfg, max_len=16)
+    lq, _ = M.prefill(qparams, {"tokens": toks}, cfg, max_len=16)
+    a, b = np.asarray(ld)[0], np.asarray(lq)[0]
+    cos = (a * b).sum(-1) / (np.linalg.norm(a, axis=-1)
+                             * np.linalg.norm(b, axis=-1))
+    assert (cos > 0.999).all(), cos  # documented accuracy expectation
+
+
+def test_quantized_checkpoint_round_trip(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.models import common as cm
+    from repro.models import model as M
+
+    cfg = _tiny_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    qparams = cm.quantize_params(params)
+
+    mgr = CheckpointManager(str(tmp_path / "q"))
+    mgr.save(1, qparams)
+    back = mgr.restore(qparams)
+    for a, b in zip(jax.tree_util.tree_leaves(qparams),
+                    jax.tree_util.tree_leaves(back)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    # restore_quantized: dense checkpoint -> QTensor-weighted serve tree
+    mgr2 = CheckpointManager(str(tmp_path / "dense"))
+    mgr2.save(1, params)
+    q2 = mgr2.restore_quantized(params)
+    assert sum(isinstance(v, QTensor) for v in q2.values()) \
+        == sum(isinstance(v, QTensor) for v in qparams.values())
+    # idempotent: restoring an already-quantized tree passes through
+    q3 = mgr.restore_quantized(qparams)
+    assert sum(isinstance(v, QTensor) for v in q3.values()) \
+        == sum(isinstance(v, QTensor) for v in qparams.values())
+
+
+def test_serve_engine_quantized_warmup_and_generate():
+    from repro.models import common as cm
+    from repro.models import model as M
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = _tiny_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    qparams = cm.quantize_params(params)
+    eng = ServeEngine(qparams, cfg, batch_size=1, max_len=16)
+    assert eng.quantized
+    # warmup planned the int8-weight kernel variants under their own keys
+    assert any("int8w_" in key and "/dqb" in key
+               for key in eng.gemm_plan_sources)
+    eng.submit(Request(uid=0, prompt=np.arange(5) % 500, max_new_tokens=3))
+    done = eng.run()
+    assert len(done[0].generated) == 3
+
+
+def test_quantize_tensor_respects_config_block():
+    w = _randn((256, 32), 30)
+    q = quantize_tensor(w, QuantConfig(block=128))
+    assert q.block == 128 and q.scale.shape == (2, 32)
+    with pytest.raises(AssertionError):
+        QuantConfig(block=100)  # not bk-aligned

@@ -68,6 +68,54 @@ def test_registry_resolves_epilogue_and_layout_distinctly(tmp_path):
     assert r.stats["analytic"] == 3
 
 
+def test_cache_key_mixed_dtype_stability():
+    """Quantized GEMMs key under the composite dtype string: stable,
+    distinct from both single-dtype keys, default-insensitive."""
+    base = cache_key(512, 512, 512, "bfloat16")
+    mixed = cache_key(512, 512, 512, "int8w_bf16a", epilogue="dqb")
+    assert mixed != base
+    assert mixed != cache_key(512, 512, 512, "int8", epilogue="dqb")
+    # exact literal form is part of the persistent-cache contract
+    assert mixed == "tpu-v5e/int8w_bf16a/plus_times/dqb/nn/m512n512k512"
+    # same composite string regardless of how the caller spells the dtypes
+    from repro.quant import quant_dtype_str
+
+    assert quant_dtype_str(jnp.bfloat16, jnp.int8) \
+        == quant_dtype_str(jnp.dtype("bfloat16"), "int8") == "int8w_bf16a"
+
+
+def test_registry_dtype_b_resolves_distinctly(tmp_path):
+    """dtype_b keys a separate (wider-feasible) plan; a matching dtype_b
+    collapses to the plain key instead of minting a composite one."""
+    r = _tuned_registry(tmp_path, [], autotune_enabled=False)
+    plain = r.resolve_full(37, 1024, 1024, dtype=jnp.bfloat16)
+    mixed = r.resolve_full(37, 1024, 1024, dtype=jnp.bfloat16,
+                           dtype_b=jnp.int8)
+    assert "int8w_bf16a" in mixed.key and "int8w" not in plain.key
+    assert r.stats["analytic"] == 2
+    same = r.resolve_full(37, 1024, 1024, dtype=jnp.bfloat16,
+                          dtype_b=jnp.bfloat16)
+    assert same.key == plain.key
+
+
+def test_space_mixed_itemsize_budget():
+    """int8 B operands shrink the stream budget: every candidate stays
+    inside VMEM under the *mixed* accounting, and the feasible bn at
+    fixed bm can only grow vs the uniform-bf16 budget."""
+    cands = candidate_tile_configs(37, 4096, 4096, dtype_in=jnp.bfloat16,
+                                   dtype_b=jnp.int8, top_n=6,
+                                   epilogue="dqb")
+    assert cands
+    budget = 0.75 * V5E.vmem_bytes
+    for c in cands:
+        assert tile_vmem_bytes(c.bm, c.bn, c.bk, 2, 4,
+                               itemsize_b=1) <= budget
+    best_mixed = max(c.bn for c in cands)
+    uniform = candidate_tile_configs(37, 4096, 4096, dtype_in=jnp.bfloat16,
+                                     top_n=6)
+    assert best_mixed >= max(c.bn for c in uniform)
+
+
 def test_space_epilogue_vmem_budget():
     """Fused candidates charge the streamed epilogue tiles against the
     VMEM budget (and remain feasible by construction)."""
@@ -101,6 +149,53 @@ def test_cache_corrupt_file_loads_empty(tmp_path):
     assert len(c) == 0
     c.put("k", CacheEntry(bm=8, bn=128, bk=128))  # and is writable again
     assert len(TuningCache(path)) == 1
+
+
+def test_cache_merge_cli_round_trip(tmp_path):
+    """`python -m repro.tuning.cache merge a.json b.json -o merged.json`:
+    union across targets, newest-wins per key, output loads back as a
+    schema-valid cache."""
+    a_path, b_path = tmp_path / "a.json", tmp_path / "b.json"
+    out = tmp_path / "merged.json"
+    a, b = TuningCache(a_path), TuningCache(b_path)
+
+    key_v5e = cache_key(512, 512, 512, "float32")
+    key_v5p = key_v5e.replace("tpu-v5e", "tpu-v5p")
+    a.put(key_v5e, CacheEntry(bm=64, bn=128, bk=128, updated_at=100.0))
+    a.put(key_v5p, CacheEntry(bm=128, bn=128, bk=128, updated_at=50.0))
+    # b holds a *newer* measurement for the shared v5e key and an older
+    # one for v5p — merge must pick per-key, not per-file.
+    b.put(key_v5e, CacheEntry(bm=256, bn=256, bk=128, updated_at=200.0))
+    b.put(key_v5p, CacheEntry(bm=8, bn=128, bk=128, updated_at=10.0))
+
+    rc = tcache.main(["merge", str(a_path), str(b_path), "-o", str(out)])
+    assert rc == 0
+
+    merged = TuningCache(out)
+    assert len(merged) == 2  # union across the two hw targets
+    assert merged.get(key_v5e).bm == 256   # newest wins (from b)
+    assert merged.get(key_v5e).updated_at == 200.0  # provenance kept
+    assert merged.get(key_v5p).bm == 128   # newest wins (from a)
+    # round trip: merged file is a normal schema-v2 cache
+    raw = json.loads(out.read_text())
+    assert raw["schema"] == tcache.SCHEMA_VERSION
+
+
+def test_cache_entries_carry_updated_at(tmp_path):
+    """Measurement-derived entries are timestamped (the merge arbiter);
+    explicit timestamps survive the disk round trip."""
+    stamped = CacheEntry.from_tile(TileConfig(bm=8, bn=128, bk=128),
+                                   measured_s=1e-3)
+    assert stamped.updated_at > 0
+    c = TuningCache(tmp_path / "c.json")
+    c.put("k2", CacheEntry(bm=8, bn=128, bk=128, updated_at=42.0))
+    assert TuningCache(tmp_path / "c.json").get("k2").updated_at == 42.0
+    # a tuned registry writes stamped entries end to end
+    calls = []
+    r = _tuned_registry(tmp_path, calls)
+    r.resolve(512, 512, 512, dtype=jnp.float32)
+    key = cache_key(512, 512, 512, "float32")
+    assert r.cache.get(key).updated_at > 0
 
 
 def test_cache_atomic_write_crash_safety(tmp_path, monkeypatch):
@@ -366,10 +461,20 @@ def test_model_gemm_shapes_and_warmup(tmp_path):
     assert any(w[4] == "tn" for w in train_loads)
     assert not any(w[4] != "nn" for w in loads)
 
+    from repro.tuning import quantize_workloads
+
+    qloads = quantize_workloads(loads)
+    # every 'nn' forward entry becomes its int8-weight variant
+    assert (32, cfg.d_ff, cfg.d_model, "dqb+silu+mul", "nn", "int8") in qloads
+    assert (32, cfg.d_model, cfg.d_ff, "dqb+res", "nn", "int8") in qloads
+    assert all(len(w) == 6 for w in qloads)  # all forward loads are 'nn'
+
     calls = []
     treg.set_registry(_tuned_registry(tmp_path, calls, autotune_enabled=False))
     sources = warmup_model(cfg, [32])
     assert sources and set(sources.values()) == {"analytic"}
+    qsources = warmup_model(cfg, [32], quant=True)
+    assert qsources and all("int8w_" in k for k in qsources)
     # Second warmup: served from the exact-shape analytic memo (the
     # resolver runs again but nothing is re-solved or re-timed).
     before = dict(treg.get_registry().stats)
