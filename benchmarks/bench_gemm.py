@@ -21,6 +21,13 @@ dequant's scale-read-only overhead, and numerics vs both the
 dequantized-weight oracle and the dense fp32 oracle.  ``--check-baseline``
 gates the planned int8w/bf16 ratio at ``QUANT_RATIO_GATE``.
 
+The **glu** section compares the one-pass dual-branch SwiGLU program
+(gate and up sharing the streamed x panel — two accumulators, one drain)
+against the two-pass up + fused-gate formulation on a prefill FFN shape:
+planned bytes from the shared-A extension of Eq. 6, XLA ``bytes
+accessed`` of one jit vs two, numerics vs the oracle.
+``--check-baseline`` gates the planned ratio at ``GLU_RATIO_GATE``.
+
 ``--tuned`` additionally runs the empirical autotuner (repro.tuning)
 against the analytic plan on small shapes — in Pallas interpret mode on
 CPU, on the real kernel on TPU — and reports the tuned-vs-analytic
@@ -55,7 +62,10 @@ N = 16384  # paper's benchmark size
 # (planned_q_bytes_fused / _unfused, xla bytes accessed for both paths).
 # v3: adds the "quant" section (int8-weight vs bf16 planned bytes on the
 # ragged decode shape, drain-fused dequant numerics vs the fp32 oracle).
-JSON_SCHEMA_VERSION = 3
+# v4: adds the "glu" section (one-pass dual-branch SwiGLU program vs the
+# two-pass up + gate formulation: planned + XLA-measured bytes, ratio
+# gated at <= GLU_RATIO_GATE).
+JSON_SCHEMA_VERSION = 4
 DEFAULT_JSON_PATH = "BENCH_gemm.json"
 
 # The ragged serving shape of the fused section: 37 decode tokens through
@@ -68,6 +78,15 @@ FUSED_EPILOGUE = "bias+gelu"
 # dominates at small m — the regime quantization halves) and gates the
 # planned int8w/bf16 byte ratio at this ceiling in CI.
 QUANT_RATIO_GATE = 0.6
+
+# The GLU section runs a prefill FFN shape (rows x d_ff x d_model): the
+# one-pass program's win is a whole A stream plus the up output's write
+# and re-read — terms that matter when the x panel traffic is comparable
+# to the weight panels' (at decode-m the two unavoidable weight streams
+# dominate both formulations and the ratio tends to 1).
+GLU_SHAPE = (512, 4096, 1024)
+GLU_RATIO_GATE = 0.75
+GLU_TAG = "glu.silu(none|none)"
 
 
 def _record(m, n, k, dtype, tile, source, median_s, model_s, kind, **extra):
@@ -317,6 +336,107 @@ def run_quant(records=None, shape=FUSED_SHAPE, base_idx=()):
         records.append(rec)
 
 
+def run_glu(records=None, shape=GLU_SHAPE, base_idx=()):
+    """One-pass dual-branch SwiGLU program vs the two-pass formulation.
+
+    Planned bytes come from the shared-A extension of Eq. 6
+    (``io_volume_elements_program``: one A stream, two B streams, one
+    drain) against ``two_pass_glu_q_elements`` (two full GEMMs plus the
+    up output's write and mul-operand re-read).  XLA ``bytes accessed``
+    of the compiled computations corroborates (one jit vs two jits —
+    the two-pass u round trip is forced through memory); the
+    interpret-mode kernel run checks numerics against the oracle.
+    ``--check-baseline`` gates the planned one/two-pass ratio at
+    ``GLU_RATIO_GATE``.
+    """
+    from repro.core.io_model import (io_volume_elements_program,
+                                     two_pass_glu_q_elements)
+    from repro.kernels import glu_matmul
+    from repro.tuning import get_registry
+
+    from repro.kernels.program import program_cost
+
+    m, n, k = shape
+    dt = jnp.dtype(jnp.float32)
+    res = get_registry().resolve_full(m, n, k, dtype=dt, epilogue=GLU_TAG)
+    tile = res.config
+    # Planned Q straight from the program tag's cost shape, so an
+    # rms-prologue GLU_TAG would automatically charge its vector reads.
+    cost = program_cost(GLU_TAG)
+    q_one = io_volume_elements_program(
+        m, n, k, min(tile.bm, m), min(tile.bn, n),
+        n_b=cost.n_b, n_out=cost.n_out,
+        prologue_mk_ops=cost.prologue_mk,
+        prologue_kn_ops=cost.prologue_kn,
+        prologue_vec_elements=(m + k) if cost.prologue_vec else 0) \
+        * dt.itemsize
+    # The two-pass baseline's GEMMs plan under their own keys: the up
+    # GEMM is a plain "none" kernel, the gate GEMM a fused "silu+mul"
+    # one (whose streamed-mul VMEM resident can shrink its tile).
+    t_up = get_registry().resolve(m, n, k, dtype=dt)
+    t_gate = get_registry().resolve(m, n, k, dtype=dt, epilogue="silu+mul")
+    q_two = two_pass_glu_q_elements(
+        m, n, k, min(t_up.bm, m), min(t_up.bn, n),
+        min(t_gate.bm, m), min(t_gate.bn, n)) * dt.itemsize
+    ratio = q_one / q_two
+
+    r = np.random.RandomState(0)
+    x = jnp.asarray(r.randn(m, k), dt)
+    wg = jnp.asarray(r.randn(k, n), dt)
+    wu = jnp.asarray(r.randn(k, n), dt)
+
+    def one_fn(x, wg, wu):
+        g = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+        u = jnp.dot(x, wu, preferred_element_type=jnp.float32)
+        return (jax.nn.silu(g) * u).astype(dt)
+
+    def up_fn(x, wu):
+        return jnp.dot(x, wu, preferred_element_type=jnp.float32).astype(dt)
+
+    def gate_fn(x, wg, u):
+        g = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+        return (jax.nn.silu(g) * u).astype(dt)
+
+    one_c = jax.jit(one_fn).lower(x, wg, wu).compile()
+    up_c = jax.jit(up_fn).lower(x, wu).compile()
+    u_sds = jax.ShapeDtypeStruct((m, n), dt)
+    gate_c = jax.jit(gate_fn).lower(x, wg, u_sds).compile()
+    xla_one = _xla_bytes(one_c)
+    xla_two = _xla_bytes(up_c) + _xla_bytes(gate_c)
+
+    # Numerics: the dual-branch program kernel vs the oracle.  Scale-
+    # relative bound: the tiled k accumulation reorders fp32 adds, which
+    # blows past a pointwise rtol exactly where silu crosses zero.
+    got = np.asarray(glu_matmul(x, wg, wu, tile=tile, interpret=True),
+                     np.float32)
+    want = np.asarray(one_fn(x, wg, wu), np.float32)
+    err = np.abs(got - want).max() / np.abs(want).max()
+    assert err < 1e-5, err
+
+    med = time_call(jax.jit(one_fn), x, wg, wu)
+    rl = gemm_roofline(m, n, k, tile, dt)
+    rec = _record(m, n, k, dt, tile, res.source, med * 1e-6, rl.time_s,
+                  "glu",
+                  epilogue=GLU_TAG,
+                  planned_q_bytes_one_pass=q_one,
+                  planned_q_bytes_two_pass=q_two,
+                  planned_ratio=ratio,
+                  planned_q_saved_frac=1.0 - ratio,
+                  xla_bytes_one_pass=xla_one,
+                  xla_bytes_two_pass=xla_two,
+                  numerics_ok=True)
+    note = _delta_note(rec, base_idx, "planned_q_bytes_one_pass") \
+        if base_idx else "baseline=none"
+    emit(f"gemm_glu_{dt.name}_m{m}", med,
+         f"program={GLU_TAG};tile={tile.bm}x{tile.bn}x{tile.bk};"
+         f"plannedQ_one={q_one / 1e6:.3f}MB;"
+         f"plannedQ_two={q_two / 1e6:.3f}MB;ratio={ratio:.3f};"
+         f"xla_bytes_one={xla_one / 1e6:.3f}MB;"
+         f"xla_bytes_two={xla_two / 1e6:.3f}MB;{note}")
+    if records is not None:
+        records.append(rec)
+
+
 def run_tuned(sizes=(128, 256), dtypes=(jnp.float32,), iters=2,
               max_candidates=4, records=None, base_idx=()):
     """Tuned-vs-analytic comparison (the ``--tuned`` mode).
@@ -378,6 +498,23 @@ def check_baseline(records, base_idx) -> int:
     invariant is still enforced)."""
     failures = 0
     for rec in records:
+        if rec["kind"] == "glu":
+            # The dual-branch program's whole point is the shared-A byte
+            # win: the planned one/two-pass ratio must clear the gate and
+            # never regress vs the committed baseline.
+            if rec["planned_ratio"] > GLU_RATIO_GATE:
+                print(f"REGRESSION {rec['shape']}/{rec['dtype']}: planned "
+                      f"one/two-pass GLU ratio {rec['planned_ratio']:.3f} > "
+                      f"{GLU_RATIO_GATE}")
+                failures += 1
+            base = base_idx.get(("glu", tuple(rec["shape"]), rec["dtype"]))
+            if base is not None and rec["planned_q_bytes_one_pass"] \
+                    > base["planned_q_bytes_one_pass"]:
+                print(f"REGRESSION {rec['shape']}/{rec['dtype']}: planned "
+                      f"one-pass bytes {rec['planned_q_bytes_one_pass']:.0f} "
+                      f"> baseline {base['planned_q_bytes_one_pass']:.0f}")
+                failures += 1
+            continue
         if rec["kind"] == "quant":
             # Quantization's whole value is the byte ratio: planned int8w
             # bytes must stay at or below the gate vs the bf16 plan, and
@@ -413,7 +550,7 @@ def check_baseline(records, base_idx) -> int:
             failures += 1
     if not failures:
         print("# baseline check OK (fused planned bytes <= baseline, "
-              "< unfused; quant ratio <= gate)")
+              "< unfused; quant ratio <= gate; glu ratio <= gate)")
     return failures
 
 
@@ -450,6 +587,8 @@ def main(argv=None):
                     help="skip the fused-epilogue section")
     ap.add_argument("--skip-quant", action="store_true",
                     help="skip the int8-weight quantized section")
+    ap.add_argument("--skip-glu", action="store_true",
+                    help="skip the one-pass SwiGLU program section")
     args = ap.parse_args(argv)
     if any(s <= 0 for s in args.sizes):
         ap.error(f"--sizes must be positive, got {args.sizes}")
@@ -471,6 +610,8 @@ def main(argv=None):
         run_fused(records=records, base_idx=base_idx)
     if not args.skip_quant:
         run_quant(records=records, base_idx=base_idx)
+    if not args.skip_glu:
+        run_glu(records=records, base_idx=base_idx)
     if args.tuned:
         run_tuned(sizes=tuple(args.sizes), iters=args.iters,
                   max_candidates=args.max_candidates, records=records,

@@ -11,13 +11,17 @@ from repro.core.io_model import (
     io_lower_bound_elements,
     io_volume_bytes,
     io_volume_elements,
+    io_volume_elements_program,
     solve_tile_config,
+    two_pass_glu_q_elements,
     vmem_quantum,
 )
 from repro.core.gemm import (
-    ca_einsum, ca_matmul, gemm_mode, get_gemm_mode, plan_for, set_gemm_mode,
+    ca_einsum, ca_expert_glu_matmul, ca_expert_matmul, ca_glu_matmul,
+    ca_matmul, gemm_mode, get_gemm_mode, plan_for, set_gemm_mode,
 )
 from repro.kernels.epilogue import Epilogue, EpilogueSpec
+from repro.kernels.program import GemmProgramSpec, PrologueSpec, RmsPrologue
 from repro.core.distributed import (
     DistributedCost,
     choose_schedule,
@@ -30,10 +34,13 @@ __all__ = [
     "TpuTarget", "V5E", "V5P", "get_target",
     "TileConfig", "computational_intensity", "arithmetic_intensity_ops_per_byte",
     "io_volume_elements", "io_volume_bytes", "io_lower_bound_elements",
+    "io_volume_elements_program", "two_pass_glu_q_elements",
     "solve_tile_config",
     "vmem_quantum", "gemm_roofline", "epilogue_q_elements",
-    "ca_matmul", "ca_einsum", "gemm_mode", "get_gemm_mode", "set_gemm_mode",
+    "ca_matmul", "ca_glu_matmul", "ca_expert_matmul", "ca_expert_glu_matmul",
+    "ca_einsum", "gemm_mode", "get_gemm_mode", "set_gemm_mode",
     "plan_for", "Epilogue", "EpilogueSpec",
+    "GemmProgramSpec", "PrologueSpec", "RmsPrologue",
     "DistributedCost", "choose_schedule", "dist_matmul",
     "dist_matmul_reference", "estimate_cost",
 ]

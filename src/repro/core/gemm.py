@@ -31,6 +31,9 @@ from repro.core.hardware import TpuTarget, V5E
 from repro.core.io_model import TileConfig
 from repro.kernels import ops as kops
 from repro.kernels.epilogue import Epilogue, apply_reference
+from repro.kernels.program import (GemmProgramSpec, NO_PROLOGUE,
+                                   PrologueSpec, RmsPrologue,
+                                   apply_rms_reference, rms_row_scale)
 
 _state = threading.local()
 
@@ -96,6 +99,13 @@ def _flatten_epilogue(epilogue: Optional[Epilogue], lead, m: int, n: int):
                     mul=mul, residual=residual)
 
 
+def _apply_rms_xla(x: jax.Array, prologue: RmsPrologue) -> jax.Array:
+    """Oracle semantics of the rms prologue on the XLA dispatch path —
+    the exact elementwise chain of ``models.common.rms_norm``."""
+    return apply_rms_reference(x, rms_row_scale(x, prologue.eps),
+                               prologue.gain)
+
+
 def ca_matmul(
     x: jax.Array,
     w=None,
@@ -105,12 +115,18 @@ def ca_matmul(
     mode: Optional[str] = None,
     epilogue: Optional[Epilogue] = None,
     quant=None,
+    prologue: Optional[RmsPrologue] = None,
 ) -> jax.Array:
     """``epilogue(x @ w)`` with leading batch dims collapsed into the GEMM
     m-dim.
 
     x: (..., K), w: (K, N) -> (..., N).  This covers the projections, FFNs,
     expert matmuls and logit heads of every architecture in configs/.
+
+    ``prologue`` (an :class:`RmsPrologue`) folds rms_norm into the x-tile
+    fetch on the kernel paths — the normalized activation tensor never
+    materializes in HBM; the XLA mode applies the identical fp32
+    reference chain up front, so numerics are mode-independent.
 
     A quantized weight — ``quant=QTensor`` or ``w`` itself being a
     :class:`repro.quant.QTensor` (the form checkpoint-quantized param
@@ -143,6 +159,8 @@ def ca_matmul(
                               or quant.fmt != "int8"):
         # Oracle path: dequantize (weight-sized fp copy — fine on the XLA
         # fallback, defeats the purpose on a kernel path) then plain GEMM.
+        if prologue is not None:
+            x = _apply_rms_xla(x, prologue)
         z = jnp.dot(x, quant.dequantize(x.dtype),
                     preferred_element_type=jnp.float32)
         if epilogue is not None:
@@ -154,10 +172,13 @@ def ca_matmul(
         epi2 = _flatten_epilogue(epilogue, lead, m, n)
         y2 = kops.quant_matmul(x2, quant, epi2,
                                interpret=(mode == "interpret"),
-                               out_dtype=out_dtype, hw=hw)
+                               out_dtype=out_dtype, hw=hw,
+                               prologue=prologue)
         return y2.reshape(*lead, n).astype(out_dtype)
 
     if mode == "xla" or m == 0:
+        if prologue is not None:
+            x = _apply_rms_xla(x, prologue)
         acc = jnp.float32 if not jnp.issubdtype(x.dtype, jnp.integer) else jnp.int32
         z = jnp.dot(x, w.astype(x.dtype) if acc != jnp.int32 else w,
                     preferred_element_type=acc)
@@ -167,11 +188,171 @@ def ca_matmul(
 
     x2 = x.reshape(m, k)
     epi2 = _flatten_epilogue(epilogue, lead, m, n)
-    tag = epi2.spec().tag() if epi2 is not None else "none"
+    # Plan here (not in ops) so the caller's hw target reaches the
+    # registry; the key carries the full program tag (prologue included).
+    from repro.kernels.epilogue import IDENTITY
+
+    tag = GemmProgramSpec(
+        prologue=PrologueSpec(kind="rms") if prologue is not None
+        else NO_PROLOGUE,
+        branches=(epi2.spec() if epi2 is not None else IDENTITY,)).tag()
     tile = plan_for(m, n, k, x.dtype, hw, epilogue=tag)
-    y2 = kops.fused_matmul(x2, w, epi2, tile, interpret=(mode == "interpret"),
-                           out_dtype=out_dtype)
+    y2 = kops.fused_matmul(x2, w, epi2, tile,
+                           interpret=(mode == "interpret"),
+                           out_dtype=out_dtype, prologue=prologue)
     return y2.reshape(*lead, n).astype(out_dtype)
+
+
+def ca_glu_matmul(
+    x: jax.Array,
+    w_gate,
+    w_up,
+    *,
+    activation: str = "silu",
+    out_dtype=None,
+    hw: TpuTarget = V5E,
+    mode: Optional[str] = None,
+    prologue: Optional[RmsPrologue] = None,
+) -> jax.Array:
+    """``act(x @ Wg) · (x @ Wu)`` as one dual-branch program: the x panel
+    streams **once** for both contractions (two VMEM accumulators, one
+    drain) — SwiGLU without the separate ``up`` GEMM's write/read or its
+    second x stream.  ``prologue`` folds the pre-FFN rms_norm into the
+    same fetch.
+
+    Quantized weights (both :class:`repro.quant.QTensor`, per-channel
+    scales) stream int8 with a per-branch drain-fused dequant; per-tile
+    (blocked) scales fall back to two single-branch quantized passes.
+    The XLA mode applies the identical fp32 reference chain (numerics
+    oracle).
+    """
+    from repro.quant.scales import QTensor  # leaf module, cycle-free
+
+    mode = mode or get_gemm_mode()
+    quantized = isinstance(w_gate, QTensor)
+    assert quantized == isinstance(w_up, QTensor), \
+        "quantize both GLU weights or neither"
+    k_w, n = w_gate.shape
+    assert x.shape[-1] == k_w and tuple(w_up.shape) == (k_w, n), \
+        (x.shape, w_gate.shape, w_up.shape)
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    m = 1
+    for d in lead:
+        m *= d
+
+    kernel_ok = mode != "xla" and m > 0 and \
+        (not quantized or (w_gate.fmt == "int8" and w_up.fmt == "int8"))
+    if quantized and kernel_ok and (w_gate.block or w_up.block):
+        # Per-tile scales pin the kernel k-tile per branch — not
+        # expressible in one dual-branch program; two fused quantized
+        # passes (up, then gate with the mul epilogue) keep correctness.
+        up = ca_matmul(x, w_up, out_dtype=out_dtype, hw=hw, mode=mode,
+                       prologue=prologue)
+        return ca_matmul(x, w_gate, out_dtype=out_dtype, hw=hw, mode=mode,
+                         epilogue=Epilogue(activation=activation, mul=up),
+                         prologue=prologue)
+
+    if not kernel_ok:
+        if prologue is not None:
+            x = _apply_rms_xla(x, prologue)
+        wg = w_gate.dequantize(x.dtype) if quantized else w_gate.astype(x.dtype)
+        wu = w_up.dequantize(x.dtype) if quantized else w_up.astype(x.dtype)
+        g = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+        u = jnp.dot(x, wu, preferred_element_type=jnp.float32)
+        from repro.kernels.epilogue import act_fn
+
+        return (act_fn(activation)(g) * u).astype(out_dtype)
+
+    x2 = x.reshape(m, k)
+    interpret = mode == "interpret"
+    if quantized:
+        y2 = kops.quant_glu_matmul(x2, w_gate, w_up, activation=activation,
+                                   prologue=prologue, interpret=interpret,
+                                   out_dtype=out_dtype, hw=hw)
+    else:
+        from repro.kernels.epilogue import IDENTITY
+
+        tag = GemmProgramSpec(
+            prologue=PrologueSpec(kind="rms") if prologue is not None
+            else NO_PROLOGUE,
+            branches=(IDENTITY, IDENTITY), combine="glu",
+            combine_activation=activation).tag()
+        tile = plan_for(m, n, k, x.dtype, hw, epilogue=tag)
+        y2 = kops.glu_matmul(x2, w_gate, w_up, activation=activation,
+                             prologue=prologue, tile=tile,
+                             interpret=interpret, out_dtype=out_dtype)
+    return y2.reshape(*lead, n).astype(out_dtype)
+
+
+def ca_expert_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    out_dtype=None,
+    hw: TpuTarget = V5E,
+    mode: Optional[str] = None,
+) -> jax.Array:
+    """Batched expert contraction ``x[..., e, :, :] @ w[e]`` (the MoE
+    ``becd,edf -> becf`` einsum) routed per-expert through the registry.
+
+    On kernel paths each expert's GEMM is a registry-planned CA-MMM (the
+    expert loop ROADMAP item (d) asked for); the XLA mode keeps the
+    batched einsum — the exact oracle the loop is tested against.
+
+    Trade-off, deliberate: the loop traces E kernel instances and slices
+    the expert axis per step, so on a *multi-device mesh with the expert
+    dim sharded* the einsum/XLA dispatch (the default, and what the
+    sharded launch paths use) remains the right choice — GSPMD
+    partitions it cleanly across experts, while slicing a sharded axis
+    would gather per-expert buffers.  The kernel loop is the
+    single-device/serving path; folding it into one vmapped kernel
+    launch is ROADMAP follow-on (d2).
+    """
+    mode = mode or get_gemm_mode()
+    E, k_w, n = w.shape
+    assert x.shape[-3] == E and x.shape[-1] == k_w, (x.shape, w.shape)
+    out_dtype = out_dtype or x.dtype
+    if mode == "xla" or x.size == 0:
+        z = jnp.einsum("...ecd,edf->...ecf", x, w,
+                       preferred_element_type=jnp.float32)
+        return z.astype(out_dtype)
+    ys = [ca_matmul(x[..., e, :, :], w[e], out_dtype=out_dtype, hw=hw,
+                    mode=mode) for e in range(E)]
+    return jnp.stack(ys, axis=-3)
+
+
+def ca_expert_glu_matmul(
+    x: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    *,
+    activation: str = "silu",
+    out_dtype=None,
+    hw: TpuTarget = V5E,
+    mode: Optional[str] = None,
+) -> jax.Array:
+    """Per-expert dual-branch GLU: each expert's gate/up pair shares one
+    pass over that expert's token buffer (the capacity-buffer rows stream
+    once, two accumulators per expert GEMM)."""
+    mode = mode or get_gemm_mode()
+    E, k_w, n = w_gate.shape
+    assert x.shape[-3] == E and x.shape[-1] == k_w, (x.shape, w_gate.shape)
+    assert w_up.shape == w_gate.shape, (w_up.shape, w_gate.shape)
+    out_dtype = out_dtype or x.dtype
+    if mode == "xla" or x.size == 0:
+        from repro.kernels.epilogue import act_fn
+
+        g = jnp.einsum("...ecd,edf->...ecf", x, w_gate,
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("...ecd,edf->...ecf", x, w_up,
+                       preferred_element_type=jnp.float32)
+        return (act_fn(activation)(g) * u).astype(out_dtype)
+    ys = [ca_glu_matmul(x[..., e, :, :], w_gate[e], w_up[e],
+                        activation=activation, out_dtype=out_dtype, hw=hw,
+                        mode=mode) for e in range(E)]
+    return jnp.stack(ys, axis=-3)
 
 
 def ca_einsum(spec: str, x: jax.Array, w: jax.Array, **kw) -> jax.Array:

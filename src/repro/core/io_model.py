@@ -97,6 +97,56 @@ def io_volume_bytes(m: int, n: int, k: int, x_tot: int, y_tot: int, *,
             + m * n * k * (a_itemsize / y_tot + b_itemsize / x_tot))
 
 
+def io_volume_elements_program(m: int, n: int, k: int, x_tot: int,
+                               y_tot: int, *, n_b: int = 1, n_out: int = 1,
+                               prologue_mk_ops: int = 0,
+                               prologue_kn_ops: int = 0,
+                               prologue_vec_elements: int = 0) -> float:
+    """Eq. 6 extended to shared-A multi-output programs.
+
+    Eq. 6's stream terms split by operand (see :func:`io_volume_bytes`):
+    ``mnk/y_tot`` is the A panel's traffic, ``mnk/x_tot`` one B panel's.
+    A program with ``n_b`` branches streams A **once** and each B operand
+    once per memory tile, and drains ``n_out`` outputs::
+
+        Q = n_out·mn + (n_b + p_kn)·mnk/x_tot + (1 + p_mk)·mnk/y_tot + p_vec
+
+    where ``p_mk`` counts (m, k)-shaped prologue operands riding the A
+    stream (the forward dact preact: 1), ``p_kn`` (k, n)-shaped ones
+    riding the B stream (the ``@b`` backward variant), and ``p_vec`` the
+    O(m + k) prologue vector reads (rms row scale + gain).  The
+    dual-output GLU win falls straight out: vs two single-output GEMMs
+    (which pay ``2mn/x`` *and* ``2mn/y`` *and* 3 mn output terms — the
+    up write plus its re-read as the gate's mul operand plus the gate
+    output) the shared-A program saves a whole A stream and 2mn of
+    output round trips.  The model shows the win before the bench does.
+    """
+    return (n_out * m * n
+            + (n_b + prologue_kn_ops) * m * n * k / x_tot
+            + (1.0 + prologue_mk_ops) * m * n * k / y_tot
+            + prologue_vec_elements)
+
+
+def two_pass_glu_q_elements(m: int, n: int, k: int, x_tot: int,
+                            y_tot: int,
+                            x_gate: Optional[int] = None,
+                            y_gate: Optional[int] = None) -> float:
+    """Planned traffic of the *two-pass* SwiGLU formulation: an up GEMM
+    (plain Eq. 6, tiled as ``(x_tot, y_tot)``) plus a gate GEMM whose
+    drain streams the up output as its mul operand
+    (``epilogue_q_elements(n_stream_mn=1)``).  The gate GEMM plans under
+    its own fused-epilogue key, so it may tile differently — pass
+    ``(x_gate, y_gate)`` (default: same as the up GEMM) so the baseline
+    is the traffic the two-pass path would actually plan, not a
+    one-tile approximation.  The comparison baseline for the dual-branch
+    GLU program."""
+    x_gate = x_tot if x_gate is None else x_gate
+    y_gate = y_tot if y_gate is None else y_gate
+    return (io_volume_elements(m, n, k, x_tot, y_tot)
+            + io_volume_elements(m, n, k, x_gate, y_gate)
+            + epilogue_q_elements(m, n, n_stream_mn=1))
+
+
 def io_lower_bound_elements(m: int, n: int, k: int, s_words: int) -> float:
     """Eq. 7 consequence: Q >= 2mnk/sqrt(S) (+ the mandatory mn write)."""
     return 2.0 * m * n * k / math.sqrt(s_words) + m * n
@@ -179,7 +229,11 @@ def tile_vmem_bytes(bm: int, bn: int, bk: int, itemsize_in: int,
                     double_buffer_out: bool = False,
                     epilogue_mn_ops: int = 0,
                     epilogue_bias: bool = False,
-                    itemsize_b: Optional[int] = None) -> int:
+                    itemsize_b: Optional[int] = None,
+                    n_b: int = 1,
+                    n_out: int = 1,
+                    prologue_mk_ops: int = 0,
+                    prologue_kn_ops: int = 0) -> int:
     """VMEM bytes claimed by one kernel instance.
 
     A and B stream blocks are double-buffered (Pallas pipeline = the
@@ -199,12 +253,23 @@ def tile_vmem_bytes(bm: int, bn: int, bk: int, itemsize_in: int,
     (bm, bn) region — quantization buys intensity, not just bandwidth.
     Dequant scale vectors (O(bm + bn) fp32) are below the budget's
     resolution and are not charged.
+
+    Multi-branch programs (``n_b`` B operands) double-buffer each B
+    stream and park one accumulator per branch; ``n_out`` drained outputs
+    each claim a write-back block; ``prologue_mk_ops`` /
+    ``prologue_kn_ops`` count streamed prologue operands riding the A
+    stream ((bm, bk) blocks — the forward dact preact) and the B stream
+    ((bk, bn) blocks — the ``@b`` backward variant), charged at fp32
+    width (their worst case — the preact is stored fp32).  The rms
+    prologue's O(bm + bk) scale vectors are, like dequant scales, below
+    the budget's resolution.
     """
     itemsize_out = itemsize_out if itemsize_out is not None else itemsize_in
     itemsize_b = itemsize_b if itemsize_b is not None else itemsize_in
-    stream = 2 * (bm * bk * itemsize_in + bk * bn * itemsize_b)
-    acc = bm * bn * acc_bytes
-    out = bm * bn * itemsize_out  # output block written at drain
+    stream = 2 * (bm * bk * (itemsize_in + 4 * prologue_mk_ops)
+                  + bk * bn * (n_b * itemsize_b + 4 * prologue_kn_ops))
+    acc = n_b * bm * bn * acc_bytes
+    out = n_out * bm * bn * itemsize_out  # output blocks written at drain
     if double_buffer_out:
         acc *= 2
     epi = epilogue_mn_ops * bm * bn * itemsize_in

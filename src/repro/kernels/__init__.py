@@ -2,24 +2,28 @@
 I/O-minimal tiling applied to attention (beyond-paper extension).
 
 Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-wrappers + custom VJPs), epilogue.py (fused drain-phase epilogue specs)
-and ref.py (pure-jnp oracles used by tests).
+wrappers + custom VJPs), program.py (GemmProgram specs: prologue x
+branches x epilogue x dequant), epilogue.py (fused drain-phase epilogue
+specs) and ref.py (pure-jnp oracles used by tests).
 """
 
 # NOTE: the submodule is named ca_mmm; re-export its kernel entry point
 # under a distinct name so the module attribute is not shadowed.
 from repro.kernels.ca_mmm import ca_mmm as ca_mmm_kernel
-from repro.kernels.ca_mmm import ca_mmm_k_outer, layout_tag
+from repro.kernels.ca_mmm import ca_gemm_program, ca_mmm_k_outer, layout_tag
 from repro.kernels.epilogue import Epilogue, EpilogueSpec
 from repro.kernels.flash_attn import flash_attention_tpu
 from repro.kernels.ops import (ca_matmul_trainable, ca_mmm_any,
-                               ca_mmm_padded, distance_product, fused_matmul,
-                               quant_matmul)
+                               distance_product, fused_matmul, glu_matmul,
+                               quant_glu_matmul, quant_matmul)
+from repro.kernels.program import (GemmProgramSpec, PrologueSpec, RmsPrologue,
+                                   program_from_tag, program_tag)
 from repro.kernels import ref
 
 __all__ = [
-    "ca_mmm_kernel", "ca_mmm_k_outer", "ca_mmm_any", "ca_mmm_padded",
-    "ca_matmul_trainable", "fused_matmul", "quant_matmul",
-    "distance_product", "Epilogue", "EpilogueSpec", "layout_tag",
-    "flash_attention_tpu", "ref",
+    "ca_mmm_kernel", "ca_gemm_program", "ca_mmm_k_outer", "ca_mmm_any",
+    "ca_matmul_trainable", "fused_matmul", "glu_matmul", "quant_matmul",
+    "quant_glu_matmul", "distance_product", "Epilogue", "EpilogueSpec",
+    "GemmProgramSpec", "PrologueSpec", "RmsPrologue", "program_from_tag",
+    "program_tag", "layout_tag", "flash_attention_tpu", "ref",
 ]

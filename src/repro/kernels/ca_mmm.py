@@ -17,17 +17,24 @@ Schedule (identical to the paper's, per DESIGN.md §2):
   on TPU the MXU pipelines fp accumulation natively, so the paper's
   integer-only k-inner variant (Sec. 4.2) is legal for all dtypes.
 
+The kernel executes :class:`repro.kernels.program.GemmProgramSpec`
+**programs** — the paper's independent streaming stages made explicit:
+
+* an optional **prologue** (rms_norm row/gain scaling, or the activation
+  backward ``g·act'(h)``) runs on the decorated operand's tile right at
+  the fetch, so the producer's output never takes an HBM round trip;
+* 1..2 **B branches**, each with its own VMEM accumulator and its own
+  drain chain (dequant / bias) — a dual-branch program streams the A
+  panel *once* for both contractions (the reuse the paper's whole model
+  optimizes for);
+* the **combiner** (``glu``) drains ``act(v_gate) · v_up`` as a single
+  write-back; plain programs drain each branch separately.
+
 Ragged shapes run **natively**: the grid is ceil-divided and edge tiles
 are masked in-kernel (zero fill for ``plus_times``, ``+inf`` for
 ``min_plus``) — no padded operand copies in HBM.  The drain store is
 predicated by Pallas's block bounds, so a ragged C tile still causes
 exactly one (partial) write-back.
-
-The drain can also run a fused **epilogue** (bias / activation / GLU-gate
-/ residual, see :mod:`repro.kernels.epilogue`): the elementwise chain
-executes on the VMEM accumulator right before the single write-back, so a
-full projection/FFN layer emits no output traffic beyond Eq. 6's ``mn``
-term plus the epilogue's own operand reads.
 
 ``transpose_a`` / ``transpose_b`` stream a transposed operand directly
 (swapped ``index_map`` + in-tile contraction on the other axis), so the
@@ -36,7 +43,8 @@ HBM — the paper's Sec. 4.3 on-the-fly transpose, done at the BlockSpec.
 
 Tile sizes (bm, bn, bk) come from the kernel-config registry
 (:mod:`repro.tuning`), which wraps :func:`repro.core.io_model.solve_tile_config`,
-the paper's Eq. 5–9 solved over VMEM capacity and (sublane, lane) quanta.
+the paper's Eq. 5–9 solved over VMEM capacity and (sublane, lane) quanta;
+program tags key each variant distinctly.
 
 The kernel also supports the **distance product** (min-plus semiring), the
 paper's Sec. 5.2 flexibility example, via ``semiring="min_plus"``.
@@ -45,7 +53,7 @@ paper's Sec. 5.2 flexibility example, via ``semiring="min_plus"``.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +62,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
 from repro.kernels.epilogue import EpilogueSpec, act_fn
+from repro.kernels.program import (GemmProgramSpec, NO_PROLOGUE,
+                                   PrologueSpec, PLAIN,
+                                   apply_dact_reference)
 
 
 def _acc_dtype(dtype) -> jnp.dtype:
@@ -73,7 +84,8 @@ def layout_tag(transpose_a: bool, transpose_b: bool) -> str:
 
 def _default_tiles(m: int, n: int, k: int, dtype, semiring: str,
                    bm: Optional[int], bn: Optional[int], bk: Optional[int],
-                   epilogue_tag: str = "none", layout: str = "nn"):
+                   program_tag: str = "none", layout: str = "nn",
+                   dtype_b=None):
     """None-means-solver: unspecified tile dims come from the registry.
 
     Callers can no longer silently bypass the I/O model with a stale
@@ -86,7 +98,8 @@ def _default_tiles(m: int, n: int, k: int, dtype, semiring: str,
         from repro.tuning import get_registry  # lazy: tuning times this module
 
         tile = get_registry().resolve(m, n, k, dtype=dtype, semiring=semiring,
-                                      epilogue=epilogue_tag, layout=layout)
+                                      epilogue=program_tag, layout=layout,
+                                      dtype_b=dtype_b)
         bm = bm if bm is not None else tile.bm
         bn = bn if bn is not None else tile.bn
         bk = bk if bk is not None else tile.bk
@@ -97,46 +110,68 @@ def _default_tiles(m: int, n: int, k: int, dtype, semiring: str,
             min(bk, round_up_to(k, 128)))
 
 
-def _mmm_kernel(*refs, semiring: str, spec: Optional[EpilogueSpec],
-                kdim: int, bk: int, transpose_a: bool, transpose_b: bool,
-                save_preact: bool, sb_per_tile: bool):
-    """One grid step: accumulate a (bm, bk) x (bk, bn) product into VMEM,
-    masked k edge; fused epilogue + single write-back at the drain.
+def _program_kernel(*refs, spec: GemmProgramSpec, semiring: str,
+                    kdim: int, bk: int, transpose_a: bool, transpose_b: bool,
+                    save_preact: bool, sb_per_tile: bool):
+    """One grid step of a GemmProgram: the prologue-decorated A tile is
+    contracted against each branch's B tile into that branch's VMEM
+    accumulator; the per-branch drain chains + combiner run fused at the
+    last k step, right before the single write-back per output.
 
     Quantized operands (repro.quant) ride the same schedule: int8 tiles
     stream from HBM, the cast to the compute dtype happens in VMEM, and
     the dequant rescale is either a drain stage (per-channel scales) or a
     per-k-step multiply of the partial product (per-tile scales,
     ``sb_per_tile``) — in both cases zero extra slow-memory traffic."""
-    deq = spec.dequant if spec is not None else "none"
-    n_extra = 0
-    if spec is not None:
-        n_extra = (int(spec.has_bias) + int(spec.has_mul)
-                   + int(spec.has_residual) + int(deq == "ab")
-                   + int(deq != "none"))
-    a_ref, b_ref = refs[0], refs[1]
-    extra_refs = refs[2:2 + n_extra]
-    out_refs = refs[2 + n_extra:-1]
-    acc_ref = refs[-1]
-    c_ref = out_refs[0]
-    h_ref = out_refs[1] if save_preact else None
+    nb = spec.n_b
+    pro = spec.prologue
+    pos = 0
+    a_ref = refs[pos]; pos += 1
+    b_refs = refs[pos:pos + nb]; pos += nb
 
-    # Dequant scale refs lead the extra-operand pack (same order as the
-    # wrapper appends them): [scale_a], [scale_b], bias, mul, residual.
-    scale_refs = iter(extra_refs)
-    sa_ref = next(scale_refs) if deq == "ab" else None
-    sb_ref = next(scale_refs) if deq != "none" else None
-    epi_refs = extra_refs[int(deq == "ab") + int(deq != "none"):]
+    # Prologue operand refs (ride the decorated stream's index map).
+    row_ref = gain_ref = pre_ref = None
+    if pro.kind == "rms":
+        row_ref, gain_ref = refs[pos], refs[pos + 1]
+        pos += 2
+    elif pro.kind == "dact":
+        pre_ref = refs[pos]
+        pos += 1
+
+    # Per-branch drain operand refs, branch-major, in chain order:
+    # [scale_a], [scale_b], bias, mul, residual.
+    branch_refs = []
+    for bspec in spec.branches:
+        deq = bspec.dequant
+        names = []
+        if deq == "ab":
+            names.append("scale_a")
+        if deq != "none":
+            names.append("scale_b")
+        if bspec.has_bias:
+            names.append("bias")
+        if bspec.has_mul:
+            names.append("mul")
+        if bspec.has_residual:
+            names.append("residual")
+        branch_refs.append({nm: refs[pos + i] for i, nm in enumerate(names)})
+        pos += len(names)
+
+    n_pre = nb if save_preact else 0
+    out_refs = refs[pos:pos + spec.n_out]
+    pre_refs = refs[pos + spec.n_out:pos + spec.n_out + n_pre]
+    acc_refs = refs[-nb:]
 
     k = pl.program_id(2)
     nk = pl.num_programs(2)
 
     @pl.when(k == 0)
     def _init():
-        if semiring == "min_plus":
-            acc_ref[...] = jnp.full_like(acc_ref, jnp.inf)
-        else:
-            acc_ref[...] = jnp.zeros_like(acc_ref)
+        for acc_ref in acc_refs:
+            if semiring == "min_plus":
+                acc_ref[...] = jnp.full_like(acc_ref, jnp.inf)
+            else:
+                acc_ref[...] = jnp.zeros_like(acc_ref)
 
     def mask_k(x, axis, fill):
         # Edge tile on the contraction dim: out-of-range lanes hold
@@ -150,72 +185,326 @@ def _mmm_kernel(*refs, semiring: str, spec: Optional[EpilogueSpec],
 
     if semiring == "min_plus":
         a = a_ref[...].astype(jnp.float32)
-        b = b_ref[...].astype(jnp.float32)
+        b = b_refs[0][...].astype(jnp.float32)
         a = mask_k(a, 1, jnp.inf)
         b = mask_k(b, 0, jnp.inf)
         # Tropical semiring: (min, +). Small bk keeps the broadcast in VMEM.
         cand = jnp.min(a[:, :, None] + b[None, :, :], axis=1)
-        acc_ref[...] = jnp.minimum(acc_ref[...], cand)
+        acc_refs[0][...] = jnp.minimum(acc_refs[0][...], cand)
     else:
-        acc_t = acc_ref.dtype
+        acc_t = acc_refs[0].dtype
+        a = a_ref[...]
+        # Prologue: the producer folded into the decorated tile's fetch.
+        # Runs before the k-edge mask so any garbage it touches on edge
+        # lanes is neutralized below.
+        if pro.kind == "rms":
+            af = (a.astype(jnp.float32) * row_ref[...]
+                  * gain_ref[...].astype(jnp.float32))
+            a = af.astype(a_ref.dtype)
+        elif pro.kind == "dact" and pro.operand == "a":
+            a = apply_dact_reference(a, pre_ref[...], pro.activation)
         if acc_t == jnp.int32:
-            a = a_ref[...].astype(jnp.int32)
-            b = b_ref[...].astype(jnp.int32)
-        else:
-            a = a_ref[...]
-            # Weight-only quantization: int8 B tiles streamed, cast to the
-            # activation dtype in VMEM (int8 values are exact in bf16) —
-            # the HBM bytes are the int8 bytes, the MXU sees its native
-            # float pairing.
-            b = b_ref[...]
-            if b.dtype != a.dtype and jnp.issubdtype(b.dtype, jnp.integer):
-                b = b.astype(a.dtype)
+            a = a.astype(jnp.int32)
         a = mask_k(a, 0 if transpose_a else 1, 0)
-        b = mask_k(b, 1 if transpose_b else 0, 0)
         # Contract the k axis of each *stored* tile — a transposed
         # operand is consumed in its HBM layout (no .T materialization).
         dims = (((0,) if transpose_a else (1,),
                  (1,) if transpose_b else (0,)), ((), ()))
-        part = jax.lax.dot_general(a, b, dims,
-                                   preferred_element_type=acc_t)
-        if sb_per_tile:
-            # Per-tile weight scales: this k-block's scale row rescales
-            # the partial product before accumulation (different blocks,
-            # different scales — a drain-time rescale would be wrong).
-            part = part * sb_ref[...].astype(acc_t)
-        acc_ref[...] += part
+        for i, acc_ref in enumerate(acc_refs):
+            b = b_refs[i][...]
+            if pro.kind == "dact" and pro.operand == "b":
+                b = apply_dact_reference(b, pre_ref[...], pro.activation)
+            if acc_t == jnp.int32:
+                b = b.astype(jnp.int32)
+            elif b.dtype != a.dtype and jnp.issubdtype(b.dtype, jnp.integer):
+                # Weight-only quantization: int8 B tiles streamed, cast to
+                # the activation dtype in VMEM (int8 values are exact in
+                # bf16) — the HBM bytes are the int8 bytes, the MXU sees
+                # its native float pairing.
+                b = b.astype(a.dtype)
+            b = mask_k(b, 1 if transpose_b else 0, 0)
+            part = jax.lax.dot_general(a, b, dims,
+                                       preferred_element_type=acc_t)
+            if sb_per_tile and i == 0:
+                # Per-tile weight scales: this k-block's scale row rescales
+                # the partial product before accumulation (different blocks,
+                # different scales — a drain-time rescale would be wrong).
+                part = part * branch_refs[0]["scale_b"][...].astype(acc_t)
+            acc_ref[...] += part
 
     @pl.when(k == nk - 1)
     def _drain():
         # Paper Sec. 4.4: the drain is a separate, sequential phase — the
-        # single write-back below is all the output traffic this block
-        # ever causes (Q's mn term in Eq. 6).  The fused epilogue rides
-        # that one mandatory write: its elementwise chain runs on the
-        # VMEM accumulator, never on an HBM round trip.
-        z = acc_ref[...]
-        if spec is None or spec.is_identity:
-            if save_preact:
-                h_ref[...] = z.astype(h_ref.dtype)
-            c_ref[...] = z.astype(c_ref.dtype)
-        else:
-            it = iter(epi_refs)
+        # write-backs below are all the output traffic this program ever
+        # causes (Q's n_out·mn term).  The fused per-branch chains and
+        # the combiner ride those mandatory writes: their elementwise
+        # work runs on the VMEM accumulators, never on an HBM round trip.
+        vals = []
+        for i, bspec in enumerate(spec.branches):
+            z = acc_refs[i][...]
+            ops = branch_refs[i]
+            if bspec.is_identity:
+                # No fp32 round trip for identity branches (int32
+                # accumulators would lose precision past 2^24).
+                if save_preact:
+                    pre_refs[i][...] = z.astype(pre_refs[i].dtype)
+                vals.append(z)
+                continue
             zf = z.astype(jnp.float32)
             # Dequant first: later stages (bias/act/gate/residual) want
             # real units.  Per-tile "b" scales already applied per k-step.
-            if deq != "none" and not sb_per_tile:
-                zf = zf * sb_ref[...].astype(jnp.float32)
-            if deq == "ab":
-                zf = zf * sa_ref[...].astype(jnp.float32)
-            if spec.has_bias:
-                zf = zf + next(it)[...].astype(jnp.float32)
+            if bspec.dequant != "none" and not (sb_per_tile and i == 0):
+                zf = zf * ops["scale_b"][...].astype(jnp.float32)
+            if bspec.dequant == "ab":
+                zf = zf * ops["scale_a"][...].astype(jnp.float32)
+            if bspec.has_bias:
+                zf = zf + ops["bias"][...].astype(jnp.float32)
             if save_preact:
-                h_ref[...] = zf.astype(h_ref.dtype)
-            zf = act_fn(spec.activation)(zf)
-            if spec.has_mul:
-                zf = zf * next(it)[...].astype(jnp.float32)
-            if spec.has_residual:
-                zf = zf + next(it)[...].astype(jnp.float32)
-            c_ref[...] = zf.astype(c_ref.dtype)
+                pre_refs[i][...] = zf.astype(pre_refs[i].dtype)
+            zf = act_fn(bspec.activation)(zf)
+            if bspec.has_mul:
+                zf = zf * ops["mul"][...].astype(jnp.float32)
+            if bspec.has_residual:
+                zf = zf + ops["residual"][...].astype(jnp.float32)
+            vals.append(zf)
+        if spec.combine == "glu":
+            y = act_fn(spec.combine_activation)(
+                vals[0].astype(jnp.float32)) * vals[1].astype(jnp.float32)
+            out_refs[0][...] = y.astype(out_refs[0].dtype)
+        else:
+            for i, v in enumerate(vals):
+                out_refs[i][...] = v.astype(out_refs[i].dtype)
+
+
+def ca_gemm_program(
+    a: jax.Array,
+    bs: Sequence[jax.Array],
+    *,
+    spec: GemmProgramSpec = PLAIN,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
+    out_dtype=None,
+    semiring: str = "plus_times",
+    interpret: bool = False,
+    transpose_a: bool = False,
+    transpose_b: bool = False,
+    save_preact: bool = False,
+    row_scale: Optional[jax.Array] = None,
+    gain: Optional[jax.Array] = None,
+    preact: Optional[jax.Array] = None,
+    branch_operands: Optional[Sequence[Dict[str, jax.Array]]] = None,
+    scale_b_block: int = 0,
+):
+    """Execute a :class:`GemmProgramSpec` with the paper's I/O-minimal
+    schedule, for arbitrary (non-tile-multiple) shapes.
+
+    ``a`` is the one streamed A operand; ``bs`` the 1..2 B operands (one
+    accumulator each, same shape/dtype).  Prologue operands: ``row_scale``
+    ((m, 1) fp32) + ``gain`` ((k,)) for the rms prologue; ``preact`` (the
+    saved pre-activation, shaped like the decorated operand) for dact.
+    ``branch_operands[i]`` carries branch ``i``'s drain operands
+    (``bias``/``mul``/``residual``/``scale_a``/``scale_b``).
+
+    Tile dims default to the kernel-config registry's plan under the
+    program's tag (None-means-solver).  With ``save_preact`` each branch
+    additionally drains its fp32 pre-combine value (``z`` after
+    dequant + bias) and the call returns ``(*outputs, *preacts)`` — the
+    saved tensors the trainable VJPs differentiate against.
+
+    A quantized branch (``dequant != "none"``) streams int8 tiles and
+    rescales inside the kernel: ``scale_b`` is the weight's per-channel
+    column scale ((n,) fp32) or — with ``scale_b_block=g`` — per-tile
+    scales of shape (ceil(k/g), n), in which case the kernel's k-tile is
+    pinned to ``g`` so each streamed block sees exactly one scale row;
+    ``scale_a`` ((m,) fp32) is the activation's per-row scale for the
+    full int8xint8 path ("ab").  Dequant adds no output traffic: it
+    rides the drain (or the VMEM partial product), never an HBM round
+    trip.
+    """
+    bs = tuple(bs)
+    nb = len(bs)
+    assert nb == spec.n_b, (nb, spec)
+    branch_operands = list(branch_operands or [{} for _ in bs])
+    assert len(branch_operands) == nb
+    pro = spec.prologue
+
+    if transpose_a:
+        kdim, m = a.shape
+    else:
+        m, kdim = a.shape
+    if transpose_b:
+        n, k2 = bs[0].shape
+    else:
+        k2, n = bs[0].shape
+    assert kdim == k2, f"contraction mismatch {a.shape} @ {bs[0].shape}"
+    for b in bs[1:]:
+        assert b.shape == bs[0].shape and b.dtype == bs[0].dtype, \
+            "multi-branch programs share one B shape/dtype"
+    if nb > 1:
+        assert not (transpose_a or transpose_b), \
+            "multi-branch programs stream the plain 'nn' layout"
+    if semiring == "min_plus":
+        assert spec.is_plain and not (transpose_a or transpose_b
+                                      or save_preact), \
+            "min_plus supports plain (A, B) programs only"
+    if pro.kind == "rms":
+        assert not transpose_a, "rms prologue decorates the natural A layout"
+        assert row_scale is not None and gain is not None
+        assert row_scale.shape == (m, 1), (row_scale.shape, m)
+        assert gain.shape == (kdim,), (gain.shape, kdim)
+    elif pro.kind == "dact":
+        assert preact is not None
+        if pro.operand == "a":
+            assert not transpose_a and preact.shape == (m, kdim), \
+                (preact.shape, m, kdim)
+        else:
+            assert not transpose_b and preact.shape == (kdim, n), \
+                (preact.shape, kdim, n)
+
+    deqs = [b.dequant for b in spec.branches]
+    per_tile = scale_b_block > 0
+    for i, bspec in enumerate(spec.branches):
+        ops = branch_operands[i]
+        if bspec.dequant != "none":
+            assert semiring == "plus_times" and not (transpose_a
+                                                     or transpose_b), \
+                "quantized streaming supports the plain 'nn' layout"
+            assert ops.get("scale_b") is not None, \
+                "dequant needs the weight scales"
+            if bspec.dequant == "ab":
+                assert nb == 1, "int8 activations ('ab') are single-branch"
+                sa = ops.get("scale_a")
+                assert sa is not None and sa.size == m, (sa, m)
+                assert not per_tile, "per-tile scales are weight-only ('b')"
+        else:
+            assert ops.get("scale_a") is None and ops.get("scale_b") is None
+    if per_tile:
+        assert nb == 1 and deqs[0] != "none"
+        # Per-tile dequant rescales each k-step's partial product, so the
+        # kernel k-tile must equal the quantization block.
+        bk = scale_b_block
+
+    tag = spec.tag()
+    layout = layout_tag(transpose_a, transpose_b)
+    dtype_b = bs[0].dtype if (any(d != "none" for d in deqs)
+                              and bs[0].dtype != a.dtype) else None
+    bm, bn, bk = _default_tiles(m, n, kdim, a.dtype, semiring, bm, bn, bk,
+                                program_tag=tag, layout=layout,
+                                dtype_b=dtype_b)
+    a_is_int = jnp.issubdtype(a.dtype, jnp.integer)
+    any_deq = any(d != "none" for d in deqs)
+    if any_deq and (per_tile or not a_is_int):
+        # Weight-only dequant (fp activations) and per-tile rescale both
+        # accumulate in fp32 (the partial product is float either way).
+        acc_t = jnp.dtype(jnp.float32)
+    else:
+        acc_t = _acc_dtype(a.dtype) if semiring == "plus_times" \
+            else jnp.dtype(jnp.float32)
+    if any_deq:
+        out_dtype = out_dtype or (jnp.float32 if a_is_int else a.dtype)
+    elif spec.combine == "glu":
+        out_dtype = out_dtype or (jnp.float32 if a_is_int else a.dtype)
+    else:
+        out_dtype = out_dtype or (acc_t if acc_t == jnp.int32 else a.dtype)
+    if semiring == "min_plus":
+        out_dtype = jnp.float32
+
+    grid = (_ceil(m, bm), _ceil(n, bn), _ceil(kdim, bk))
+    if per_tile:
+        sb = branch_operands[0]["scale_b"]
+        assert sb.shape == (_ceil(kdim, bk), n), \
+            (sb.shape, _ceil(kdim, bk), n)
+
+    if transpose_a:
+        a_spec = pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i))
+    else:
+        a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    if transpose_b:
+        b_spec = pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk))
+    else:
+        b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    in_specs = [a_spec] + [b_spec] * nb
+    operands = [a, *bs]
+
+    # Prologue operands ride the decorated stream's index map.
+    if pro.kind == "rms":
+        operands.append(row_scale.astype(jnp.float32))
+        in_specs.append(pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)))
+        operands.append(gain.reshape(1, kdim))
+        in_specs.append(pl.BlockSpec((1, bk), lambda i, j, kk: (0, kk)))
+    elif pro.kind == "dact":
+        operands.append(preact.astype(jnp.float32))
+        if pro.operand == "a":
+            in_specs.append(pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)))
+        else:
+            in_specs.append(pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)))
+
+    for i, bspec in enumerate(spec.branches):
+        ops = branch_operands[i]
+        if bspec.is_identity:
+            continue
+        if bspec.dequant == "ab":
+            # Per-row activation scales: an (bm, 1) column rides each i.
+            operands.append(ops["scale_a"].reshape(m, 1).astype(jnp.float32))
+            in_specs.append(pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)))
+        if bspec.dequant != "none":
+            if per_tile:
+                # One (1, bn) scale row per k-step — index follows kk.
+                operands.append(ops["scale_b"].astype(jnp.float32))
+                in_specs.append(
+                    pl.BlockSpec((1, bn), lambda i, j, kk: (kk, j)))
+            else:
+                # Per-channel column scales: one row, fetched like a bias.
+                operands.append(
+                    ops["scale_b"].reshape(1, n).astype(jnp.float32))
+                in_specs.append(
+                    pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        if bspec.has_bias:
+            bias = ops.get("bias")
+            assert bias is not None and bias.shape == (n,), (bias, n)
+            # (1, n) layout: a bias row block rides along each (i, j) tile.
+            operands.append(bias.reshape(1, n))
+            in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        for name in ("mul", "residual"):
+            if getattr(bspec, "has_" + name):
+                arr = ops.get(name)
+                assert arr is not None and arr.shape == (m, n), (name, arr)
+                # Streamed (m, n) epilogue operand: fetched once per
+                # (i, j) tile (index_map ignores kk — Pallas keeps the
+                # buffer across the k loop), consumed at the drain.
+                operands.append(arr)
+                in_specs.append(
+                    pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+
+    out_shape = [jax.ShapeDtypeStruct((m, n), out_dtype)
+                 for _ in range(spec.n_out)]
+    out_specs = [pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+                 for _ in range(spec.n_out)]
+    if save_preact:
+        for _ in range(nb):
+            out_shape.append(jax.ShapeDtypeStruct((m, n), jnp.float32))
+            out_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+
+    kernel = functools.partial(
+        _program_kernel, spec=spec, semiring=semiring, kdim=kdim, bk=bk,
+        transpose_a=transpose_a, transpose_b=transpose_b,
+        save_preact=save_preact, sb_per_tile=per_tile)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_t) for _ in range(nb)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)
+    if len(out) == 1:
+        return out[0]
+    return tuple(out)
 
 
 def ca_mmm(
@@ -238,145 +527,33 @@ def ca_mmm(
     scale_a: Optional[jax.Array] = None,
     scale_b: Optional[jax.Array] = None,
     scale_b_block: int = 0,
+    prologue: Optional[PrologueSpec] = None,
+    row_scale: Optional[jax.Array] = None,
+    gain: Optional[jax.Array] = None,
+    preact: Optional[jax.Array] = None,
 ):
-    """C = op(A) @ op(B) (+ fused epilogue) with the paper's I/O-minimal
-    schedule, for arbitrary (non-tile-multiple) shapes.
+    """C = op(A) @ op(B) (+ fused prologue/epilogue): the single-branch
+    program, with the historical keyword surface.
 
-    Tile dims default to the kernel-config registry's plan (None-means-
-    solver); pass explicit values only to override the model.  With
-    ``save_preact`` the drain additionally writes the fp32 pre-activation
-    (z + bias) and the call returns ``(y, preact)`` — the saved tensor the
-    trainable VJP differentiates the activation against.
-
-    A quantized GEMM (``epilogue.dequant != "none"``) streams int8
-    operand tiles and rescales inside the kernel: ``scale_b`` is the
-    weight's per-channel column scale ((n,) fp32) or — with
-    ``scale_b_block=g`` — per-tile scales of shape (ceil(k/g), n), in
-    which case the kernel's k-tile is pinned to ``g`` so each streamed
-    block sees exactly one scale row; ``scale_a`` ((m,) fp32) is the
-    activation's per-row scale for the full int8xint8 path ("ab").
-    Dequant adds no output traffic: it rides the drain (or the VMEM
-    partial product), never an HBM round trip.
+    This is now a thin builder over :func:`ca_gemm_program` — the
+    epilogue spec becomes the program's one branch, the optional
+    ``prologue`` decorates the streamed operand's fetch.
     """
-    if transpose_a:
-        kdim, m = a.shape
-    else:
-        m, kdim = a.shape
-    if transpose_b:
-        n, k2 = b.shape
-    else:
-        k2, n = b.shape
-    assert kdim == k2, f"contraction mismatch {a.shape} @ {b.shape}"
-    if semiring == "min_plus":
-        assert not (transpose_a or transpose_b or epilogue or save_preact), \
-            "min_plus supports plain (A, B) layouts only"
-    spec = epilogue
-    deq = spec.dequant if spec is not None else "none"
-    per_tile = scale_b_block > 0
-    if deq != "none":
-        assert semiring == "plus_times" and not (transpose_a or transpose_b), \
-            "quantized streaming supports the plain 'nn' layout"
-        assert scale_b is not None, "dequant needs the weight scales"
-        if deq == "ab":
-            assert scale_a is not None and scale_a.size == m, (scale_a, m)
-            assert not per_tile, "per-tile scales are weight-only ('b')"
-    else:
-        assert scale_a is None and scale_b is None and not per_tile
-    if per_tile:
-        # Per-tile dequant rescales each k-step's partial product, so the
-        # kernel k-tile must equal the quantization block.
-        bk = scale_b_block
-    tag = spec.tag() if spec is not None else "none"
-    layout = layout_tag(transpose_a, transpose_b)
-    bm, bn, bk = _default_tiles(m, n, kdim, a.dtype, semiring, bm, bn, bk,
-                                epilogue_tag=tag, layout=layout)
-    a_is_int = jnp.issubdtype(a.dtype, jnp.integer)
-    if deq != "none" and (per_tile or not a_is_int):
-        # Weight-only dequant (fp activations) and per-tile rescale both
-        # accumulate in fp32 (the partial product is float either way).
-        acc_t = jnp.dtype(jnp.float32)
-    else:
-        acc_t = _acc_dtype(a.dtype) if semiring == "plus_times" \
-            else jnp.float32
-    if deq != "none":
-        out_dtype = out_dtype or (jnp.float32 if a_is_int else a.dtype)
-    else:
-        out_dtype = out_dtype or (acc_t if acc_t == jnp.int32 else a.dtype)
-    if semiring == "min_plus":
-        out_dtype = jnp.float32
-
-    grid = (_ceil(m, bm), _ceil(n, bn), _ceil(kdim, bk))
-    if per_tile:
-        assert scale_b.shape == (_ceil(kdim, bk), n), \
-            (scale_b.shape, _ceil(kdim, bk), n)
-
-    if transpose_a:
-        a_spec = pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i))
-    else:
-        a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
-    if transpose_b:
-        b_spec = pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk))
-    else:
-        b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
-    in_specs = [a_spec, b_spec]
-    operands = [a, b]
-
-    if spec is not None and not spec.is_identity:
-        if deq == "ab":
-            # Per-row activation scales: an (bm, 1) column rides each i.
-            operands.append(scale_a.reshape(m, 1).astype(jnp.float32))
-            in_specs.append(pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)))
-        if deq != "none":
-            if per_tile:
-                # One (1, bn) scale row per k-step — index follows kk.
-                operands.append(scale_b.astype(jnp.float32))
-                in_specs.append(
-                    pl.BlockSpec((1, bn), lambda i, j, kk: (kk, j)))
-            else:
-                # Per-channel column scales: one row, fetched like a bias.
-                operands.append(scale_b.reshape(1, n).astype(jnp.float32))
-                in_specs.append(
-                    pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
-        if spec.has_bias:
-            assert bias is not None and bias.shape == (n,), (bias, n)
-            # (1, n) layout: a bias row block rides along each (i, j) tile.
-            operands.append(bias.reshape(1, n))
-            in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
-        for name, arr in (("mul", mul), ("residual", residual)):
-            if getattr(spec, "has_" + name):
-                assert arr is not None and arr.shape == (m, n), (name, arr)
-                # Streamed (m, n) epilogue operand: fetched once per
-                # (i, j) tile (index_map ignores kk — Pallas keeps the
-                # buffer across the k loop), consumed at the drain.
-                operands.append(arr)
-                in_specs.append(
-                    pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
-
-    out_shape = [jax.ShapeDtypeStruct((m, n), out_dtype)]
-    out_specs = [pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))]
-    if save_preact:
-        out_shape.append(jax.ShapeDtypeStruct((m, n), jnp.float32))
-        out_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
-
-    kernel = functools.partial(
-        _mmm_kernel, semiring=semiring, spec=spec, kdim=kdim, bk=bk,
-        transpose_a=transpose_a, transpose_b=transpose_b,
-        save_preact=save_preact, sb_per_tile=per_tile)
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM((bm, bn), acc_t)],
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(*operands)
-    if save_preact:
-        return out[0], out[1]
-    return out[0]
+    branch = epilogue if epilogue is not None else EpilogueSpec()
+    spec = GemmProgramSpec(prologue=prologue or NO_PROLOGUE,
+                           branches=(branch,))
+    ops: Dict[str, jax.Array] = {}
+    for name, arr in (("bias", bias), ("mul", mul), ("residual", residual),
+                      ("scale_a", scale_a), ("scale_b", scale_b)):
+        if arr is not None:
+            ops[name] = arr
+    out = ca_gemm_program(
+        a, (b,), spec=spec, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+        semiring=semiring, interpret=interpret, transpose_a=transpose_a,
+        transpose_b=transpose_b, save_preact=save_preact,
+        row_scale=row_scale, gain=gain, preact=preact,
+        branch_operands=[ops], scale_b_block=scale_b_block)
+    return out
 
 
 def ca_mmm_k_outer(

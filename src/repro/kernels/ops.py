@@ -1,28 +1,40 @@
-"""jit-ready wrappers around the Pallas CA-MMM kernel.
+"""jit-ready wrappers around the Pallas CA-MMM program kernel.
 
-Adds: dtype plumbing, the fused-epilogue entry point and a custom VJP so
-the kernel is trainable.  Ragged shapes are handled *inside* the kernel
-(ceil-div grid + masked edge tiles) — the old ``jnp.pad``/slice copies,
-which cost two extra HBM round trips per ragged GEMM, are gone.
+Adds: dtype plumbing, the fused prologue/epilogue entry points and custom
+VJPs so the kernels are trainable.  Ragged shapes are handled *inside*
+the kernel (ceil-div grid + masked edge tiles) — the old ``jnp.pad``/
+slice copies, which cost two extra HBM round trips per ragged GEMM, are
+gone (and so is the ``ca_mmm_padded`` alias that commemorated them).
+
+Every entry point here is a thin *program builder*: it assembles a
+:class:`repro.kernels.program.GemmProgramSpec` (prologue x branches x
+epilogue x dequant) and hands it to :func:`repro.kernels.ca_mmm.
+ca_gemm_program`.  ``fused_matmul`` and ``quant_matmul`` are 1-output
+programs; ``glu_matmul`` is the dual-branch GLU program (gate and up
+GEMMs share one pass over the streamed x panel).
 
 Both backward GEMMs reuse the same I/O-minimal schedule and stream the
 transposed operand directly from its HBM layout (``transpose_a`` /
 ``transpose_b`` BlockSpec swaps): dA = dC @ B^T and dB = A^T @ dC never
-materialize ``.T``.
+materialize ``.T``.  The activation backward ``dz = g·act'(h)`` is folded
+into those GEMMs' operand fetch via the ``dact`` prologue — the dz tensor
+never takes an HBM round trip of its own.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.io_model import TileConfig, round_up_to
-from repro.kernels.epilogue import (Epilogue, EpilogueSpec, IDENTITY, act_fn,
-                                    apply_reference)
+from repro.core.io_model import TileConfig
+from repro.kernels.epilogue import Epilogue, EpilogueSpec, IDENTITY, act_fn
+from repro.kernels.program import (GemmProgramSpec, NO_PROLOGUE,
+                                   PrologueSpec, RmsPrologue,
+                                   apply_rms_reference, rms_row_scale)
 import repro.kernels.ca_mmm as kern
 
 
@@ -30,26 +42,16 @@ def _resolve_tile(m: int, n: int, k: int, dtype,
                   semiring: str = "plus_times",
                   epilogue: str = "none", layout: str = "nn",
                   dtype_b=None, hw=None) -> TileConfig:
-    """Default tile plan: the kernel-config registry (cache > tune > model)."""
+    """Default tile plan: the kernel-config registry (cache > tune > model).
+
+    ``epilogue`` is a full *program tag* (prologue/combiner grammar
+    included) — every program variant plans and caches under its own key.
+    """
     from repro.tuning import get_registry  # lazy: tuning times this module
 
     return get_registry().resolve(m, n, k, dtype=dtype, semiring=semiring,
                                   epilogue=epilogue, layout=layout,
                                   dtype_b=dtype_b, hw=hw)
-
-
-def _pad2(x: jax.Array, r0: int, r1: int) -> jax.Array:
-    """Pad a 2D array up to multiples of (r0, r1).
-
-    Only the ``k_outer`` ablation still needs this (its kernel keeps the
-    divisibility requirement); the production schedule runs ragged shapes
-    natively.
-    """
-    p0 = round_up_to(x.shape[0], r0) - x.shape[0]
-    p1 = round_up_to(x.shape[1], r1) - x.shape[1]
-    if p0 or p1:
-        x = jnp.pad(x, ((0, p0), (0, p1)))
-    return x
 
 
 def ca_mmm_any(
@@ -71,28 +73,34 @@ def ca_mmm_any(
                        interpret=interpret)
 
 
-# Historical name (the wrapper used to pad to tile multiples and slice the
-# result back); kept so downstream callers keep working.
-ca_mmm_padded = ca_mmm_any
-
-
 # ---------------------------------------------------------------------------
-# Fused-epilogue trainable matmul (custom VJP)
+# Fused prologue/epilogue trainable matmul (custom VJP)
 # ---------------------------------------------------------------------------
+
+def _prologue_of(extras: Dict[str, jax.Array]) -> PrologueSpec:
+    """The prologue implied by the extras dict ('row_scale' marks rms)."""
+    if "row_scale" in extras:
+        return PrologueSpec(kind="rms")
+    return NO_PROLOGUE
+
 
 def _run_fused(a, b, extras: Dict[str, jax.Array], spec: EpilogueSpec,
                tile: Optional[TileConfig], interpret: bool,
                out_dtype_name: Optional[str], save_preact: bool):
     m, k = a.shape
     _, n = b.shape
+    prologue = _prologue_of(extras)
+    tag = GemmProgramSpec(prologue=prologue, branches=(spec,)).tag()
     if tile is None:
-        tile = _resolve_tile(m, n, k, a.dtype, epilogue=spec.tag())
+        tile = _resolve_tile(m, n, k, a.dtype, epilogue=tag)
     out_dtype = jnp.dtype(out_dtype_name) if out_dtype_name else None
     return kern.ca_mmm(
         a, b, bm=tile.bm, bn=tile.bn, bk=tile.bk, out_dtype=out_dtype,
         interpret=interpret, epilogue=spec,
         bias=extras.get("bias"), mul=extras.get("mul"),
-        residual=extras.get("residual"), save_preact=save_preact)
+        residual=extras.get("residual"), save_preact=save_preact,
+        prologue=prologue, row_scale=extras.get("row_scale"),
+        gain=extras.get("gain"))
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
@@ -110,17 +118,37 @@ def _fused_fwd(a, b, extras, spec, tile, interpret, out_dtype_name):
         y = _run_fused(a, b, extras, spec, tile, interpret, out_dtype_name,
                        save_preact=False)
         h = None
-    # Backward reads only the *value* of the mul gate; bias/residual are
-    # needed solely for their dtype (the gradient must match the primal
-    # aval) — save an empty carrier instead of pinning an activation-
-    # sized buffer until the backward pass.
-    saved = {k: (v if k == "mul" else jnp.empty((0,), v.dtype))
+    # Backward reads only the *values* of the mul gate and the rms
+    # prologue operands; bias/residual are needed solely for their dtype
+    # (the gradient must match the primal aval) — save an empty carrier
+    # instead of pinning an activation-sized buffer until the backward
+    # pass.
+    keep = ("mul", "row_scale", "gain")
+    saved = {k: (v if k in keep else jnp.empty((0,), v.dtype))
              for k, v in extras.items()}
     return y, (a, b, saved, h)
 
 
+def _dact_spec(activation: str, operand: str = "a") -> PrologueSpec:
+    return PrologueSpec(kind="dact", activation=activation, operand=operand)
+
+
+def _rms_bwd_terms(dxn_f32, x, row_scale, gain):
+    """Chain the grad at the normalized activation back through the rms
+    prologue: ``xn = x · rs · gain`` with rs = row_scale (the rsqrt factor
+    itself was produced by differentiable XLA ops outside the kernel, so
+    returning d_rs lets autodiff close the loop through the variance)."""
+    xf = x.astype(jnp.float32)
+    gf = gain.astype(jnp.float32)
+    dx = (dxn_f32 * row_scale * gf).astype(x.dtype)
+    d_rs = (dxn_f32 * xf * gf).sum(axis=-1, keepdims=True)
+    d_gain = (dxn_f32 * xf * row_scale).sum(axis=0).astype(gain.dtype)
+    return dx, d_rs, d_gain
+
+
 def _fused_bwd(spec: EpilogueSpec, tile, interpret, out_dtype_name, res, g):
     a, b, extras, h = res
+    rs, gain = extras.get("row_scale"), extras.get("gain")
     g32 = g.astype(jnp.float32)
     d_extras = {}
     if spec.has_residual:
@@ -133,32 +161,62 @@ def _fused_bwd(spec: EpilogueSpec, tile, interpret, out_dtype_name, res, g):
         d_p = g32 * extras["mul"].astype(jnp.float32)
     else:
         d_p = g32
-    if spec.activation != "none":
-        # Activation derivative recomputed from the saved pre-activation.
-        _, act_vjp = jax.vjp(act_fn(spec.activation), h)
-        dz = act_vjp(d_p)[0]
-    else:
-        dz = d_p
-    if spec.has_bias:
-        d_extras["bias"] = dz.sum(axis=0).astype(extras["bias"].dtype)
 
-    dz_c = dz.astype(a.dtype)
     m, k = a.shape
     n = b.shape[1]
+    # The A operand of the backward GEMMs on the *normalized* stream: an
+    # rms prologue means the forward never materialized xn, so dB's
+    # streamed operand is recomputed here (one elementwise pass — the
+    # forward still saved the mk write and every forward-pass re-read).
+    an = a if rs is None else apply_rms_reference(a, rs, gain)
     # Both backward products run through the same communication-avoiding
     # schedule, streaming the transposed operand straight from its stored
     # layout (BlockSpec index swap — no .T materialization in HBM).
-    da = kern.ca_mmm(dz_c, b, transpose_b=True, interpret=interpret,
-                     out_dtype=a.dtype,
-                     **_tile_kw(m, k, n, a.dtype, "nt"))
-    db = kern.ca_mmm(a, dz_c, transpose_a=True, interpret=interpret,
-                     out_dtype=b.dtype,
-                     **_tile_kw(k, n, m, a.dtype, "tn"))
+    if spec.activation != "none":
+        # ROADMAP fused-epilogue (c): dz = g·act'(h) is folded into each
+        # backward GEMM's operand fetch via the dact prologue — the dz
+        # tensor never takes an HBM round trip (the old path materialized
+        # it with a separate XLA elementwise op).
+        gbar = d_p.astype(a.dtype)
+        datag = GemmProgramSpec(prologue=_dact_spec(spec.activation)).tag()
+        dbtag = GemmProgramSpec(
+            prologue=_dact_spec(spec.activation, "b")).tag()
+        dxn = kern.ca_mmm(gbar, b, transpose_b=True, interpret=interpret,
+                          out_dtype=jnp.float32,
+                          prologue=_dact_spec(spec.activation), preact=h,
+                          **_tile_kw(m, k, n, a.dtype, "nt", tag=datag))
+        db = kern.ca_mmm(an, gbar, transpose_a=True, interpret=interpret,
+                         out_dtype=b.dtype,
+                         prologue=_dact_spec(spec.activation, "b"), preact=h,
+                         **_tile_kw(k, n, m, a.dtype, "tn", tag=dbtag))
+        if spec.has_bias:
+            # d_bias = Σ_m dz: the only consumer that still needs dz as a
+            # value — XLA fuses the elementwise vjp into the reduction, so
+            # no (m, n) dz buffer materializes for it either.
+            _, act_vjp = jax.vjp(act_fn(spec.activation), h)
+            d_extras["bias"] = act_vjp(d_p)[0].sum(axis=0).astype(
+                extras["bias"].dtype)
+    else:
+        dz_c = d_p.astype(a.dtype)
+        if spec.has_bias:
+            d_extras["bias"] = d_p.sum(axis=0).astype(extras["bias"].dtype)
+        dxn = kern.ca_mmm(dz_c, b, transpose_b=True, interpret=interpret,
+                          out_dtype=jnp.float32,
+                          **_tile_kw(m, k, n, a.dtype, "nt"))
+        db = kern.ca_mmm(an, dz_c, transpose_a=True, interpret=interpret,
+                         out_dtype=b.dtype,
+                         **_tile_kw(k, n, m, a.dtype, "tn"))
+    if rs is not None:
+        da, d_extras["row_scale"], d_extras["gain"] = \
+            _rms_bwd_terms(dxn, a, rs, gain)
+    else:
+        da = dxn.astype(a.dtype)
     return da, db, d_extras
 
 
-def _tile_kw(m: int, n: int, k: int, dtype, layout: str) -> dict:
-    t = _resolve_tile(m, n, k, dtype, layout=layout)
+def _tile_kw(m: int, n: int, k: int, dtype, layout: str,
+             tag: str = "none") -> dict:
+    t = _resolve_tile(m, n, k, dtype, epilogue=tag, layout=layout)
     return {"bm": t.bm, "bn": t.bn, "bk": t.bk}
 
 
@@ -173,17 +231,183 @@ def fused_matmul(
     *,
     interpret: bool = False,
     out_dtype=None,
+    prologue: Optional[RmsPrologue] = None,
 ) -> jax.Array:
-    """``epilogue(A @ B)`` in one kernel pass — trainable (custom VJP).
+    """``epilogue(prologue(A) @ B)`` in one kernel pass — trainable
+    (custom VJP).
 
     The epilogue executes inside the drain phase on the VMEM accumulator;
-    the only HBM traffic beyond the GEMM's Eq. 6 volume is the epilogue's
-    own operand reads (bias row, streamed gate/residual tiles).
+    an :class:`RmsPrologue` folds rms_norm into the A-tile fetch (the
+    per-row rsqrt factor is computed here, differentiably, outside the
+    kernel — the normalized activation tensor never hits HBM).  The only
+    HBM traffic beyond the GEMM's Eq. 6 volume is the epilogue's own
+    operand reads (bias row, streamed gate/residual tiles) plus the
+    prologue's O(m + k) scale vectors.
     """
     spec = epilogue.spec() if epilogue is not None else IDENTITY
-    extras = epilogue.operands() if epilogue is not None else {}
+    extras = dict(epilogue.operands()) if epilogue is not None else {}
+    if prologue is not None:
+        extras["row_scale"] = rms_row_scale(a, prologue.eps)
+        extras["gain"] = prologue.gain
     out_name = jnp.dtype(out_dtype).name if out_dtype is not None else None
     return _fused_mm(a, b, extras, spec, tile, interpret, out_name)
+
+
+# ---------------------------------------------------------------------------
+# Dual-branch GLU program (one x pass, two accumulators) — custom VJP
+# ---------------------------------------------------------------------------
+
+def _run_glu(x, wg, wu, extras, activation, tile, interpret, out_dtype_name,
+             save_preact):
+    m, k = x.shape
+    n = wg.shape[1]
+    prologue = _prologue_of(extras)
+    spec = GemmProgramSpec(prologue=prologue, branches=(IDENTITY, IDENTITY),
+                           combine="glu", combine_activation=activation)
+    if tile is None:
+        tile = _resolve_tile(m, n, k, x.dtype, epilogue=spec.tag())
+    out_dtype = jnp.dtype(out_dtype_name) if out_dtype_name else None
+    return kern.ca_gemm_program(
+        x, (wg, wu), spec=spec, bm=tile.bm, bn=tile.bn, bk=tile.bk,
+        out_dtype=out_dtype, interpret=interpret, save_preact=save_preact,
+        row_scale=extras.get("row_scale"), gain=extras.get("gain"))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _glu_mm(x, wg, wu, extras, activation, tile, interpret, out_dtype_name):
+    return _run_glu(x, wg, wu, extras, activation, tile, interpret,
+                    out_dtype_name, save_preact=False)
+
+
+def _glu_fwd(x, wg, wu, extras, activation, tile, interpret, out_dtype_name):
+    y, h0, u = _run_glu(x, wg, wu, extras, activation, tile, interpret,
+                        out_dtype_name, save_preact=True)
+    return y, (x, wg, wu, extras, h0, u)
+
+
+def _glu_bwd(activation, tile, interpret, out_dtype_name, res, dy):
+    """y = act(xn @ Wg) · (xn @ Wu), xn = rms(x) or x.
+
+    Four CA-GEMMs, all streaming transposed operands from their stored
+    layouts; the gate-side ``dg = (dy·u)·act'(h0)`` rides the dact
+    prologue of the GEMMs that consume it (dg never materializes), the
+    up-side ``du = dy·act(h0)`` is one unavoidable elementwise product
+    (it has no act' form).
+    """
+    x, wg, wu, extras, h0, u = res
+    rs, gain = extras.get("row_scale"), extras.get("gain")
+    m, k = x.shape
+    n = wg.shape[1]
+    dyf = dy.astype(jnp.float32)
+    du = (dyf * act_fn(activation)(h0)).astype(x.dtype)
+    gbar = (dyf * u).astype(x.dtype)           # dg = gbar · act'(h0), fused
+    xn = x if rs is None else apply_rms_reference(x, rs, gain)
+
+    datag = GemmProgramSpec(prologue=_dact_spec(activation)).tag()
+    dbtag = GemmProgramSpec(prologue=_dact_spec(activation, "b")).tag()
+    dxn = kern.ca_mmm(gbar, wg, transpose_b=True, interpret=interpret,
+                      out_dtype=jnp.float32,
+                      prologue=_dact_spec(activation), preact=h0,
+                      **_tile_kw(m, k, n, x.dtype, "nt", tag=datag))
+    dxn = dxn + kern.ca_mmm(du, wu, transpose_b=True, interpret=interpret,
+                            out_dtype=jnp.float32,
+                            **_tile_kw(m, k, n, x.dtype, "nt"))
+    dwg = kern.ca_mmm(xn, gbar, transpose_a=True, interpret=interpret,
+                      out_dtype=wg.dtype,
+                      prologue=_dact_spec(activation, "b"), preact=h0,
+                      **_tile_kw(k, n, m, x.dtype, "tn", tag=dbtag))
+    dwu = kern.ca_mmm(xn, du, transpose_a=True, interpret=interpret,
+                      out_dtype=wu.dtype,
+                      **_tile_kw(k, n, m, x.dtype, "tn"))
+    d_extras = {}
+    if rs is not None:
+        dx, d_extras["row_scale"], d_extras["gain"] = \
+            _rms_bwd_terms(dxn, x, rs, gain)
+    else:
+        dx = dxn.astype(x.dtype)
+    return dx, dwg, dwu, d_extras
+
+
+_glu_mm.defvjp(_glu_fwd, _glu_bwd)
+
+
+def glu_matmul(
+    x: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    *,
+    activation: str = "silu",
+    prologue: Optional[RmsPrologue] = None,
+    tile: Optional[TileConfig] = None,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """``act(x @ Wg) · (x @ Wu)`` as one dual-branch program — trainable.
+
+    The streamed x panel is read **once** for both contractions (two VMEM
+    accumulators, one drain): vs the two-pass formulation this deletes
+    the separate ``up`` output write *and* its re-read as the gate GEMM's
+    mul operand *and* a whole second x stream.  An :class:`RmsPrologue`
+    additionally folds the pre-FFN norm into the same fetch.
+    """
+    extras: Dict[str, jax.Array] = {}
+    if prologue is not None:
+        extras["row_scale"] = rms_row_scale(x, prologue.eps)
+        extras["gain"] = prologue.gain
+    out_name = jnp.dtype(out_dtype).name if out_dtype is not None else None
+    return _glu_mm(x, w_gate, w_up, extras, activation, tile, interpret,
+                   out_name)
+
+
+def quant_glu_matmul(
+    x: jax.Array,
+    qwg,
+    qwu,
+    *,
+    activation: str = "silu",
+    prologue: Optional[RmsPrologue] = None,
+    tile: Optional[TileConfig] = None,
+    interpret: bool = False,
+    out_dtype=None,
+    hw=None,
+) -> jax.Array:
+    """Quantized dual-branch GLU: both weights stream int8, each branch's
+    dequant rides its own drain chain (per-channel scales).
+
+    Serve-path only (no VJP), like :func:`quant_matmul`.  Per-tile
+    (blocked) scales pin the kernel k-tile per branch and are not
+    supported in the dual-branch program — callers fall back to two
+    single-branch quantized GEMMs for those.
+    """
+    from repro.quant.scales import QTensor  # leaf module, cycle-free
+
+    for qw in (qwg, qwu):
+        assert isinstance(qw, QTensor) and qw.fmt == "int8", qw
+        assert qw.ndim == 2 and qw.axis in (-2, 0), (qw.shape, qw.axis)
+        assert not qw.block, \
+            "per-tile scales are single-branch; use two quant_matmul passes"
+    assert qwg.shape == qwu.shape, (qwg.shape, qwu.shape)
+    m, k = x.shape
+    k2, n = qwg.shape
+    assert k == k2, (x.shape, qwg.shape)
+
+    pro_spec = PrologueSpec(kind="rms") if prologue is not None \
+        else NO_PROLOGUE
+    branch = dataclasses.replace(IDENTITY, dequant="b")
+    spec = GemmProgramSpec(prologue=pro_spec, branches=(branch, branch),
+                           combine="glu", combine_activation=activation)
+    if tile is None:
+        tile = _resolve_tile(m, n, k, x.dtype, epilogue=spec.tag(),
+                             dtype_b=jnp.int8, hw=hw)
+    row_scale = rms_row_scale(x, prologue.eps) if prologue is not None \
+        else None
+    return kern.ca_gemm_program(
+        x, (qwg.data, qwu.data), spec=spec,
+        bm=tile.bm, bn=tile.bn, bk=tile.bk, out_dtype=out_dtype,
+        interpret=interpret, row_scale=row_scale,
+        gain=prologue.gain if prologue is not None else None,
+        branch_operands=[{"scale_b": qwg.scale.reshape(n)},
+                         {"scale_b": qwu.scale.reshape(n)}])
 
 
 # ---------------------------------------------------------------------------
@@ -200,8 +424,9 @@ def quant_matmul(
     interpret: bool = False,
     out_dtype=None,
     hw=None,
+    prologue: Optional[RmsPrologue] = None,
 ) -> jax.Array:
-    """``epilogue(dequant(A @ Q))`` in one kernel pass.
+    """``epilogue(dequant(prologue(A) @ Q))`` in one kernel pass.
 
     ``qw`` is a :class:`repro.quant.QTensor` int8 weight (per-channel or
     per-tile scales).  The int8 tiles stream straight from HBM — half the
@@ -209,7 +434,9 @@ def quant_matmul(
     the VMEM accumulator inside the drain (per-channel) or on the partial
     product (per-tile): streamed bytes change, HBM round trips don't.
     With ``scale_a`` the activations are int8 too (full int8xint8, int32
-    accumulation, ``acc * s_a ⊗ s_b`` at the drain).
+    accumulation, ``acc * s_a ⊗ s_b`` at the drain).  ``prologue`` folds
+    rms_norm into the activation fetch, composing orthogonally with the
+    dequant stage.
 
     Serve-path only (no VJP): quantized weights are frozen by
     construction; training differentiates the dense master weights.
@@ -226,6 +453,8 @@ def quant_matmul(
     # and mis-scale silently.
     assert qw.axis in (-2, 0), \
         f"weight quantized along axis {qw.axis}, expected the k axis (-2)"
+    assert not (prologue is not None and scale_a is not None), \
+        "rms prologue composes with fp activations, not the int8 'ab' path"
     m, k = a.shape
     k2, n = qw.shape
     assert k == k2, (a.shape, qw.shape)
@@ -234,20 +463,27 @@ def quant_matmul(
     extras = dict(epilogue.operands()) if epilogue is not None else {}
     deq = "ab" if scale_a is not None else "b"
     spec = dataclasses.replace(base, dequant=deq)
+    pro_spec = PrologueSpec(kind="rms") if prologue is not None \
+        else NO_PROLOGUE
+    tag = GemmProgramSpec(prologue=pro_spec, branches=(spec,)).tag()
     if qw.block:
         scale_b = qw.scale            # (ceil(k/block), n) per-tile rows
     else:
         scale_b = qw.scale.reshape(n)  # (1, n) keepdims -> flat channels
 
     if tile is None:
-        tile = _resolve_tile(m, n, k, a.dtype, epilogue=spec.tag(),
+        tile = _resolve_tile(m, n, k, a.dtype, epilogue=tag,
                              dtype_b=jnp.int8, hw=hw)
+    row_scale = rms_row_scale(a, prologue.eps) if prologue is not None \
+        else None
     return kern.ca_mmm(
         a, qw.data, bm=tile.bm, bn=tile.bn, bk=tile.bk,
         out_dtype=out_dtype, interpret=interpret, epilogue=spec,
         bias=extras.get("bias"), mul=extras.get("mul"),
         residual=extras.get("residual"),
-        scale_a=scale_a, scale_b=scale_b, scale_b_block=qw.block)
+        scale_a=scale_a, scale_b=scale_b, scale_b_block=qw.block,
+        prologue=pro_spec, row_scale=row_scale,
+        gain=prologue.gain if prologue is not None else None)
 
 
 def ca_matmul_trainable(a: jax.Array, b: jax.Array,

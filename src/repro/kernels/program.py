@@ -1,0 +1,338 @@
+"""GemmProgram: the static description of one streamed-A GEMM pipeline.
+
+The paper's architecture (Sec. 4) is a composition of independent
+streaming stages — memory readers feeding a compute core feeding a
+drain — and its whole I/O argument is that the *streamed* operand should
+be paid for once and reused maximally while it sits in fast memory.  A
+``GemmProgramSpec`` makes that composition explicit on the TPU side:
+
+* one streamed **A** operand, optionally decorated by a
+  :class:`PrologueSpec` — an elementwise *producer* folded into the
+  A-tile fetch (the rms_norm feeding every projection; the ``g·act'(h)``
+  gradient of the fused epilogue's activation), so the producer's output
+  never makes an HBM round trip of its own;
+* 1..2 **B** operands (*branches*), each carrying its own VMEM
+  accumulator and its own :class:`~repro.kernels.epilogue.EpilogueSpec`
+  (dequant / bias — the per-branch part of the drain chain);
+* a **combiner**: ``combine="glu"`` emits ``act(v_gate) * v_up`` as a
+  single drained output — SwiGLU's gate and up GEMMs share one pass over
+  the streamed x panel (two accumulators, one drain), deleting the
+  separate ``up`` write/read and a whole second A stream.
+
+Single-branch programs with no prologue degenerate to exactly the PR-2
+fused-epilogue kernel, and their :func:`program_tag` is the plain
+``EpilogueSpec.tag()`` — existing tuning-cache keys stay stable.
+
+Tag grammar (the cache-key fragment, one string per program)::
+
+    tag      := [prologue ">"] body
+    prologue := "rms" | "dact." act ["@b"]
+    body     := epitag                      # single branch
+              | "glu." act "(" epitag "|" epitag ")"
+              | "dual(" epitag "|" epitag ")"
+
+where ``epitag`` is :meth:`EpilogueSpec.tag` (``dqb+bias+silu+mul`` etc.)
+and ``act`` is an activation name.  ``@b`` marks a prologue decorating
+the B operand (the ``A^T @ dC`` backward layout, where the gradient
+operand streams as B).  :func:`program_from_tag` is the one parser;
+unknown fragments raise instead of planning the wrong kernel variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.epilogue import (ACTIVATIONS, EpilogueSpec, IDENTITY,
+                                    act_fn, spec_from_tag)
+
+PROLOGUE_KINDS = ("none", "rms", "dact")
+COMBINES = ("none", "glu")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrologueSpec:
+    """Elementwise producer folded into a streamed operand's tile fetch.
+
+    ``kind="rms"`` — rms_norm: the decorated tile is multiplied by a
+    per-row scale (``rsqrt(mean(x², -1) + eps)``, computed once outside
+    the kernel — the norm's reduction spans the full k axis, which a
+    k-streamed kernel never holds at once) and a per-column gain.  The
+    normalized activation tensor is never materialized in HBM.
+
+    ``kind="dact"`` — activation backward: the decorated tile (the
+    upstream gradient ``g``) is multiplied by ``act'(h)``, with the saved
+    pre-activation ``h`` streamed alongside as the prologue operand; the
+    elementwise ``dz = g·act'(h)`` tensor never materializes.
+
+    ``operand`` names the streamed operand being decorated ("a" or "b" —
+    "b" exists for the ``A^T @ dZ`` backward layout, where the gradient
+    streams as the B operand).
+    """
+
+    kind: str = "none"
+    activation: str = "none"   # dact: which activation's derivative
+    operand: str = "a"
+
+    def __post_init__(self):
+        assert self.kind in PROLOGUE_KINDS, self.kind
+        assert self.operand in ("a", "b"), self.operand
+        if self.kind == "dact":
+            assert self.activation in ACTIVATIONS, self.activation
+        else:
+            assert self.activation == "none", (self.kind, self.activation)
+        if self.kind == "rms":
+            assert self.operand == "a", "rms_norm decorates the A stream"
+
+    @property
+    def is_identity(self) -> bool:
+        return self.kind == "none"
+
+    def tag(self) -> str:
+        if self.kind == "none":
+            return ""
+        if self.kind == "rms":
+            return "rms"
+        t = f"dact.{self.activation}"
+        return t + ("@b" if self.operand == "b" else "")
+
+
+NO_PROLOGUE = PrologueSpec()
+
+
+def _prologue_from_tag(tag: str) -> PrologueSpec:
+    if tag == "rms":
+        return PrologueSpec(kind="rms")
+    if tag.startswith("dact."):
+        body = tag[len("dact."):]
+        operand = "a"
+        if body.endswith("@b"):
+            operand, body = "b", body[:-2]
+        return PrologueSpec(kind="dact", activation=body, operand=operand)
+    raise ValueError(f"unknown prologue tag {tag!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmProgramSpec:
+    """Static shape of one streamed-A GEMM program (hashable: rides
+    custom-VJP nondiff_argnums and registry cache keys).
+
+    ``branches`` holds one :class:`EpilogueSpec` per B operand.  With two
+    branches the per-branch chains are restricted to the *pre-combine*
+    stages (dequant "b" + bias): activation/mul/residual describe a
+    single drained output, and the combiner owns the nonlinearity.
+    """
+
+    prologue: PrologueSpec = NO_PROLOGUE
+    branches: Tuple[EpilogueSpec, ...] = (IDENTITY,)
+    combine: str = "none"
+    combine_activation: str = "silu"
+
+    def __post_init__(self):
+        assert self.combine in COMBINES, self.combine
+        assert 1 <= len(self.branches) <= 2, self.branches
+        if self.combine == "glu":
+            assert len(self.branches) == 2, "glu combines two branches"
+            assert self.combine_activation in ACTIVATIONS
+        if len(self.branches) == 2:
+            for b in self.branches:
+                assert (b.activation == "none" and not b.has_mul
+                        and not b.has_residual and b.dequant in ("none", "b")), \
+                    f"multi-branch epilogues are dequant/bias only, got {b.tag()}"
+            # One preact stream cannot decorate two distinct B operands
+            # — a dual-branch dact would multiply both weight-gradient
+            # streams by the same act'(h), silently wrong.
+            assert self.prologue.kind != "dact", \
+                "dact prologue is single-branch (one gradient operand)"
+
+    @property
+    def n_b(self) -> int:
+        return len(self.branches)
+
+    @property
+    def n_out(self) -> int:
+        """Drained (m, n) outputs (saved preacts not counted)."""
+        return 1 if self.combine == "glu" else len(self.branches)
+
+    @property
+    def is_plain(self) -> bool:
+        """Single-branch identity program (the bare CA-MMM)."""
+        return (self.prologue.is_identity and self.combine == "none"
+                and len(self.branches) == 1 and self.branches[0].is_identity)
+
+    def tag(self) -> str:
+        return program_tag(self)
+
+
+PLAIN = GemmProgramSpec()
+
+
+def program_tag(spec: GemmProgramSpec) -> str:
+    """Canonical cache-key fragment (see module docstring for grammar)."""
+    if spec.combine == "glu":
+        body = (f"glu.{spec.combine_activation}"
+                f"({spec.branches[0].tag()}|{spec.branches[1].tag()})")
+    elif len(spec.branches) == 2:
+        body = f"dual({spec.branches[0].tag()}|{spec.branches[1].tag()})"
+    else:
+        body = spec.branches[0].tag()
+    pro = spec.prologue.tag()
+    return f"{pro}>{body}" if pro else body
+
+
+def program_from_tag(tag: str) -> GemmProgramSpec:
+    """Inverse of :func:`program_tag` — the one parser of program tags.
+
+    Plain epilogue tags (``none``, ``bias+silu+mul``, ``dqb+res``, …)
+    parse as single-branch programs, so every pre-v4 key's tag is also a
+    valid program tag.  Unknown fragments raise.
+    """
+    prologue = NO_PROLOGUE
+    if ">" in tag:
+        pro_s, tag = tag.split(">", 1)
+        prologue = _prologue_from_tag(pro_s)
+    if tag.startswith("glu.") or tag.startswith("dual("):
+        if tag.startswith("glu."):
+            act, _, rest = tag[len("glu."):].partition("(")
+            combine = "glu"
+        else:
+            act, rest = "silu", tag[len("dual("):]
+            combine = "none"
+        if not rest.endswith(")") or "|" not in rest:
+            raise ValueError(f"malformed program tag {tag!r}")
+        t0, t1 = rest[:-1].split("|")
+        return GemmProgramSpec(
+            prologue=prologue, combine=combine, combine_activation=act,
+            branches=(spec_from_tag(t0), spec_from_tag(t1)))
+    return GemmProgramSpec(prologue=prologue, branches=(spec_from_tag(tag),))
+
+
+def program_with_dequant(tag: str, mode: str = "b") -> str:
+    """Program-aware analog of :func:`epilogue.with_dequant`: prefix a
+    dequant stage onto *every* branch (a quantized GLU quantizes both the
+    gate and the up weight)."""
+    spec = program_from_tag(tag)
+    return program_tag(dataclasses.replace(
+        spec, branches=tuple(dataclasses.replace(b, dequant=mode)
+                             for b in spec.branches)))
+
+
+def program_activation(tag: str) -> str:
+    """The program's primary nonlinearity ("none" if linear) — what the
+    backward pass will need ``act'`` of (workload planning helper)."""
+    spec = program_from_tag(tag)
+    if spec.combine == "glu":
+        return spec.combine_activation
+    return spec.branches[0].activation
+
+
+# ---------------------------------------------------------------------------
+# Cost shape (tuning-space + I/O-model consumers)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProgramCost:
+    """What a program adds to the kernel's VMEM/HBM budgets.
+
+    ``stream_mn``: streamed (m, n)-shaped drain operands (mul/residual);
+    ``prologue_mk``: streamed (m, k)-shaped prologue operands riding the
+    A stream (the forward dact saved pre-activation: 1);
+    ``prologue_kn``: (k, n)-shaped ones riding the B stream (the ``@b``
+    backward dact variant — a (bk, bn) VMEM block, not (bm, bk));
+    ``prologue_vec``: count of O(m)/O(k) prologue vector operands (rms
+    row scale + gain = 2) — below the VMEM budget's resolution, consumed
+    by planned-Q callers as ``io_volume_elements_program(...,
+    prologue_vec_elements=...)``; ``n_b`` B operands/accumulators;
+    ``n_out`` drained outputs.
+    """
+
+    stream_mn: int = 0
+    has_bias: bool = False
+    n_b: int = 1
+    n_out: int = 1
+    prologue_mk: int = 0
+    prologue_kn: int = 0
+    prologue_vec: int = 0
+
+
+def program_cost(tag: str) -> ProgramCost:
+    spec = program_from_tag(tag)
+    stream_mn = sum(int(b.has_mul) + int(b.has_residual)
+                    for b in spec.branches)
+    dact = spec.prologue.kind == "dact"
+    on_a = spec.prologue.operand == "a"
+    pro_vec = 2 if spec.prologue.kind == "rms" else 0
+    return ProgramCost(
+        stream_mn=stream_mn,
+        has_bias=any(b.has_bias for b in spec.branches),
+        n_b=spec.n_b, n_out=spec.n_out,
+        prologue_mk=1 if dact and on_a else 0,
+        prologue_kn=1 if dact and not on_a else 0,
+        prologue_vec=pro_vec)
+
+
+# ---------------------------------------------------------------------------
+# User-facing prologue bundle + reference semantics
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RmsPrologue:
+    """rms_norm folded into the A-tile fetch: ``gain`` is the norm's
+    (k,) scale parameter; the per-row ``rsqrt(mean(x²) + eps)`` factor is
+    computed (differentiably, outside the kernel) by the wrapper."""
+
+    gain: jax.Array
+    eps: float = 1e-5
+
+
+def rms_row_scale(x: jax.Array, eps: float) -> jax.Array:
+    """The per-row factor of rms_norm: ``rsqrt(mean(x², -1) + eps)``.
+
+    Plain differentiable XLA ops — called outside the kernel so autodiff
+    chains through it, and so the kernel's prologue is a pure per-tile
+    multiply.  Returns (..., 1) fp32.
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return jax.lax.rsqrt(var + eps)
+
+
+def apply_rms_reference(x: jax.Array, row_scale: jax.Array,
+                        gain: jax.Array) -> jax.Array:
+    """Oracle semantics of the rms prologue (== models.common.rms_norm):
+    fp32 multiply chain, cast back to the operand dtype."""
+    xf = x.astype(jnp.float32)
+    out = xf * row_scale.astype(jnp.float32) * gain.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_dact_reference(g: jax.Array, h: jax.Array,
+                         activation: str) -> jax.Array:
+    """Oracle semantics of the dact prologue: ``g · act'(h)`` in fp32,
+    cast back to the gradient operand's dtype."""
+    _, vjp = jax.vjp(act_fn(activation), h.astype(jnp.float32))
+    return vjp(g.astype(jnp.float32))[0].astype(g.dtype)
+
+
+def synthetic_operands(tag: str, m: int, n: int, k: int,
+                       dtype) -> Dict[str, jax.Array]:
+    """Unit-valued prologue/branch operands for timing a program variant
+    (the autotuner's analog of the fused-epilogue synthetic operands):
+    the returned dict matches :func:`repro.kernels.ca_mmm.ca_mmm`'s
+    keyword surface for the given tag."""
+    spec = program_from_tag(tag)
+    out: Dict[str, jax.Array] = {}
+    if spec.prologue.kind == "rms":
+        # row_scale is fp32 by kernel contract; the gain streams in the
+        # caller's dtype (the in-kernel fp32 cast is part of what the
+        # timing measures).
+        out["row_scale"] = jnp.ones((m, 1), jnp.float32)
+        out["gain"] = jnp.ones((k,), dtype)
+    elif spec.prologue.kind == "dact":
+        # The saved pre-activation is stored (and streamed) fp32.
+        shape = (m, k) if spec.prologue.operand == "a" else (k, n)
+        out["preact"] = jnp.ones(shape, jnp.float32)
+    return out

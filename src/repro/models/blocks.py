@@ -53,13 +53,18 @@ def transformer_block_apply(p, x, cfg: ModelConfig, *, positions,
         cfg, positions=positions, cache=cache, step=step, mode=mode,
         max_len=max_len, residual=x)
     x = maybe_shard(x, ("batch", "seq", None))
-    u = cm.rms_norm(x, p["norm_ffn/scale"], cfg.norm_eps)
     if cfg.moe is not None and cfg.moe.n_experts:
+        # MoE needs the normalized stream as a value (router + dispatch
+        # scatter consume it), so the norm stays a separate op here.
+        u = cm.rms_norm(x, p["norm_ffn/scale"], cfg.norm_eps)
         x, aux = moe_mod.moe_apply(cm.subtree(p, "moe"), u, cfg,
                                    residual=x)
     else:
-        x, aux = cm.mlp_apply(cm.subtree(p, "mlp"), u, cfg.act,
-                              residual=x), 0.0
+        # Dense FFN: the pre-FFN rms_norm rides the GEMM program's
+        # prologue — folded into the x-tile fetch, never written to HBM.
+        x, aux = cm.mlp_apply(cm.subtree(p, "mlp"), x, cfg.act,
+                              residual=x, norm_gain=p["norm_ffn/scale"],
+                              norm_eps=cfg.norm_eps), 0.0
     x = maybe_shard(x, ("batch", "seq", None))
     return x, new_cache, aux
 
@@ -116,7 +121,7 @@ def shared_block_apply(p, x, emb0, cfg: ModelConfig, *, positions,
     x, new_cache = attn.gqa_apply(
         cm.subtree(p, "attn"), u, cfg, positions=positions, cache=cache,
         step=step, mode=mode, max_len=max_len, residual=x)
-    u = cm.rms_norm(x, p["norm_ffn/scale"], cfg.norm_eps)
-    x = cm.mlp_apply(cm.subtree(p, "mlp"), u, cfg.act, residual=x)
+    x = cm.mlp_apply(cm.subtree(p, "mlp"), x, cfg.act, residual=x,
+                     norm_gain=p["norm_ffn/scale"], norm_eps=cfg.norm_eps)
     x = maybe_shard(x, ("batch", "seq", None))
     return x, new_cache

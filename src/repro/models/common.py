@@ -16,8 +16,10 @@ from typing import Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.gemm import ca_matmul
+from repro.core.gemm import ca_glu_matmul, ca_matmul
 from repro.kernels.epilogue import Epilogue
+from repro.kernels.program import (RmsPrologue, apply_rms_reference,
+                                   rms_row_scale)
 from repro.quant.scales import QTensor
 
 
@@ -175,11 +177,10 @@ def quantize_params(params: Dict[str, jax.Array], qconfig=None,
 # ---------------------------------------------------------------------------
 
 def rms_norm(x: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
-    dt = x.dtype
-    xf = x.astype(jnp.float32)
-    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
-    out = xf * jax.lax.rsqrt(var + eps) * gain.astype(jnp.float32)
-    return out.astype(dt)
+    """Delegates to the GemmProgram rms-prologue helpers so the one
+    definition serves the standalone op, the XLA oracle path and the
+    kernel prologue — they can never drift apart numerically."""
+    return apply_rms_reference(x, rms_row_scale(x, eps), gain)
 
 
 def rms_norm_def(d: int) -> Defs:
@@ -244,22 +245,29 @@ def mlp_defs(d: int, f: int, act: str, depth_scale: float = 1.0) -> Defs:
 
 
 def mlp_apply(p: Dict[str, jax.Array], x: jax.Array, act: str,
-              residual: Optional[jax.Array] = None) -> jax.Array:
-    """SwiGLU / GELU MLP with every epilogue fused into a GEMM drain.
+              residual: Optional[jax.Array] = None,
+              norm_gain: Optional[jax.Array] = None,
+              norm_eps: float = 1e-5) -> jax.Array:
+    """SwiGLU / GELU MLP as GemmPrograms: one x pass, fused drains.
 
-    The activation (and the GLU gate multiply) executes inside the gate
-    GEMM's drain phase; ``residual`` rides the down-projection's single
-    write-back — the (m, n) output never makes an extra HBM round trip
-    for elementwise work (paper Sec. 4.4 extended up the model stack).
+    SwiGLU runs gate and up as a single dual-branch program — the x panel
+    streams once for both contractions (two accumulators, one
+    ``silu(gate)·up`` drain), so the separate ``up`` GEMM with its output
+    write and mul-operand re-read is gone.  ``norm_gain`` folds the
+    pre-FFN rms_norm into the same x fetch (prologue): the normalized
+    activation tensor never materializes in HBM.  ``residual`` rides the
+    down-projection's single write-back (paper Sec. 4.4 extended up the
+    model stack).
     """
     dt = x.dtype
+    pro = RmsPrologue(gain=norm_gain, eps=norm_eps) \
+        if norm_gain is not None else None
     if act == "silu":
-        up = ca_matmul(x, wcast(p["w_up"], dt))
-        h = ca_matmul(x, wcast(p["w_gate"], dt),
-                      epilogue=Epilogue(activation="silu", mul=up))
+        h = ca_glu_matmul(x, wcast(p["w_gate"], dt), wcast(p["w_up"], dt),
+                          activation="silu", prologue=pro, out_dtype=dt)
     else:
         h = ca_matmul(x, wcast(p["w_up"], dt),
-                      epilogue=Epilogue(activation="gelu"))
+                      epilogue=Epilogue(activation="gelu"), prologue=pro)
     down_epi = Epilogue(residual=residual) if residual is not None else None
     return ca_matmul(h, wcast(p["w_down"], dt), epilogue=down_epi)
 

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, round_up
+from repro.core.gemm import ca_expert_glu_matmul, ca_expert_matmul
 from repro.models import common as cm
 from repro.models.common import Defs, ParamDef
 from repro.sharding.rules import maybe_shard
@@ -109,14 +110,15 @@ def moe_apply(p: Dict[str, jax.Array], x: jax.Array,
     xe = maybe_shard(xe, ("batch", "model_dim", None, None))
 
     # --- expert FFN (batched over E; expert dim EP- or f TP-sharded) ---
-    gate = jnp.einsum("becd,edf->becf", xe, p["w_gate"].astype(dt),
-                      preferred_element_type=jnp.float32)
-    up = jnp.einsum("becd,edf->becf", xe, p["w_up"].astype(dt),
-                    preferred_element_type=jnp.float32)
-    h = (jax.nn.silu(gate) * up).astype(dt)
+    # Both contractions route through core.gemm's expert path: on kernel
+    # dispatch each expert's GEMM is a registry-planned CA-MMM — the
+    # gate/up pair a single dual-branch GLU program per expert (one pass
+    # over that expert's capacity buffer); the XLA mode keeps the batched
+    # einsum these were tested against.
+    h = ca_expert_glu_matmul(xe, p["w_gate"].astype(dt),
+                             p["w_up"].astype(dt), out_dtype=dt)
     h = maybe_shard(h, ("batch", "model_dim", None, "model_dim"))
-    ye = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(dt),
-                    preferred_element_type=jnp.float32).astype(dt)
+    ye = ca_expert_matmul(h, p["w_down"].astype(dt), out_dtype=dt)
     ye = maybe_shard(ye, ("batch", "model_dim", None, None))
 
     # --- combine (gather back, weight, sum over k) ---

@@ -51,13 +51,15 @@ class ServeEngine:
         # Serve-time warmup: resolve every hot-path GEMM tile through the
         # kernel-config registry (cache > autotune > analytic) before the
         # first request, so no request pays tuning/solver latency.  The
-        # workload set carries each GEMM's (epilogue, layout) variant —
-        # fused gate/residual kernels plan under their own keys, and a
-        # weight-quantized param tree warms the int8-weight variants
-        # (dequant-fused epilogue tags, ``int8w_*`` dtype keys) instead,
-        # since those are the kernels its projections will issue.  The
-        # jitted prefill/decode steps below fetch the same configs via
-        # ``core.gemm.plan_for`` at trace time.
+        # workload set carries each GEMM's (program_tag, layout) variant
+        # — the dense FFN's rms-prologue-fused dual-branch GLU program,
+        # the per-expert GLU/down programs of MoE archs, and residual
+        # drains all plan under their own keys; a weight-quantized param
+        # tree warms the int8-weight variants instead (per-branch dequant
+        # tags like ``glu.silu(dqb|dqb)``, ``int8w_*`` dtype keys), since
+        # those are the kernels its projections will issue.  The jitted
+        # prefill/decode steps below fetch the same configs at trace
+        # time.
         self.quantized = _is_quantized(params)
         self.gemm_plan_sources = (
             warmup_model(cfg, [batch_size, batch_size * max_len],

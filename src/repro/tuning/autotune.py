@@ -41,6 +41,21 @@ def _auto_interpret() -> bool:
         return True
 
 
+def _pad_to_tiles(x: jax.Array, r0: int, r1: int) -> jax.Array:
+    """Pad a 2D operand up to multiples of (r0, r1).
+
+    Only the ``k_outer`` ablation needs this (its kernel keeps the
+    divisibility requirement); the production schedule runs ragged
+    shapes natively, so the padding lives here with its one consumer
+    instead of in the kernels package.
+    """
+    p0 = -x.shape[0] % r0
+    p1 = -x.shape[1] % r1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
 def _make_operands(m: int, n: int, k: int, dtype) -> Tuple[jax.Array,
                                                            jax.Array]:
     r = np.random.RandomState(0)
@@ -70,16 +85,18 @@ def time_tile(
     """Median wall seconds of one CA-MMM call under ``tile``.
 
     ``epilogue``/``layout`` time the kernel variant the config will
-    actually serve: synthetic bias/gate/residual operands are attached
-    for a fused spec, and 'nt'/'tn' layouts stream the transposed
-    operand — so a fused/transposed cache entry holds a measurement of
-    the fused/transposed kernel, not a proxy.  ``dtype_b`` (with a
-    ``dq*`` epilogue tag) times the quantized-weight kernel: int8 B
-    operand, unit per-channel scales — the streamed bytes and the
-    drain-fused dequant are the real thing.
+    actually serve — ``epilogue`` is a full *program tag*: synthetic
+    bias/gate/residual operands are attached for fused drain stages,
+    dual-branch (GLU) tags stream a second B operand into a second
+    accumulator, prologue tags attach unit rms scales or a saved-preact
+    stream, and 'nt'/'tn' layouts stream the transposed operand — so a
+    cached entry holds a measurement of exactly the kernel variant its
+    key names, never a proxy.  ``dtype_b`` (with a ``dq*`` stage) times
+    the quantized-weight kernel: int8 B operand, unit per-channel scales
+    — the streamed bytes and the drain-fused dequant are the real thing.
     """
-    from repro.kernels import ca_mmm_k_outer, ca_mmm_kernel, ops
-    from repro.kernels.epilogue import spec_from_tag
+    from repro.kernels import ca_gemm_program, ca_mmm_k_outer, ops
+    from repro.kernels.program import program_from_tag, synthetic_operands
 
     interpret = _auto_interpret() if interpret is None else interpret
     a, b = _make_operands(m, n, k, dtype)
@@ -98,8 +115,8 @@ def time_tile(
         bm = min(tile.bm, round_up_to(m, 8))
         bn = min(tile.bn, round_up_to(n, 128))
         bk = min(tile.bk, round_up_to(k, 128))
-        ap = ops._pad2(a, bm, bk)
-        bp = ops._pad2(b, bk, bn)
+        ap = _pad_to_tiles(a, bm, bk)
+        bp = _pad_to_tiles(b, bk, bn)
 
         def call():
             return ca_mmm_k_outer(ap, bp, bm=bm, bn=bn, bk=bk,
@@ -109,32 +126,37 @@ def time_tile(
             return ops.ca_mmm_any(a, b, tile, interpret=interpret,
                                   semiring=semiring)
     else:
-        # One branch covers all (epilogue, layout) combinations — the
-        # kernel treats them orthogonally, and the cache entry must hold
-        # a measurement of exactly the variant its key names.
+        # One branch covers every program tag x layout combination — the
+        # executor treats them orthogonally, and the cache entry must
+        # hold a measurement of exactly the variant its key names.
+        prog = program_from_tag(epilogue)
         ta, tb = layout[0] == "t", layout[1] == "t"
         at = a.T if ta else a
         bt = b.T if tb else b
-        spec = None
-        epi_kw = {}
-        if epilogue != "none":
-            spec = spec_from_tag(epilogue)
-            if spec.has_bias:
-                epi_kw["bias"] = jnp.ones((n,), a.dtype)
-            if spec.has_mul:
-                epi_kw["mul"] = jnp.ones((m, n), a.dtype)
-            if spec.has_residual:
-                epi_kw["residual"] = jnp.ones((m, n), a.dtype)
-            if spec.dequant != "none":
-                epi_kw["scale_b"] = jnp.ones((n,), jnp.float32)
-            if spec.dequant == "ab":
-                epi_kw["scale_a"] = jnp.ones((m,), jnp.float32)
+        pro_ops = synthetic_operands(epilogue, m, n, k, dtype)
+        branch_ops = []
+        for bspec in prog.branches:
+            d = {}
+            if bspec.has_bias:
+                d["bias"] = jnp.ones((n,), a.dtype)
+            if bspec.has_mul:
+                d["mul"] = jnp.ones((m, n), a.dtype)
+            if bspec.has_residual:
+                d["residual"] = jnp.ones((m, n), a.dtype)
+            if bspec.dequant != "none":
+                d["scale_b"] = jnp.ones((n,), jnp.float32)
+            if bspec.dequant == "ab":
+                d["scale_a"] = jnp.ones((m,), jnp.float32)
+            branch_ops.append(d)
+        bs = (bt,) * prog.n_b
 
         def call():
-            return ca_mmm_kernel(at, bt, bm=tile.bm, bn=tile.bn, bk=tile.bk,
-                                 transpose_a=ta, transpose_b=tb,
-                                 epilogue=spec, interpret=interpret,
-                                 **epi_kw)
+            return ca_gemm_program(
+                at, bs, spec=prog, bm=tile.bm, bn=tile.bn, bk=tile.bk,
+                transpose_a=ta, transpose_b=tb, interpret=interpret,
+                row_scale=pro_ops.get("row_scale"),
+                gain=pro_ops.get("gain"), preact=pro_ops.get("preact"),
+                branch_operands=branch_ops)
 
     for _ in range(max(0, warmup)):
         jax.block_until_ready(call())

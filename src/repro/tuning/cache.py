@@ -44,7 +44,15 @@ from repro.core.io_model import TileConfig
 # v2: keys carry (epilogue, layout) — fused-epilogue and transpose-
 # streaming kernels tile (and time) differently from plain GEMMs, so they
 # cache distinctly.  v1 files (keys without the fields) are discarded.
-SCHEMA_VERSION = 2
+# v4: the epilogue field holds a full GemmProgram tag (prologue/combiner
+# grammar — ``rms>glu.silu(none|none)``, ``dact.gelu>none``; see
+# repro/kernels/program.py).  Single-branch no-prologue tags are
+# unchanged, but dual-branch programs budget VMEM differently (two B
+# double-buffers + two accumulators), so pre-program files re-tune under
+# v4 keys rather than serving stale single-branch measurements.  v3 was
+# never a cache schema — the number aligns with BENCH_gemm.json's
+# lineage, which reached v3 first.
+SCHEMA_VERSION = 4
 
 _ENV_PATH = "REPRO_TUNING_CACHE"
 

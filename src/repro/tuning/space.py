@@ -77,19 +77,25 @@ def candidate_tile_configs(
     analytic :func:`solve_tile_config` answer always among them, so the
     tuner can never do worse than the pure model by construction.
 
-    ``epilogue`` (an :meth:`EpilogueSpec.tag` string) charges the fused
-    drain's extra VMEM residents — one (bm, bn) tile per streamed
-    gate/residual operand plus a bias row — against the same budget, so a
-    fused kernel's candidates are feasible by construction too.
+    ``epilogue`` (a full *program tag* — prologue/combiner grammar
+    included) charges the program's extra VMEM residents against the same
+    budget: one (bm, bn) tile per streamed gate/residual operand plus a
+    bias row for a fused drain, a second B double-buffer **and** a second
+    accumulator for dual-branch (GLU) programs, and an fp32 (bm, bk)
+    stream buffer per dact-prologue operand — so every program variant's
+    candidates are feasible by construction.
 
     ``dtype_b`` (mixed-precision GEMMs, e.g. int8 weights under bf16
     activations) shrinks the B stream buffers in the budget: a quantized
     kernel's feasible region is *wider* than the uniform-dtype one, and
     the candidates here exploit that instead of inheriting bf16 limits.
     """
-    from repro.kernels.epilogue import stream_cost  # no cycle: leaf module
+    from repro.kernels.program import program_cost  # no cycle: leaf module
 
-    epi_mn, epi_bias = stream_cost(epilogue)
+    cost = program_cost(epilogue)
+    epi_mn, epi_bias = cost.stream_mn, cost.has_bias
+    n_b, n_out = cost.n_b, cost.n_out
+    pro_mk, pro_kn = cost.prologue_mk, cost.prologue_kn
     itemsize_in = jnp.dtype(dtype_in).itemsize
     itemsize_b = jnp.dtype(dtype_b).itemsize if dtype_b is not None \
         else itemsize_in
@@ -116,7 +122,10 @@ def candidate_tile_configs(
         if tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes,
                            epilogue_mn_ops=epi_mn,
                            epilogue_bias=epi_bias,
-                           itemsize_b=itemsize_b) > budget:
+                           itemsize_b=itemsize_b,
+                           n_b=n_b, n_out=n_out,
+                           prologue_mk_ops=pro_mk,
+                           prologue_kn_ops=pro_kn) > budget:
             return
         if semiring == "min_plus" and not _min_plus_vmem_ok(bm, bn, bk,
                                                             budget):
@@ -139,8 +148,11 @@ def candidate_tile_configs(
             # Largest bn the budget allows at this (bm, bk), then a short
             # geometric descent below it — the model says intensity falls
             # monotonically with bn at fixed bm, so deep descent is waste.
-            fixed = 2 * bm * bk * itemsize_in
-            per_bn = 2 * bk * itemsize_b + bm * (acc_bytes + itemsize_in) \
+            fixed = 2 * bm * bk * (itemsize_in + 4 * pro_mk)
+            # B-side prologue blocks ((bk, bn) fp32) scale with bn, so
+            # they join the per-bn slope, not the fixed term.
+            per_bn = 2 * bk * (n_b * itemsize_b + 4 * pro_kn) \
+                + bm * (n_b * acc_bytes + n_out * itemsize_in) \
                 + epi_mn * bm * itemsize_in + (itemsize_in if epi_bias else 0)
             bn_budget = (budget - fixed) // per_bn if budget > fixed else 0
             bn_top = min((int(bn_budget) // qn) * qn, n_cap)
@@ -164,7 +176,10 @@ def candidate_tile_configs(
             vb = tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes,
                                  epilogue_mn_ops=epi_mn,
                                  epilogue_bias=epi_bias,
-                                 itemsize_b=itemsize_b)
+                                 itemsize_b=itemsize_b,
+                                 n_b=n_b, n_out=n_out,
+                                 prologue_mk_ops=pro_mk,
+                                 prologue_kn_ops=pro_kn)
             out.append(TileConfig(
                 bm=bm, bn=bn, bk=bk, order=order, vmem_bytes=vb,
                 intensity=inten,

@@ -9,12 +9,14 @@ Only the *dominant* dense contractions are listed (projections, FFN,
 logits, expert FFNs); the cache's power-of-two shape bucketing means these
 cover every nearby shape the model actually emits.
 
-Entries carry the ``(epilogue, layout)`` fields of the cache key: the
-fused-epilogue GEMMs the model layers actually issue (gated FFN, residual
-write-backs) and — for training — the transpose-streaming backward
-layouts ('nt' for dC @ B^T, 'tn' for A^T @ dC) are planned under their
-own keys, so the first jitted step traces against configs for the exact
-kernel variants it lowers.
+Entries carry the ``(program_tag, layout)`` fields of the cache key: the
+GemmPrograms the model layers actually issue — the rms-prologue-fused
+dual-branch GLU of the dense FFN (``rms>glu.silu(none|none)``), the
+per-expert GLU programs of the MoE path, residual write-backs — and, for
+training, the transpose-streaming backward layouts ('nt' for dC @ B^T,
+'tn' for A^T @ dC) including their ``dact``-prologue variants, are
+planned under their own keys, so the first jitted step traces against
+configs for the exact kernel variants it lowers.
 """
 
 from __future__ import annotations
@@ -36,18 +38,20 @@ def model_gemm_shapes(cfg: ModelConfig, rows: int) -> List[GemmShape]:
 def quantize_workloads(loads) -> List[Tuple]:
     """Rewrite forward workload entries as their int8-weight variants.
 
-    Each ('nn'-layout) entry gains a ``dqb`` dequant stage in its
-    epilogue tag and an ``"int8"`` weight-dtype field — the exact
+    Each ('nn'-layout) entry gains a ``dqb`` dequant stage on *every
+    branch* of its program tag (a quantized GLU quantizes both the gate
+    and the up weight) and an ``"int8"`` weight-dtype field — the exact
     registry key the quantized serve path resolves, so warmup plans the
     kernels that will actually run.  Backward/transposed layouts pass
     through unquantized (training differentiates dense master weights).
     """
-    from repro.kernels.epilogue import with_dequant  # leaf module
+    from repro.kernels.program import program_with_dequant  # leaf module
 
     out = []
     for (m, n, k, epi, lay) in loads:
         if lay == "nn":
-            out.append((m, n, k, with_dequant(epi, "b"), lay, "int8"))
+            out.append((m, n, k, program_with_dequant(epi, "b"), lay,
+                        "int8"))
         else:
             out.append((m, n, k, epi, lay))
     return sorted(out)
@@ -60,8 +64,11 @@ def model_gemm_workloads(cfg: ModelConfig, rows: int,
     ``train=True`` adds the backward GEMMs' transposed-operand layouts for
     every forward signature (same shapes, contraction dim rotated).
     """
+    from repro.kernels.program import program_activation  # leaf module
+
     d, f, v = cfg.d_model, cfg.d_ff, cfg.padded_vocab
     act = getattr(cfg, "act", "silu")
+    glu = "glu.silu(none|none)"
     loads = {
         (rows, d, d, "none", "nn"),     # attention / mixer projections
         (rows, d, d, "res", "nn"),      # output projection + residual
@@ -69,26 +76,37 @@ def model_gemm_workloads(cfg: ModelConfig, rows: int,
     }
     if f > 0:
         if act == "silu":
-            loads.add((rows, f, d, "none", "nn"))       # FFN up
-            loads.add((rows, f, d, "silu+mul", "nn"))   # FFN gate (GLU)
+            # Gate + up as one rms-prologue-fused dual-branch GLU program
+            # (models/common.mlp_apply): x streamed once, norm folded.
+            loads.add((rows, f, d, f"rms>{glu}", "nn"))
         else:
-            loads.add((rows, f, d, f"{act}", "nn"))     # FFN up + act
+            loads.add((rows, f, d, f"rms>{act}", "nn"))  # FFN up + act
         loads.add((rows, d, f, "res", "nn"))            # FFN down + residual
     if cfg.moe is not None and cfg.moe.d_ff_expert:
         fe = cfg.moe.d_ff_expert
-        loads.add((rows, fe, d, "none", "nn"))
+        # Routed experts: per-expert GLU + down through the registry
+        # (core.gemm.ca_expert_*); m is the nominal token count — the
+        # power-of-two bucket covers the capacity-buffer row counts.
+        loads.add((rows, fe, d, glu, "nn"))
         loads.add((rows, d, fe, "none", "nn"))
         if cfg.moe.n_shared_experts:
             fs = cfg.moe.n_shared_experts * fe
-            loads.add((rows, fs, d, "none", "nn"))
-            loads.add((rows, fs, d, "silu+mul", "nn"))
+            # Shared-expert FFN consumes the already-normalized stream
+            # (the router needs it as a value), so no rms prologue here.
+            loads.add((rows, fs, d, glu, "nn"))
             loads.add((rows, d, fs, "res", "nn"))
     if train:
         # dA = dC @ B^T streams B transposed; dB = A^T @ dC streams A
         # transposed — plan both layouts for every forward signature.
-        for (m, n, k, _epi, _lay) in list(loads):
+        # Programs with a nonlinearity additionally plan their
+        # dact-prologue backward variants (dz folded into the fetch).
+        for (m, n, k, epi, _lay) in list(loads):
             loads.add((m, k, n, "none", "nt"))
             loads.add((k, n, m, "none", "tn"))
+            act_p = program_activation(epi)
+            if act_p != "none":
+                loads.add((m, k, n, f"dact.{act_p}>none", "nt"))
+                loads.add((k, n, m, f"dact.{act_p}@b>none", "tn"))
     # Architectures may zero a dim out (e.g. SSM configs with d_ff=0 —
     # no dense FFN); a GEMM with an empty dim is not a GEMM.
     return sorted(w for w in loads if all(dim > 0 for dim in w[:3]))

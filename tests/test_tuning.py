@@ -452,20 +452,28 @@ def test_model_gemm_shapes_and_warmup(tmp_path):
     from repro.tuning import model_gemm_workloads
 
     loads = model_gemm_workloads(cfg, 32)
-    # fused-epilogue variants are planned under their own keys
-    assert (32, cfg.d_ff, cfg.d_model, "silu+mul", "nn") in loads
+    # program variants are planned under their own keys: the FFN issues
+    # one rms-prologue-fused dual-branch GLU program, not two GEMMs
+    assert (32, cfg.d_ff, cfg.d_model, "rms>glu.silu(none|none)", "nn") \
+        in loads
     assert (32, cfg.d_model, cfg.d_ff, "res", "nn") in loads
     train_loads = model_gemm_workloads(cfg, 32, train=True)
-    # backward transpose-streaming layouts appear only for training
+    # backward transpose-streaming layouts appear only for training,
+    # including the dact-prologue variants of the nonlinear programs
     assert any(w[4] == "nt" for w in train_loads)
     assert any(w[4] == "tn" for w in train_loads)
+    assert (32, cfg.d_model, cfg.d_ff, "dact.silu>none", "nt") in train_loads
+    assert (cfg.d_model, cfg.d_ff, 32, "dact.silu@b>none", "tn") \
+        in train_loads
     assert not any(w[4] != "nn" for w in loads)
 
     from repro.tuning import quantize_workloads
 
     qloads = quantize_workloads(loads)
-    # every 'nn' forward entry becomes its int8-weight variant
-    assert (32, cfg.d_ff, cfg.d_model, "dqb+silu+mul", "nn", "int8") in qloads
+    # every 'nn' forward entry becomes its int8-weight variant; a GLU
+    # program gains a dequant stage on *both* branches
+    assert (32, cfg.d_ff, cfg.d_model, "rms>glu.silu(dqb|dqb)", "nn",
+            "int8") in qloads
     assert (32, cfg.d_model, cfg.d_ff, "dqb+res", "nn", "int8") in qloads
     assert all(len(w) == 6 for w in qloads)  # all forward loads are 'nn'
 
