@@ -21,6 +21,14 @@ dequant's scale-read-only overhead, and numerics vs both the
 dequantized-weight oracle and the dense fp32 oracle.  ``--check-baseline``
 gates the planned int8w/bf16 ratio at ``QUANT_RATIO_GATE``.
 
+The **w8a8** section (static activation quantization) compares the full
+int8xint8 plan against both bf16 and weight-only int8 on the same
+decode shape: planned bytes with *both* panels at 1 B/element, the
+roofline compute term at the MXU's 2x int8 rate (the compute-rate claim
+this path exists for), and numerics of the quantize-on-entry kernel vs
+the fake-quant oracle.  ``--check-baseline`` gates the w8a8/bf16 byte
+ratio at ``W8A8_RATIO_GATE`` and the int8/bf16 compute ratio at 0.55.
+
 The **glu** section compares the one-pass dual-branch SwiGLU program
 (gate and up sharing the streamed x panel — two accumulators, one drain)
 against the two-pass up + fused-gate formulation on a prefill FFN shape:
@@ -65,7 +73,11 @@ N = 16384  # paper's benchmark size
 # v4: adds the "glu" section (one-pass dual-branch SwiGLU program vs the
 # two-pass up + gate formulation: planned + XLA-measured bytes, ratio
 # gated at <= GLU_RATIO_GATE).
-JSON_SCHEMA_VERSION = 4
+# v5: adds the "w8a8" section (static-activation int8xint8 vs bf16 and
+# int8w on the decode shape: planned bytes incl. the int8 A panel,
+# roofline seconds at the MXU's 2x int8 rate, numerics vs the
+# fake-quant oracle; byte ratio gated at <= W8A8_RATIO_GATE).
+JSON_SCHEMA_VERSION = 5
 DEFAULT_JSON_PATH = "BENCH_gemm.json"
 
 # The ragged serving shape of the fused section: 37 decode tokens through
@@ -78,6 +90,12 @@ FUSED_EPILOGUE = "bias+gelu"
 # dominates at small m — the regime quantization halves) and gates the
 # planned int8w/bf16 byte ratio at this ceiling in CI.
 QUANT_RATIO_GATE = 0.6
+
+# The w8a8 section reuses the decode shape: static activation scales
+# put both panels at 1 B/element *and* the contraction on the MXU's 2x
+# int8 rate — the first gate that is a compute-rate claim, not only a
+# byte claim.  Planned w8a8/bf16 bytes gated at this ceiling in CI.
+W8A8_RATIO_GATE = 0.6
 
 # The GLU section runs a prefill FFN shape (rows x d_ff x d_model): the
 # one-pass program's win is a whole A stream plus the up output's write
@@ -336,6 +354,123 @@ def run_quant(records=None, shape=FUSED_SHAPE, base_idx=()):
         records.append(rec)
 
 
+def run_w8a8(records=None, shape=FUSED_SHAPE, base_idx=()):
+    """Static-activation int8xint8 vs bf16 and int8-weight-only.
+
+    The w8a8 plan streams *both* panels at 1 B/element (planned bytes
+    from the itemsize-split Eq. 6 with ``a_itemsize=1``) and runs the
+    contraction at the MXU's 2x int8 rate (roofline seconds from
+    ``peak_flops(int8)``) — the compute-rate claim on top of PR 3's byte
+    claim.  Numerics: the interpret-mode kernel (quantize-on-entry with
+    a calibrated static scale, int32 accumulation, drain dequant) vs the
+    fake-quant XLA oracle (tight) and the dense fp32 oracle (the
+    documented int8 band, now including activation quantization error).
+    ``--check-baseline`` gates the planned w8a8/bf16 byte ratio at
+    ``W8A8_RATIO_GATE`` and the int8/bf16 roofline compute ratio at 0.55.
+    """
+    from repro.kernels import quant_matmul
+    from repro.quant import (Calibrator, QuantConfig, fake_quant_activation,
+                             quant_dtype_str, quantize)
+    from repro.tuning import get_registry
+
+    m, n, k = shape
+    act_dt = jnp.dtype(jnp.bfloat16)
+    dtype_str = quant_dtype_str(jnp.int8, jnp.int8)
+    r = np.random.RandomState(0)
+    w32 = r.randn(k, n).astype(np.float32)
+    a32 = r.randn(m, k).astype(np.float32)
+    qw = quantize(jnp.asarray(w32), axis=-2)
+
+    # Static a-scale from a one-batch calibration pass (absmax).
+    cal = Calibrator(QuantConfig(act_fmt="int8"), axis=-1)
+    cal.observe(jnp.asarray(a32))
+    a_scale = cal.static_scale()
+
+    reg = get_registry()
+    res_w8a8 = reg.resolve_full(m, n, k, dtype=act_dt, dtype_b=jnp.int8,
+                                dtype_a=jnp.int8, epilogue="dqab")
+    res_w8 = reg.resolve_full(m, n, k, dtype=act_dt, dtype_b=jnp.int8,
+                              epilogue="dqb")
+    res_bf = reg.resolve_full(m, n, k, dtype=act_dt)
+    t8a, t8, tb = res_w8a8.config, res_w8.config, res_bf.config
+
+    def planned(tile, a_is, b_is):
+        return io_volume_bytes(m, n, k, min(tile.bm, m), min(tile.bn, n),
+                               a_itemsize=a_is, b_itemsize=b_is,
+                               out_itemsize=2)
+
+    # w8a8 extra traffic: the fp32 scale row (n) + the per-tensor
+    # a-scale (1 element) — epilogue_q_elements' scale accounting.
+    q_w8a8 = planned(t8a, 1, 1) \
+        + 4.0 * epilogue_q_elements(m, n, scale_b_elements=n,
+                                    scale_a_elements=1)
+    q_w8 = planned(t8, 2, 1) \
+        + 4.0 * epilogue_q_elements(m, n, scale_b_elements=n)
+    q_bf16 = planned(tb, 2, 2)
+    byte_ratio = q_w8a8 / q_bf16
+    byte_ratio_vs_w8 = q_w8a8 / q_w8
+
+    # Compute-rate side of the claim: the same 2mnk MACs at the MXU's
+    # int8 rate vs the bf16 rate (deterministic hardware constants).
+    flops = 2.0 * m * n * k
+    compute_int8_s = flops / V5E.peak_flops(jnp.int8)
+    compute_bf16_s = flops / V5E.peak_flops(act_dt)
+    compute_ratio = compute_int8_s / compute_bf16_s
+
+    # Numerics: quantize-on-entry kernel vs its fake-quant oracle and
+    # the dense fp32 oracle (fp32 operands, so only quantization error).
+    a_f = jnp.asarray(a32, jnp.float32)
+    got = np.asarray(quant_matmul(a_f, qw, act_scale=a_scale,
+                                  interpret=True), np.float32)
+    oracle_fq = np.asarray(
+        jnp.dot(fake_quant_activation(a_f, a_scale), qw.dequantize(),
+                preferred_element_type=jnp.float32), np.float32)
+    oracle_f32 = a32 @ w32
+    scale_ref = np.abs(oracle_f32).max()
+    err_kernel = np.abs(got - oracle_fq).max() / scale_ref
+    err_quant = np.abs(got - oracle_f32).max() / scale_ref
+    assert err_kernel < 5e-3, err_kernel   # kernel == fake-quant oracle
+    assert err_quant < 1e-1, err_quant     # w8a8 band (docs/QUANT.md)
+
+    # Wall proxy matching the record's dtype story (the XLA view of the
+    # served math: fake-quant activations against the dequantized
+    # weight), as the quant section does for w8.
+    a_bf = jnp.asarray(a32, act_dt)
+    med = time_call(
+        jax.jit(lambda a, w: jnp.dot(
+            a, w, preferred_element_type=jnp.float32).astype(act_dt)),
+        fake_quant_activation(a_bf, a_scale), qw.dequantize(act_dt))
+    model_s = max(compute_int8_s, q_w8a8 / V5E.hbm_bandwidth)
+    rec = _record(m, n, k, act_dt, t8a, res_w8a8.source, med * 1e-6,
+                  model_s, "w8a8")
+    rec["dtype"] = dtype_str  # composite key: int8 weights, int8 acts
+    rec.update(
+        epilogue="dqab",
+        planned_q_bytes_w8a8=q_w8a8,
+        planned_q_bytes_int8w=q_w8,
+        planned_q_bytes_bf16=q_bf16,
+        planned_ratio=byte_ratio,
+        planned_ratio_vs_int8w=byte_ratio_vs_w8,
+        planned_q_saved_frac=1.0 - byte_ratio,
+        compute_s_int8=compute_int8_s,
+        compute_s_bf16=compute_bf16_s,
+        compute_ratio=compute_ratio,
+        max_rel_err_vs_fake_quant_oracle=float(err_kernel),
+        max_rel_err_vs_fp32_oracle=float(err_quant),
+        numerics_ok=True)
+    note = _delta_note(rec, base_idx, "planned_q_bytes_w8a8") \
+        if base_idx else "baseline=none"
+    emit(f"gemm_w8a8_{dtype_str}_m{m}", med,
+         f"tile={t8a.bm}x{t8a.bn}x{t8a.bk};"
+         f"plannedQ_w8a8={q_w8a8 / 1e6:.3f}MB;"
+         f"plannedQ_int8w={q_w8 / 1e6:.3f}MB;"
+         f"plannedQ_bf16={q_bf16 / 1e6:.3f}MB;ratio={byte_ratio:.3f};"
+         f"compute_ratio={compute_ratio:.2f};"
+         f"err_vs_fp32={err_quant:.2e};{note}")
+    if records is not None:
+        records.append(rec)
+
+
 def run_glu(records=None, shape=GLU_SHAPE, base_idx=()):
     """One-pass dual-branch SwiGLU program vs the two-pass formulation.
 
@@ -533,6 +668,28 @@ def check_baseline(records, base_idx) -> int:
                       f"baseline {base['planned_q_bytes_int8w']:.0f}")
                 failures += 1
             continue
+        if rec["kind"] == "w8a8":
+            # w8a8's claim is twofold: the byte ratio must clear the gate
+            # (both panels at 1 B/element) and the int8 compute rate must
+            # actually halve the roofline's compute term.
+            if rec["planned_ratio"] > W8A8_RATIO_GATE:
+                print(f"REGRESSION {rec['shape']}/{rec['dtype']}: planned "
+                      f"w8a8/bf16 ratio {rec['planned_ratio']:.3f} > "
+                      f"{W8A8_RATIO_GATE}")
+                failures += 1
+            if rec["compute_ratio"] > 0.55:
+                print(f"REGRESSION {rec['shape']}/{rec['dtype']}: int8/bf16 "
+                      f"compute ratio {rec['compute_ratio']:.3f} > 0.55 — "
+                      "the 2x MXU rate is the point of w8a8")
+                failures += 1
+            base = base_idx.get(("w8a8", tuple(rec["shape"]), rec["dtype"]))
+            if base is not None and rec["planned_q_bytes_w8a8"] \
+                    > base["planned_q_bytes_w8a8"]:
+                print(f"REGRESSION {rec['shape']}/{rec['dtype']}: planned "
+                      f"w8a8 bytes {rec['planned_q_bytes_w8a8']:.0f} > "
+                      f"baseline {base['planned_q_bytes_w8a8']:.0f}")
+                failures += 1
+            continue
         if rec["kind"] != "fused_epilogue":
             continue
         if rec["planned_q_bytes_fused"] >= rec["planned_q_bytes_unfused"]:
@@ -550,7 +707,8 @@ def check_baseline(records, base_idx) -> int:
             failures += 1
     if not failures:
         print("# baseline check OK (fused planned bytes <= baseline, "
-              "< unfused; quant ratio <= gate; glu ratio <= gate)")
+              "< unfused; quant ratio <= gate; w8a8 byte + compute "
+              "ratios <= gates; glu ratio <= gate)")
     return failures
 
 
@@ -587,6 +745,8 @@ def main(argv=None):
                     help="skip the fused-epilogue section")
     ap.add_argument("--skip-quant", action="store_true",
                     help="skip the int8-weight quantized section")
+    ap.add_argument("--skip-w8a8", action="store_true",
+                    help="skip the static-activation int8xint8 section")
     ap.add_argument("--skip-glu", action="store_true",
                     help="skip the one-pass SwiGLU program section")
     args = ap.parse_args(argv)
@@ -610,6 +770,8 @@ def main(argv=None):
         run_fused(records=records, base_idx=base_idx)
     if not args.skip_quant:
         run_quant(records=records, base_idx=base_idx)
+    if not args.skip_w8a8:
+        run_w8a8(records=records, base_idx=base_idx)
     if not args.skip_glu:
         run_glu(records=records, base_idx=base_idx)
     if args.tuned:

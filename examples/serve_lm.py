@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python examples/serve_lm.py
   PYTHONPATH=src python examples/serve_lm.py --quantize int8
+  PYTHONPATH=src python examples/serve_lm.py --quantize w8a8
 
 ``--quantize int8`` demonstrates the weight-quantized serve path:
 load (init stands in for a checkpoint restore) -> ``quantize_params``
@@ -10,6 +11,12 @@ per-channel scales) -> engine startup warmup (the kernel-config registry
 plans the ``int8w_*``/dequant-fused variants) -> generate.  The int8
 bytes are what streams from HBM; the dequant runs inside the GEMM drain
 (see docs/QUANT.md).
+
+``--quantize w8a8`` additionally quantizes activations: the engine runs
+a startup calibration pass over sample traffic, attaches static a-scales
+to every projection, and serves through the int8xint8 ("ab") kernel —
+the MXU's 2x int8 compute rate on top of the byte win
+(``int8w_int8a`` cache keys).
 """
 
 import argparse
@@ -26,16 +33,19 @@ from repro.serve.engine import Request, ServeEngine
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--quantize", choices=["none", "int8"], default="none",
+    ap.add_argument("--quantize", choices=["none", "int8", "w8a8"],
+                    default="none",
                     help="weight-quantize the serve params (int8 payload, "
-                         "fp32 per-channel scales, drain-fused dequant)")
+                         "fp32 per-channel scales, drain-fused dequant); "
+                         "w8a8 additionally calibrates static activation "
+                         "scales and serves int8xint8")
     args = ap.parse_args(argv)
 
     for arch in ("stablelm-1.6b", "mamba2-370m", "zamba2-7b"):
         cfg = get_reduced(arch)
         params = M.init_params(cfg, jax.random.PRNGKey(0))
         note = ""
-        if args.quantize == "int8":
+        if args.quantize != "none":
             dense_bytes = sum(int(np.asarray(v).nbytes)
                               for v in params.values())
             params = cm.quantize_params(params, qconfig=QuantConfig())
@@ -44,10 +54,14 @@ def main(argv=None):
                           for v in params.values())
             note = f" int8w params={q_bytes / 1e6:.2f}MB" \
                    f" ({q_bytes / dense_bytes:.2f}x of dense)"
-        eng = ServeEngine(params, cfg, batch_size=2, max_len=40)
-        if args.quantize == "int8":
-            n_q = sum(1 for k in eng.gemm_plan_sources if "int8w_" in k)
+        eng = ServeEngine(params, cfg, batch_size=2, max_len=40,
+                          quantize_activations=(args.quantize == "w8a8"))
+        if args.quantize != "none":
+            pat = "int8w_int8a" if args.quantize == "w8a8" else "int8w_"
+            n_q = sum(1 for k in eng.gemm_plan_sources if pat in k)
             note += f" quant-plans={n_q}"
+            if args.quantize == "w8a8":
+                note += f" calib-sites={len(eng.calibration_sites)}"
         rng = np.random.RandomState(0)
         for uid in range(2):
             eng.submit(Request(uid=uid,

@@ -106,6 +106,21 @@ def _apply_rms_xla(x: jax.Array, prologue: RmsPrologue) -> jax.Array:
                                prologue.gain)
 
 
+def _maybe_record_activation(quant, x: jax.Array,
+                             prologue: Optional[RmsPrologue]) -> None:
+    """Stream this GEMM's input activation to an active calibration
+    context (the w8a8 observe phase).  The recorded tensor is what the
+    serve path will actually quantize: the *normalized* activation when
+    an rms prologue precedes the projection."""
+    from repro.quant.calibrate import active_calibration
+
+    ctx = active_calibration()
+    if ctx is None or quant is None:
+        return
+    xo = _apply_rms_xla(x, prologue) if prologue is not None else x
+    ctx.record(quant.shape, xo)
+
+
 def ca_matmul(
     x: jax.Array,
     w=None,
@@ -133,10 +148,16 @@ def ca_matmul(
     trees arrive in) — routes through the scaled-GEMM path: int8 tiles
     stream from HBM and the dequant runs inside the drain as an epilogue
     stage, so only the streamed bytes change (~0.5x of bf16 for the
-    weight panel), never the number of HBM round trips.  The XLA mode
-    dequantizes up front instead (numerics oracle; no byte savings).
+    weight panel), never the number of HBM round trips.  A QTensor
+    additionally carrying a calibrated ``act_scale`` (see
+    ``repro.quant.attach_act_scales``) serves **w8a8**: the activation is
+    quantized on entry with the static scale and the kernel runs the
+    int8xint8 ("ab") path — the MXU's 2x int8 compute rate, not just the
+    byte win.  The XLA mode dequantizes the weight up front and applies
+    the same quantize-dequantize round trip to the activation (numerics
+    oracle of the served math; no byte savings).
     """
-    from repro.quant.scales import QTensor  # leaf module, cycle-free
+    from repro.quant.scales import QTensor, fake_quant_activation
 
     if quant is None and isinstance(w, QTensor):
         quant = w
@@ -155,12 +176,20 @@ def ca_matmul(
     for d in lead:
         m *= d
 
+    _maybe_record_activation(quant, x, prologue)
+    act_scale = quant.act_scale if quant is not None else None
+
     if quant is not None and (mode == "xla" or m == 0
                               or quant.fmt != "int8"):
         # Oracle path: dequantize (weight-sized fp copy — fine on the XLA
         # fallback, defeats the purpose on a kernel path) then plain GEMM.
+        # A static-activation weight applies the identical
+        # quantize-dequantize round trip to x, so this stays the exact
+        # oracle of the w8a8 kernel's math.
         if prologue is not None:
             x = _apply_rms_xla(x, prologue)
+        if act_scale is not None and quant.fmt == "int8":
+            x = fake_quant_activation(x, act_scale, quant.act_block)
         z = jnp.dot(x, quant.dequantize(x.dtype),
                     preferred_element_type=jnp.float32)
         if epilogue is not None:
@@ -168,12 +197,19 @@ def ca_matmul(
         return z.astype(out_dtype)
 
     if quant is not None:
+        if act_scale is not None and prologue is not None:
+            # The norm cannot ride an int8 stream: apply its reference
+            # chain up front, then quantize the normalized activation.
+            x = _apply_rms_xla(x, prologue)
+            prologue = None
         x2 = x.reshape(m, k)
         epi2 = _flatten_epilogue(epilogue, lead, m, n)
         y2 = kops.quant_matmul(x2, quant, epi2,
                                interpret=(mode == "interpret"),
                                out_dtype=out_dtype, hw=hw,
-                               prologue=prologue)
+                               prologue=prologue,
+                               act_scale=act_scale,
+                               act_block=quant.act_block)
         return y2.reshape(*lead, n).astype(out_dtype)
 
     if mode == "xla" or m == 0:
@@ -220,13 +256,17 @@ def ca_glu_matmul(
     second x stream.  ``prologue`` folds the pre-FFN rms_norm into the
     same fetch.
 
-    Quantized weights (both :class:`repro.quant.QTensor`, per-channel
-    scales) stream int8 with a per-branch drain-fused dequant; per-tile
-    (blocked) scales fall back to two single-branch quantized passes.
-    The XLA mode applies the identical fp32 reference chain (numerics
-    oracle).
+    Quantized weights (both :class:`repro.quant.QTensor`) stream int8
+    with a per-branch drain-fused dequant — per-channel scales drain,
+    per-tile (blocked) scales rescale every branch's k-step partial
+    product in the one dual-branch pass.  Weights carrying a calibrated
+    ``act_scale`` serve w8a8: the shared x panel is quantized on entry
+    (after the norm, which cannot ride an int8 stream) and both branches
+    run the int8xint8 ("ab") path.  The XLA mode applies the identical
+    fp32 reference chain, activation quantize-dequantize included
+    (numerics oracle).
     """
-    from repro.quant.scales import QTensor  # leaf module, cycle-free
+    from repro.quant.scales import QTensor, fake_quant_activation
 
     mode = mode or get_gemm_mode()
     quantized = isinstance(w_gate, QTensor)
@@ -242,21 +282,18 @@ def ca_glu_matmul(
     for d in lead:
         m *= d
 
+    act_scale = act_block = None
+    if quantized:
+        _maybe_record_activation(w_gate, x, prologue)
+        act_scale, act_block = w_gate.act_scale, w_gate.act_block
+
     kernel_ok = mode != "xla" and m > 0 and \
         (not quantized or (w_gate.fmt == "int8" and w_up.fmt == "int8"))
-    if quantized and kernel_ok and (w_gate.block or w_up.block):
-        # Per-tile scales pin the kernel k-tile per branch — not
-        # expressible in one dual-branch program; two fused quantized
-        # passes (up, then gate with the mul epilogue) keep correctness.
-        up = ca_matmul(x, w_up, out_dtype=out_dtype, hw=hw, mode=mode,
-                       prologue=prologue)
-        return ca_matmul(x, w_gate, out_dtype=out_dtype, hw=hw, mode=mode,
-                         epilogue=Epilogue(activation=activation, mul=up),
-                         prologue=prologue)
-
     if not kernel_ok:
         if prologue is not None:
             x = _apply_rms_xla(x, prologue)
+        if quantized and act_scale is not None and w_gate.fmt == "int8":
+            x = fake_quant_activation(x, act_scale, act_block)
         wg = w_gate.dequantize(x.dtype) if quantized else w_gate.astype(x.dtype)
         wu = w_up.dequantize(x.dtype) if quantized else w_up.astype(x.dtype)
         g = jnp.dot(x, wg, preferred_element_type=jnp.float32)
@@ -265,12 +302,17 @@ def ca_glu_matmul(
 
         return (act_fn(activation)(g) * u).astype(out_dtype)
 
+    if quantized and act_scale is not None and prologue is not None:
+        x = _apply_rms_xla(x, prologue)
+        prologue = None
     x2 = x.reshape(m, k)
     interpret = mode == "interpret"
     if quantized:
         y2 = kops.quant_glu_matmul(x2, w_gate, w_up, activation=activation,
                                    prologue=prologue, interpret=interpret,
-                                   out_dtype=out_dtype, hw=hw)
+                                   out_dtype=out_dtype, hw=hw,
+                                   act_scale=act_scale,
+                                   act_block=act_block or 0)
     else:
         from repro.kernels.epilogue import IDENTITY
 

@@ -233,7 +233,8 @@ def tile_vmem_bytes(bm: int, bn: int, bk: int, itemsize_in: int,
                     n_b: int = 1,
                     n_out: int = 1,
                     prologue_mk_ops: int = 0,
-                    prologue_kn_ops: int = 0) -> int:
+                    prologue_kn_ops: int = 0,
+                    itemsize_a: Optional[int] = None) -> int:
     """VMEM bytes claimed by one kernel instance.
 
     A and B stream blocks are double-buffered (Pallas pipeline = the
@@ -251,8 +252,13 @@ def tile_vmem_bytes(bm: int, bn: int, bk: int, itemsize_in: int,
     mixed-precision GEMMs (int8 weights under bf16 activations): B's
     double buffer shrinks with its dtype, which widens the feasible
     (bm, bn) region — quantization buys intensity, not just bandwidth.
-    Dequant scale vectors (O(bm + bn) fp32) are below the budget's
-    resolution and are not charged.
+    ``itemsize_a`` (default: ``itemsize_in``) does the same for the A
+    stream — the w8a8 path streams int8 activations, halving/quartering
+    the A double buffer too (the accumulator stays 4 B/element: int32
+    for w8a8 is as wide as fp32).  ``itemsize_in`` still sizes the
+    epilogue residents and output blocks (those stay in the serve
+    dtype).  Dequant scale vectors (O(bm + bn) fp32) are below the
+    budget's resolution and are not charged.
 
     Multi-branch programs (``n_b`` B operands) double-buffer each B
     stream and park one accumulator per branch; ``n_out`` drained outputs
@@ -266,7 +272,8 @@ def tile_vmem_bytes(bm: int, bn: int, bk: int, itemsize_in: int,
     """
     itemsize_out = itemsize_out if itemsize_out is not None else itemsize_in
     itemsize_b = itemsize_b if itemsize_b is not None else itemsize_in
-    stream = 2 * (bm * bk * (itemsize_in + 4 * prologue_mk_ops)
+    itemsize_a = itemsize_a if itemsize_a is not None else itemsize_in
+    stream = 2 * (bm * bk * (itemsize_a + 4 * prologue_mk_ops)
                   + bk * bn * (n_b * itemsize_b + 4 * prologue_kn_ops))
     acc = n_b * bm * bn * acc_bytes
     out = n_out * bm * bn * itemsize_out  # output blocks written at drain
@@ -322,6 +329,7 @@ def solve_tile_config(
     double_buffer_out: bool = False,
     bk_max: int = 2048,
     dtype_b=None,
+    dtype_a=None,
 ) -> TileConfig:
     """Solve the paper's optimization problem (Eqs. 5-9) for one TPU chip.
 
@@ -334,10 +342,15 @@ def solve_tile_config(
 
     ``dtype_b`` (default: ``dtype_in``) is the B-operand/weight dtype for
     mixed-precision GEMMs — its itemsize shrinks B's double buffer in the
-    capacity constraint (see :func:`tile_vmem_bytes`).
+    capacity constraint (see :func:`tile_vmem_bytes`).  ``dtype_a``
+    (default: ``dtype_in``) is the *streamed* A dtype — the w8a8 path's
+    int8 activations shrink the A double buffer the same way, while the
+    int32 accumulator stays at ``dtype_acc``'s 4 B width.
     """
     itemsize_in = jnp.dtype(dtype_in).itemsize
     itemsize_b = jnp.dtype(dtype_b).itemsize if dtype_b is not None \
+        else itemsize_in
+    itemsize_a = jnp.dtype(dtype_a).itemsize if dtype_a is not None \
         else itemsize_in
     acc_bytes = jnp.dtype(dtype_acc).itemsize
     budget = int(hw.vmem_bytes * vmem_fraction)
@@ -360,7 +373,7 @@ def solve_tile_config(
             # Largest bn satisfying the capacity constraint, then quantize
             # down (Eq. 9: floor to a whole number of hardware steps).
             # stream + (acc+out) <= budget
-            fixed = 2 * bm * bk * itemsize_in
+            fixed = 2 * bm * bk * itemsize_a
             per_bn = 2 * bk * itemsize_b + bm * (
                 acc_bytes * (2 if double_buffer_out else 1) + itemsize_in
             )
@@ -370,7 +383,8 @@ def solve_tile_config(
                 continue
             vb = tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes,
                                  double_buffer_out=double_buffer_out,
-                                 itemsize_b=itemsize_b)
+                                 itemsize_b=itemsize_b,
+                                 itemsize_a=itemsize_a)
             if vb > budget:
                 continue
             inten = effective_intensity(bm, bn, bk, itemsize_in)
@@ -394,7 +408,7 @@ def solve_tile_config(
         # always collapsed to qk — dead rounding).
         bm, bn, bk = qm, qn, bk_cap
         vb = tile_vmem_bytes(bm, bn, bk, itemsize_in, acc_bytes,
-                             itemsize_b=itemsize_b)
+                             itemsize_b=itemsize_b, itemsize_a=itemsize_a)
         best = TileConfig(
             bm=bm, bn=bn, bk=bk,
             vmem_bytes=vb,

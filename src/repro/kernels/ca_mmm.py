@@ -85,7 +85,7 @@ def layout_tag(transpose_a: bool, transpose_b: bool) -> str:
 def _default_tiles(m: int, n: int, k: int, dtype, semiring: str,
                    bm: Optional[int], bn: Optional[int], bk: Optional[int],
                    program_tag: str = "none", layout: str = "nn",
-                   dtype_b=None):
+                   dtype_b=None, dtype_a=None):
     """None-means-solver: unspecified tile dims come from the registry.
 
     Callers can no longer silently bypass the I/O model with a stale
@@ -99,7 +99,7 @@ def _default_tiles(m: int, n: int, k: int, dtype, semiring: str,
 
         tile = get_registry().resolve(m, n, k, dtype=dtype, semiring=semiring,
                                       epilogue=program_tag, layout=layout,
-                                      dtype_b=dtype_b)
+                                      dtype_b=dtype_b, dtype_a=dtype_a)
         bm = bm if bm is not None else tile.bm
         bn = bn if bn is not None else tile.bn
         bk = bk if bk is not None else tile.bk
@@ -112,7 +112,8 @@ def _default_tiles(m: int, n: int, k: int, dtype, semiring: str,
 
 def _program_kernel(*refs, spec: GemmProgramSpec, semiring: str,
                     kdim: int, bk: int, transpose_a: bool, transpose_b: bool,
-                    save_preact: bool, sb_per_tile: bool):
+                    save_preact: bool, sb_per_tile: bool,
+                    sa_per_tile: bool = False):
     """One grid step of a GemmProgram: the prologue-decorated A tile is
     contracted against each branch's B tile into that branch's VMEM
     accumulator; the per-branch drain chains + combiner run fused at the
@@ -120,9 +121,12 @@ def _program_kernel(*refs, spec: GemmProgramSpec, semiring: str,
 
     Quantized operands (repro.quant) ride the same schedule: int8 tiles
     stream from HBM, the cast to the compute dtype happens in VMEM, and
-    the dequant rescale is either a drain stage (per-channel scales) or a
-    per-k-step multiply of the partial product (per-tile scales,
-    ``sb_per_tile``) — in both cases zero extra slow-memory traffic."""
+    the dequant rescale is either a drain stage (per-channel weight /
+    per-row activation scales) or a per-k-step multiply of the partial
+    product (per-tile scales, ``sb_per_tile``/``sa_per_tile`` — applied
+    on *every* dequant branch: different k-blocks carry different scales,
+    so a drain-time rescale would be wrong for any branch) — in all
+    cases zero extra slow-memory traffic."""
     nb = spec.n_b
     pro = spec.prologue
     pos = 0
@@ -211,6 +215,7 @@ def _program_kernel(*refs, spec: GemmProgramSpec, semiring: str,
         dims = (((0,) if transpose_a else (1,),
                  (1,) if transpose_b else (0,)), ((), ()))
         for i, acc_ref in enumerate(acc_refs):
+            bspec = spec.branches[i]
             b = b_refs[i][...]
             if pro.kind == "dact" and pro.operand == "b":
                 b = apply_dact_reference(b, pre_ref[...], pro.activation)
@@ -223,14 +228,25 @@ def _program_kernel(*refs, spec: GemmProgramSpec, semiring: str,
                 # its native float pairing.
                 b = b.astype(a.dtype)
             b = mask_k(b, 1 if transpose_b else 0, 0)
+            # Both operands integer under a float accumulator (per-tile
+            # w8a8): contract exactly in int32, rescale into fp32 below —
+            # the MXU's int8 pairing, not a float proxy.
+            both_int = (jnp.issubdtype(a.dtype, jnp.integer)
+                        and jnp.issubdtype(b.dtype, jnp.integer))
+            dot_t = jnp.int32 if (acc_t != jnp.int32 and both_int) else acc_t
             part = jax.lax.dot_general(a, b, dims,
-                                       preferred_element_type=acc_t)
-            if sb_per_tile and i == 0:
-                # Per-tile weight scales: this k-block's scale row rescales
-                # the partial product before accumulation (different blocks,
-                # different scales — a drain-time rescale would be wrong).
-                part = part * branch_refs[0]["scale_b"][...].astype(acc_t)
-            acc_ref[...] += part
+                                       preferred_element_type=dot_t)
+            # Per-tile scales: this k-block's scale row rescales the
+            # partial product before accumulation — for *every* dequant
+            # branch (different blocks, different scales; a drain-time
+            # rescale would silently mis-scale any branch skipped here).
+            if sb_per_tile and bspec.dequant != "none":
+                part = part.astype(acc_t) \
+                    * branch_refs[i]["scale_b"][...].astype(acc_t)
+            if sa_per_tile and bspec.dequant == "ab":
+                part = part.astype(acc_t) \
+                    * branch_refs[i]["scale_a"][...].astype(acc_t)
+            acc_ref[...] += part.astype(acc_t)
 
     @pl.when(k == nk - 1)
     def _drain():
@@ -252,10 +268,12 @@ def _program_kernel(*refs, spec: GemmProgramSpec, semiring: str,
                 continue
             zf = z.astype(jnp.float32)
             # Dequant first: later stages (bias/act/gate/residual) want
-            # real units.  Per-tile "b" scales already applied per k-step.
-            if bspec.dequant != "none" and not (sb_per_tile and i == 0):
+            # real units.  Per-tile scales were already applied per
+            # k-step (on every dequant branch) — only per-channel /
+            # per-row scales drain here.
+            if bspec.dequant != "none" and not sb_per_tile:
                 zf = zf * ops["scale_b"][...].astype(jnp.float32)
-            if bspec.dequant == "ab":
+            if bspec.dequant == "ab" and not sa_per_tile:
                 zf = zf * ops["scale_a"][...].astype(jnp.float32)
             if bspec.has_bias:
                 zf = zf + ops["bias"][...].astype(jnp.float32)
@@ -295,6 +313,7 @@ def ca_gemm_program(
     preact: Optional[jax.Array] = None,
     branch_operands: Optional[Sequence[Dict[str, jax.Array]]] = None,
     scale_b_block: int = 0,
+    scale_a_block: int = 0,
 ):
     """Execute a :class:`GemmProgramSpec` with the paper's I/O-minimal
     schedule, for arbitrary (non-tile-multiple) shapes.
@@ -316,11 +335,15 @@ def ca_gemm_program(
     rescales inside the kernel: ``scale_b`` is the weight's per-channel
     column scale ((n,) fp32) or — with ``scale_b_block=g`` — per-tile
     scales of shape (ceil(k/g), n), in which case the kernel's k-tile is
-    pinned to ``g`` so each streamed block sees exactly one scale row;
-    ``scale_a`` ((m,) fp32) is the activation's per-row scale for the
-    full int8xint8 path ("ab").  Dequant adds no output traffic: it
-    rides the drain (or the VMEM partial product), never an HBM round
-    trip.
+    pinned to ``g`` so each streamed block sees exactly one scale row
+    (applied to every dequant branch's k-step partial product —
+    multi-branch programs included).  ``scale_a`` is the activation's
+    scale for the full int8xint8 path ("ab"): per-row ((m,) fp32,
+    applied at the drain) or — with ``scale_a_block=g`` — per-k-tile
+    ((ceil(k/g),) fp32, applied per k-step like per-tile weight scales;
+    when both operands are per-tile the blocks must agree).  Dequant
+    adds no output traffic: it rides the drain (or the VMEM partial
+    product), never an HBM round trip.
     """
     bs = tuple(bs)
     nb = len(bs)
@@ -364,6 +387,7 @@ def ca_gemm_program(
 
     deqs = [b.dequant for b in spec.branches]
     per_tile = scale_b_block > 0
+    per_tile_a = scale_a_block > 0
     for i, bspec in enumerate(spec.branches):
         ops = branch_operands[i]
         if bspec.dequant != "none":
@@ -373,28 +397,45 @@ def ca_gemm_program(
             assert ops.get("scale_b") is not None, \
                 "dequant needs the weight scales"
             if bspec.dequant == "ab":
-                assert nb == 1, "int8 activations ('ab') are single-branch"
                 sa = ops.get("scale_a")
-                assert sa is not None and sa.size == m, (sa, m)
-                assert not per_tile, "per-tile scales are weight-only ('b')"
+                assert sa is not None, "'ab' dequant needs activation scales"
+                if per_tile_a:
+                    assert sa.size == _ceil(kdim, scale_a_block), \
+                        (sa.shape, kdim, scale_a_block)
+                else:
+                    assert sa.size == m, (sa.shape, m)
+            else:
+                assert not per_tile_a, \
+                    "per-tile activation scales need an 'ab' dequant branch"
         else:
             assert ops.get("scale_a") is None and ops.get("scale_b") is None
-    if per_tile:
-        assert nb == 1 and deqs[0] != "none"
+            assert not (per_tile or per_tile_a), \
+                "per-tile scales need a dequant stage on every branch"
+    if per_tile or per_tile_a:
         # Per-tile dequant rescales each k-step's partial product, so the
-        # kernel k-tile must equal the quantization block.
-        bk = scale_b_block
+        # kernel k-tile must equal the quantization block (both operands'
+        # blocks, when both are per-tile).
+        if per_tile and per_tile_a:
+            assert scale_b_block == scale_a_block, \
+                (scale_b_block, scale_a_block)
+        bk = scale_b_block or scale_a_block
 
     tag = spec.tag()
     layout = layout_tag(transpose_a, transpose_b)
-    dtype_b = bs[0].dtype if (any(d != "none" for d in deqs)
-                              and bs[0].dtype != a.dtype) else None
+    any_deq = any(d != "none" for d in deqs)
+    a_is_int = jnp.issubdtype(a.dtype, jnp.integer)
+    dtype_b = bs[0].dtype if (any_deq and bs[0].dtype != a.dtype) else None
+    dtype_a = None
+    if any_deq and a_is_int:
+        # w8a8: both operands stream int8 — plan/cache under the
+        # composite int8w_int8a key, not the plain-int8 one.
+        dtype_a, dtype_b = a.dtype, bs[0].dtype
     bm, bn, bk = _default_tiles(m, n, kdim, a.dtype, semiring, bm, bn, bk,
                                 program_tag=tag, layout=layout,
-                                dtype_b=dtype_b)
-    a_is_int = jnp.issubdtype(a.dtype, jnp.integer)
-    any_deq = any(d != "none" for d in deqs)
-    if any_deq and (per_tile or not a_is_int):
+                                dtype_b=dtype_b, dtype_a=dtype_a)
+    if per_tile or per_tile_a:
+        bk = scale_b_block or scale_a_block  # registry must not unpin it
+    if any_deq and (per_tile or per_tile_a or not a_is_int):
         # Weight-only dequant (fp activations) and per-tile rescale both
         # accumulate in fp32 (the partial product is float either way).
         acc_t = jnp.dtype(jnp.float32)
@@ -412,9 +453,12 @@ def ca_gemm_program(
 
     grid = (_ceil(m, bm), _ceil(n, bn), _ceil(kdim, bk))
     if per_tile:
-        sb = branch_operands[0]["scale_b"]
-        assert sb.shape == (_ceil(kdim, bk), n), \
-            (sb.shape, _ceil(kdim, bk), n)
+        for i, bspec in enumerate(spec.branches):
+            if bspec.dequant == "none":
+                continue
+            sb = branch_operands[i]["scale_b"]
+            assert sb.shape == (_ceil(kdim, bk), n), \
+                (i, sb.shape, _ceil(kdim, bk), n)
 
     if transpose_a:
         a_spec = pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i))
@@ -445,9 +489,19 @@ def ca_gemm_program(
         if bspec.is_identity:
             continue
         if bspec.dequant == "ab":
-            # Per-row activation scales: an (bm, 1) column rides each i.
-            operands.append(ops["scale_a"].reshape(m, 1).astype(jnp.float32))
-            in_specs.append(pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)))
+            if per_tile_a:
+                # One scalar a-scale per k-step — the (1, 1) block's
+                # index follows kk, like the per-tile weight scale rows.
+                operands.append(ops["scale_a"].reshape(-1, 1)
+                                .astype(jnp.float32))
+                in_specs.append(
+                    pl.BlockSpec((1, 1), lambda i, j, kk: (kk, 0)))
+            else:
+                # Per-row activation scales: a (bm, 1) column rides each i.
+                operands.append(
+                    ops["scale_a"].reshape(m, 1).astype(jnp.float32))
+                in_specs.append(
+                    pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)))
         if bspec.dequant != "none":
             if per_tile:
                 # One (1, bn) scale row per k-step — index follows kk.
@@ -489,7 +543,8 @@ def ca_gemm_program(
     kernel = functools.partial(
         _program_kernel, spec=spec, semiring=semiring, kdim=kdim, bk=bk,
         transpose_a=transpose_a, transpose_b=transpose_b,
-        save_preact=save_preact, sb_per_tile=per_tile)
+        save_preact=save_preact, sb_per_tile=per_tile,
+        sa_per_tile=per_tile_a)
     out = pl.pallas_call(
         kernel,
         grid=grid,
@@ -527,6 +582,7 @@ def ca_mmm(
     scale_a: Optional[jax.Array] = None,
     scale_b: Optional[jax.Array] = None,
     scale_b_block: int = 0,
+    scale_a_block: int = 0,
     prologue: Optional[PrologueSpec] = None,
     row_scale: Optional[jax.Array] = None,
     gain: Optional[jax.Array] = None,
@@ -552,7 +608,8 @@ def ca_mmm(
         semiring=semiring, interpret=interpret, transpose_a=transpose_a,
         transpose_b=transpose_b, save_preact=save_preact,
         row_scale=row_scale, gain=gain, preact=preact,
-        branch_operands=[ops], scale_b_block=scale_b_block)
+        branch_operands=[ops], scale_b_block=scale_b_block,
+        scale_a_block=scale_a_block)
     return out
 
 

@@ -41,17 +41,19 @@ import repro.kernels.ca_mmm as kern
 def _resolve_tile(m: int, n: int, k: int, dtype,
                   semiring: str = "plus_times",
                   epilogue: str = "none", layout: str = "nn",
-                  dtype_b=None, hw=None) -> TileConfig:
+                  dtype_b=None, dtype_a=None, hw=None) -> TileConfig:
     """Default tile plan: the kernel-config registry (cache > tune > model).
 
     ``epilogue`` is a full *program tag* (prologue/combiner grammar
     included) — every program variant plans and caches under its own key.
+    ``dtype_b``/``dtype_a`` key quantized-weight / quantized-activation
+    GEMMs under their composite dtype (``int8w_bf16a``, ``int8w_int8a``).
     """
     from repro.tuning import get_registry  # lazy: tuning times this module
 
     return get_registry().resolve(m, n, k, dtype=dtype, semiring=semiring,
                                   epilogue=epilogue, layout=layout,
-                                  dtype_b=dtype_b, hw=hw)
+                                  dtype_b=dtype_b, dtype_a=dtype_a, hw=hw)
 
 
 def ca_mmm_any(
@@ -370,44 +372,76 @@ def quant_glu_matmul(
     interpret: bool = False,
     out_dtype=None,
     hw=None,
+    act_scale: Optional[jax.Array] = None,
+    act_block: int = 0,
 ) -> jax.Array:
     """Quantized dual-branch GLU: both weights stream int8, each branch's
-    dequant rides its own drain chain (per-channel scales).
+    dequant rides its own drain chain (per-channel scales) or k-step
+    rescale (per-tile scales — the kernel applies them on *every*
+    branch, so blocked weights run in one dual-branch pass too; both
+    weights must share one block size).
 
-    Serve-path only (no VJP), like :func:`quant_matmul`.  Per-tile
-    (blocked) scales pin the kernel k-tile per branch and are not
-    supported in the dual-branch program — callers fall back to two
-    single-branch quantized GEMMs for those.
+    ``act_scale`` (a calibrated static scale: per-tensor scalar or
+    per-k-tile ``(ceil(k/act_block),)``) additionally quantizes the
+    shared x panel on entry — the full w8a8 path: int8 x streamed once
+    for both branches, int8xint8 contraction, per-branch ``"ab"``
+    dequant.  The rms prologue cannot decorate an int8 stream, so w8a8
+    callers normalize before quantizing (``prologue`` must be None).
+
+    Serve-path only (no VJP), like :func:`quant_matmul`.
     """
-    from repro.quant.scales import QTensor  # leaf module, cycle-free
+    from repro.quant.scales import QTensor, quantize_activation
 
     for qw in (qwg, qwu):
         assert isinstance(qw, QTensor) and qw.fmt == "int8", qw
         assert qw.ndim == 2 and qw.axis in (-2, 0), (qw.shape, qw.axis)
-        assert not qw.block, \
-            "per-tile scales are single-branch; use two quant_matmul passes"
     assert qwg.shape == qwu.shape, (qwg.shape, qwu.shape)
+    assert qwg.block == qwu.block, \
+        "dual-branch per-tile scales pin one k-tile: blocks must match"
     m, k = x.shape
     k2, n = qwg.shape
     assert k == k2, (x.shape, qwg.shape)
 
     pro_spec = PrologueSpec(kind="rms") if prologue is not None \
         else NO_PROLOGUE
-    branch = dataclasses.replace(IDENTITY, dequant="b")
+    deq = "b"
+    dtype_a = None
+    # Logical serve dtype for the tile solve (see quant_matmul): the
+    # int8 payload only shrinks the stream buffers, via dtype_a.
+    serve_dtype = x.dtype
+    if act_scale is not None:
+        assert prologue is None, \
+            "apply the norm before static activation quantization " \
+            "(an rms prologue cannot decorate an int8 stream)"
+        if qwg.block and act_block:
+            assert act_block == qwg.block, (act_block, qwg.block)
+        deq = "ab"
+        dtype_a = jnp.int8
+        x = quantize_activation(x, act_scale, block=act_block)
+    branch = dataclasses.replace(IDENTITY, dequant=deq)
     spec = GemmProgramSpec(prologue=pro_spec, branches=(branch, branch),
                            combine="glu", combine_activation=activation)
     if tile is None:
-        tile = _resolve_tile(m, n, k, x.dtype, epilogue=spec.tag(),
-                             dtype_b=jnp.int8, hw=hw)
+        tile = _resolve_tile(m, n, k, serve_dtype, epilogue=spec.tag(),
+                             dtype_b=jnp.int8, dtype_a=dtype_a, hw=hw)
     row_scale = rms_row_scale(x, prologue.eps) if prologue is not None \
         else None
+
+    def _branch_ops(qw):
+        ops = {"scale_b": qw.scale if qw.block else qw.scale.reshape(n)}
+        if act_scale is not None:
+            sa = jnp.asarray(act_scale, jnp.float32)
+            ops["scale_a"] = sa if act_block \
+                else jnp.broadcast_to(sa.reshape(()), (m,))
+        return ops
+
     return kern.ca_gemm_program(
         x, (qwg.data, qwu.data), spec=spec,
         bm=tile.bm, bn=tile.bn, bk=tile.bk, out_dtype=out_dtype,
         interpret=interpret, row_scale=row_scale,
         gain=prologue.gain if prologue is not None else None,
-        branch_operands=[{"scale_b": qwg.scale.reshape(n)},
-                         {"scale_b": qwu.scale.reshape(n)}])
+        branch_operands=[_branch_ops(qwg), _branch_ops(qwu)],
+        scale_b_block=qwg.block, scale_a_block=act_block)
 
 
 # ---------------------------------------------------------------------------
@@ -421,6 +455,8 @@ def quant_matmul(
     tile: Optional[TileConfig] = None,
     *,
     scale_a: Optional[jax.Array] = None,
+    act_scale: Optional[jax.Array] = None,
+    act_block: int = 0,
     interpret: bool = False,
     out_dtype=None,
     hw=None,
@@ -433,15 +469,25 @@ def quant_matmul(
     bytes of bf16, a quarter of fp32 — and the dequant rescale runs on
     the VMEM accumulator inside the drain (per-channel) or on the partial
     product (per-tile): streamed bytes change, HBM round trips don't.
-    With ``scale_a`` the activations are int8 too (full int8xint8, int32
-    accumulation, ``acc * s_a ⊗ s_b`` at the drain).  ``prologue`` folds
-    rms_norm into the activation fetch, composing orthogonally with the
-    dequant stage.
+
+    Two ways onto the full int8xint8 ("ab") path:
+
+    * ``scale_a`` — ``a`` is *already* int8 with per-row (m,) scales
+      (dynamic per-token quantization done by the caller);
+    * ``act_scale`` (+ ``act_block``) — ``a`` is float and is quantized
+      **on entry** with a calibrated *static* scale (per-tensor scalar,
+      or per-k-tile ``(ceil(k/g),)`` with ``act_block=g``) — the
+      serve-path w8a8 mode: the quantize is one elementwise op XLA fuses
+      into the producer, the kernel streams int8 and accumulates int32.
+
+    ``prologue`` folds rms_norm into the activation fetch and composes
+    with fp activations only — an int8 stream cannot be normalized
+    in-flight, so w8a8 callers normalize before quantizing.
 
     Serve-path only (no VJP): quantized weights are frozen by
     construction; training differentiates the dense master weights.
     """
-    from repro.quant.scales import QTensor  # leaf module, cycle-free
+    from repro.quant.scales import QTensor, quantize_activation
 
     assert isinstance(qw, QTensor), type(qw)
     assert qw.fmt == "int8", \
@@ -453,15 +499,34 @@ def quant_matmul(
     # and mis-scale silently.
     assert qw.axis in (-2, 0), \
         f"weight quantized along axis {qw.axis}, expected the k axis (-2)"
-    assert not (prologue is not None and scale_a is not None), \
-        "rms prologue composes with fp activations, not the int8 'ab' path"
+    assert not (scale_a is not None and act_scale is not None), \
+        "pass dynamic per-row scale_a or a static act_scale, not both"
+    assert not (prologue is not None
+                and (scale_a is not None or act_scale is not None)), \
+        "rms prologue composes with fp activations, not the int8 'ab' " \
+        "path — normalize before quantizing"
     m, k = a.shape
     k2, n = qw.shape
     assert k == k2, (a.shape, qw.shape)
 
+    # The *logical* serve dtype sizes the epilogue residents and output
+    # blocks in the tile solve (and matches the warmup-time registry
+    # key); the int8 payload only shrinks the stream buffers (dtype_a).
+    serve_dtype = a.dtype
+    scale_a_block = 0
+    if act_scale is not None:
+        if qw.block and act_block:
+            assert act_block == qw.block, (act_block, qw.block)
+        a = quantize_activation(a, act_scale, block=act_block)
+        sa = jnp.asarray(act_scale, jnp.float32)
+        if act_block:
+            scale_a, scale_a_block = sa, act_block
+        else:
+            scale_a = jnp.broadcast_to(sa.reshape(()), (m,))
+
     base = epilogue.spec() if epilogue is not None else IDENTITY
-    extras = dict(epilogue.operands()) if epilogue is not None else {}
     deq = "ab" if scale_a is not None else "b"
+    extras = dict(epilogue.operands()) if epilogue is not None else {}
     spec = dataclasses.replace(base, dequant=deq)
     pro_spec = PrologueSpec(kind="rms") if prologue is not None \
         else NO_PROLOGUE
@@ -472,8 +537,9 @@ def quant_matmul(
         scale_b = qw.scale.reshape(n)  # (1, n) keepdims -> flat channels
 
     if tile is None:
-        tile = _resolve_tile(m, n, k, a.dtype, epilogue=tag,
-                             dtype_b=jnp.int8, hw=hw)
+        dtype_a = jnp.int8 if deq == "ab" else None
+        tile = _resolve_tile(m, n, k, serve_dtype, epilogue=tag,
+                             dtype_b=jnp.int8, dtype_a=dtype_a, hw=hw)
     row_scale = rms_row_scale(a, prologue.eps) if prologue is not None \
         else None
     return kern.ca_mmm(
@@ -482,6 +548,7 @@ def quant_matmul(
         bias=extras.get("bias"), mul=extras.get("mul"),
         residual=extras.get("residual"),
         scale_a=scale_a, scale_b=scale_b, scale_b_block=qw.block,
+        scale_a_block=scale_a_block,
         prologue=pro_spec, row_scale=row_scale,
         gain=prologue.gain if prologue is not None else None)
 

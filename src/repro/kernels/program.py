@@ -140,7 +140,7 @@ class GemmProgramSpec:
         if len(self.branches) == 2:
             for b in self.branches:
                 assert (b.activation == "none" and not b.has_mul
-                        and not b.has_residual and b.dequant in ("none", "b")), \
+                        and not b.has_residual), \
                     f"multi-branch epilogues are dequant/bias only, got {b.tag()}"
             # One preact stream cannot decorate two distinct B operands
             # — a dual-branch dact would multiply both weight-gradient

@@ -20,12 +20,19 @@ quantization changes only streamed bytes — never adds an HBM round trip.
 """
 
 from repro.quant.scales import (QTensor, absmax_scale, dequantize,
-                                dtype_short, quant_dtype_str, quantize)
-from repro.quant.calibrate import (Calibrator, QuantConfig,
+                                dtype_short, fake_quant_activation,
+                                quant_dtype_str, quantize,
+                                quantize_activation)
+from repro.quant.calibrate import (ActivationCalibration, Calibrator,
+                                   QuantConfig, activation_site,
+                                   active_calibration, attach_act_scales,
                                    quantize_tensor)
 
 __all__ = [
     "QTensor", "absmax_scale", "dequantize", "quantize",
     "dtype_short", "quant_dtype_str",
+    "quantize_activation", "fake_quant_activation",
     "Calibrator", "QuantConfig", "quantize_tensor",
+    "ActivationCalibration", "activation_site", "active_calibration",
+    "attach_act_scales",
 ]

@@ -12,19 +12,49 @@ Two producers:
 Both funnel through one :class:`QuantConfig`, which is also what
 ``models.common.quantize_params`` / the checkpoint loader accept — so a
 serve deployment's whole quantization policy is a single dataclass.
+
+The **static-activation** (w8a8) flow:
+
+1. ``QuantConfig(act_fmt="int8")`` turns the activation policy on
+   (``act_block`` selects per-tensor vs per-k-tile a-scales).
+2. An :class:`ActivationCalibration` context records every
+   ``ca_matmul`` call that consumes a quantized weight: the call site
+   streams its input activation to a per-site :class:`Calibrator` via
+   ``io_callback`` (so observation works inside ``lax.scan``-stacked
+   layers too).
+3. :func:`attach_act_scales` writes each site's static scale onto the
+   matching :class:`~repro.quant.scales.QTensor` weights — from then on
+   the serve path quantizes activations on entry and runs the
+   int8xint8 ("ab") kernel.
+
+Sites are keyed by the projection signature ``k{k}n{n}``: projections
+with identical shapes (and all layers of a ``lax.scan`` stack) share one
+conservative scale — the amax/percentile fold over their union.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import functools
+import threading
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.quant.scales import FORMATS, QTensor, absmax_scale, quantize
+from repro.quant.scales import (FORMATS, QTensor, _FMT_MAX, absmax_scale,
+                                quantize)
 
-_MAX_RESERVOIR = 64  # percentile mode: batches kept for the final quantile
+# Percentile mode: bounded count of per-batch |x| snapshots kept for the
+# final quantile.  Batches past the bound do NOT fall off the end — the
+# reservoir is a uniform subsample of the whole stream (classic
+# reservoir sampling, deterministic seed), so a long calibration run
+# degrades to a statistically fair sample instead of silently quantiling
+# only the first _MAX_RESERVOIR batches.
+_MAX_RESERVOIR = 64
+
+ACT_FORMATS = ("none", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,22 +70,41 @@ class QuantConfig:
                      g rows (must be a multiple of 128, the kernel's
                      k-tile quantum, so the drain-fused dequant stays
                      one scale row per streamed block).
+
+    Activation policy (the w8a8 serve path):
+
+    ``act_fmt``    — "none" (weight-only, the default) or "int8"
+                     (static activation quantization: calibrated scales,
+                     quantize-on-entry, int8xint8 kernel).
+    ``act_block``  — 0 = one per-tensor a-scale; g > 0 = per-k-tile
+                     a-scales of block g (bk-aligned, like ``block`` —
+                     the kernel rescales each k-step's partial product).
     """
 
     fmt: str = "int8"
     method: str = "absmax"
     percentile: float = 99.9
     block: int = 0
+    act_fmt: str = "none"
+    act_block: int = 0
 
     def __post_init__(self):
         assert self.fmt in FORMATS, self.fmt
         assert self.method in ("absmax", "percentile"), self.method
         assert self.block % 128 == 0, \
             f"per-tile block {self.block} must be bk-aligned (128-multiple)"
+        assert self.act_fmt in ACT_FORMATS, self.act_fmt
+        assert self.act_block % 128 == 0, \
+            f"per-tile act_block {self.act_block} must be bk-aligned " \
+            "(128-multiple)"
 
     @property
     def effective_percentile(self) -> float:
         return self.percentile if self.method == "percentile" else 100.0
+
+    @property
+    def quantize_activations(self) -> bool:
+        return self.act_fmt != "none"
 
 
 def quantize_tensor(w: jax.Array, cfg: QuantConfig = QuantConfig(),
@@ -70,8 +119,13 @@ class Calibrator:
 
     ``observe`` batches of shape (..., k); ``scale()`` returns the fp32
     per-channel scale over everything seen.  absmax mode folds a running
-    max (O(k) state); percentile mode keeps up to ``_MAX_RESERVOIR``
-    per-batch |x| snapshots and quantiles them at the end.
+    max (O(k) state); percentile mode keeps a bounded *reservoir
+    subsample* of per-batch |x| snapshots (uniform over the stream,
+    deterministic seed) and quantiles it at the end.
+
+    ``static_scale(block)`` reduces the same statistics to the static
+    activation scales of the w8a8 serve path: a per-tensor scalar
+    (``block=0``) or per-k-tile ``(ceil(k/block),)`` vector.
     """
 
     def __init__(self, cfg: QuantConfig = QuantConfig(), axis: int = -1):
@@ -79,27 +133,186 @@ class Calibrator:
         self.axis = axis
         self._amax: Optional[jax.Array] = None
         self._reservoir: List[jax.Array] = []
+        # Reservoir-sampling RNG: deterministic so calibration is
+        # reproducible run-to-run for the same sample stream.
+        self._rng = np.random.RandomState(0)
         self.n_observed = 0
 
     def observe(self, x: jax.Array) -> None:
         self.n_observed += 1
-        ax = tuple(i for i in range(x.ndim)
-                   if i != (x.ndim + self.axis if self.axis < 0 else self.axis))
-        amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=ax)
+        axis = x.ndim + self.axis if self.axis < 0 else self.axis
+        red = tuple(i for i in range(x.ndim) if i != axis)
+        xa = jnp.abs(x.astype(jnp.float32))
+        amax = jnp.max(xa, axis=red)
         if self.cfg.method == "percentile":
+            # Normalize the channel axis to last *before* flattening —
+            # reshape(-1, n_channels) alone silently mixes channels for
+            # any axis that is not already the last one.
+            flat = jnp.moveaxis(xa, axis, -1).reshape(-1, x.shape[axis])
             if len(self._reservoir) < _MAX_RESERVOIR:
-                self._reservoir.append(
-                    jnp.abs(x.astype(jnp.float32)).reshape(-1, amax.shape[-1]))
+                self._reservoir.append(flat)
+            else:
+                # Reservoir sampling: batch t replaces a random slot with
+                # probability _MAX_RESERVOIR / t — the kept set is a
+                # uniform subsample of all t batches, not the first 64.
+                j = int(self._rng.randint(0, self.n_observed))
+                if j < _MAX_RESERVOIR:
+                    self._reservoir[j] = flat
         self._amax = amax if self._amax is None \
             else jnp.maximum(self._amax, amax)
 
+    def _stacked_reservoir(self) -> jax.Array:
+        if not self._reservoir:
+            raise RuntimeError(
+                "percentile calibration has an empty reservoir: observe() "
+                "batches in percentile mode before asking for a scale "
+                "(absmax state alone cannot produce a percentile scale)")
+        return jnp.concatenate(self._reservoir, axis=0)
+
     def scale(self) -> jax.Array:
+        """Per-channel fp32 scale, shape ``(k,)``."""
         assert self.n_observed > 0, "observe() at least one batch first"
-        if self.cfg.method == "percentile" and self._reservoir:
-            stacked = jnp.concatenate(self._reservoir, axis=0)
+        if self.cfg.method == "percentile":
+            stacked = self._stacked_reservoir()
             return absmax_scale(stacked, axis=0,
                                 percentile=self.cfg.percentile,
                                 fmt=self.cfg.fmt)[0]
-        from repro.quant.scales import _FMT_MAX
-
         return jnp.maximum(self._amax, 1e-12) / _FMT_MAX[self.cfg.fmt]
+
+    def static_scale(self, block: int = 0) -> jax.Array:
+        """Static activation scale over everything seen.
+
+        ``block=0``: one per-tensor scalar (shape ``()``).  ``block=g``:
+        per-k-tile scales, shape ``(ceil(k/g),)`` — the layout the kernel
+        applies to each streamed k-block's partial product.
+
+        The scale targets the *activation* format's grid (``act_fmt``
+        when set) — ``quantize_activation`` clips onto that grid, so a
+        weight-side ``fmt`` (e.g. an fp8 emulation policy) must not
+        leak into the divisor.
+        """
+        assert self.n_observed > 0, "observe() at least one batch first"
+        act_fmt = self.cfg.act_fmt if self.cfg.act_fmt != "none" \
+            else self.cfg.fmt
+        fmt_max = _FMT_MAX[act_fmt]
+        if self.cfg.method == "percentile":
+            stacked = self._stacked_reservoir()  # (rows, k)
+            k = stacked.shape[-1]
+            if not block:
+                amax = jnp.percentile(stacked, self.cfg.percentile)
+            else:
+                nb = -(-k // block)
+                amax = jnp.stack([
+                    jnp.percentile(stacked[:, i * block:(i + 1) * block],
+                                   self.cfg.percentile)
+                    for i in range(nb)])
+        else:
+            am = self._amax  # (k,)
+            k = am.shape[-1]
+            if not block:
+                amax = jnp.max(am)
+            else:
+                nb = -(-k // block)
+                pad = nb * block - k
+                if pad:
+                    am = jnp.pad(am, (0, pad))  # 0-pad: neutral under max
+                amax = jnp.max(am.reshape(nb, block), axis=-1)
+        return jnp.maximum(amax, 1e-12) / fmt_max
+
+
+# ---------------------------------------------------------------------------
+# Activation-calibration recording (the w8a8 serve path's observe phase)
+# ---------------------------------------------------------------------------
+
+_tls = threading.local()
+
+
+def activation_site(weight_shape: Tuple[int, ...]) -> str:
+    """Calibration site key for the GEMM a weight serves: ``k{k}n{n}``.
+
+    Keyed by the projection signature, so same-shaped projections (and
+    every layer of a scan stack) share one conservative scale.
+    """
+    return f"k{weight_shape[-2]}n{weight_shape[-1]}"
+
+
+def active_calibration() -> Optional["ActivationCalibration"]:
+    stack = getattr(_tls, "stack", None)
+    return stack[-1] if stack else None
+
+
+class ActivationCalibration:
+    """Context manager: while active, every ``ca_matmul`` call consuming
+    a quantized weight streams its input activation to a per-site
+    :class:`Calibrator`.
+
+    Recording rides ``jax.experimental.io_callback`` so it works inside
+    jitted/``lax.scan``-traced model bodies — the host-side calibrators
+    see concrete values regardless of how the forward is staged.
+    """
+
+    def __init__(self, cfg: QuantConfig = QuantConfig(act_fmt="int8")):
+        assert cfg.quantize_activations, \
+            "ActivationCalibration needs cfg.act_fmt != 'none'"
+        self.cfg = cfg
+        self.calibrators: Dict[str, Calibrator] = {}
+
+    def __enter__(self):
+        stack = getattr(_tls, "stack", None)
+        if stack is None:
+            stack = _tls.stack = []
+        stack.append(self)
+        return self
+
+    def __exit__(self, *exc):
+        _tls.stack.pop()
+
+    # -- recording ----------------------------------------------------------
+
+    def _observe_host(self, site: str, x) -> None:
+        cal = self.calibrators.setdefault(
+            site, Calibrator(self.cfg, axis=-1))
+        cal.observe(jnp.asarray(x))
+
+    def record(self, weight_shape: Tuple[int, ...], x: jax.Array) -> None:
+        """Record activation ``x`` (shape (..., k)) for the site of a
+        weight with ``weight_shape`` (..., k, n)."""
+        from jax.experimental import io_callback
+
+        site = activation_site(weight_shape)
+        io_callback(functools.partial(self._observe_host, site), None,
+                    x, ordered=False)
+
+    # -- results ------------------------------------------------------------
+
+    def scales(self) -> Dict[str, jax.Array]:
+        """{site: static a-scale} under the config's ``act_block``."""
+        return {site: cal.static_scale(self.cfg.act_block)
+                for site, cal in self.calibrators.items()}
+
+
+def attach_act_scales(params, scales: Dict[str, jax.Array],
+                      block: int = 0):
+    """Write calibrated static a-scales onto the matching QTensor weights.
+
+    Each int8 QTensor leaf whose :func:`activation_site` appears in
+    ``scales`` gains ``act_scale`` (+ ``act_block``) — the flag
+    ``ca_matmul`` dispatches the w8a8 path on.  Layer-stacked (3D)
+    weights broadcast the scale over the layers axis so ``lax.scan``
+    slices it alongside the payload.  Leaves without a calibrated site
+    keep serving weight-only — static activation quantization degrades
+    per-projection, never all-or-nothing.
+    """
+    def _attach(leaf):
+        if not (isinstance(leaf, QTensor) and leaf.fmt == "int8"):
+            return leaf
+        s = scales.get(activation_site(leaf.shape))
+        if s is None:
+            return leaf
+        s = jnp.asarray(s, jnp.float32)
+        if leaf.ndim == 3:  # layer-stacked: scan slices the leading axis
+            s = jnp.broadcast_to(s, (leaf.shape[0],) + s.shape) + 0.0
+        return dataclasses.replace(leaf, act_scale=s, act_block=block)
+
+    return jax.tree.map(_attach, params,
+                        is_leaf=lambda x: isinstance(x, QTensor))

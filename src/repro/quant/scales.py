@@ -136,6 +136,14 @@ class QTensor:
     ``axis``/``block``/``fmt`` are static (pytree aux data), so jit,
     ``lax.scan`` slicing and checkpoint flattening all treat a QTensor
     like any other parameter pair.
+
+    ``act_scale`` (optional) is a calibrated **static activation scale**
+    for the GEMM this weight serves: a per-tensor scalar (``act_block=0``)
+    or per-k-tile ``(ceil(k/act_block),)`` vector, fp32.  A weight
+    carrying it tells ``ca_matmul`` to quantize the incoming activation
+    on entry and run the int8xint8 ("ab") kernel path.  Layer-stacked
+    weights carry a leading layers axis on ``act_scale`` too, so
+    ``lax.scan`` slices it alongside ``data``/``scale``.
     """
 
     data: jax.Array
@@ -143,19 +151,23 @@ class QTensor:
     axis: int = -2
     block: int = 0
     fmt: str = "int8"
+    act_scale: Optional[jax.Array] = None
+    act_block: int = 0
 
     # -- pytree protocol ----------------------------------------------------
 
     def tree_flatten_with_keys(self):
         return ((( jax.tree_util.GetAttrKey("data"), self.data),
-                 (jax.tree_util.GetAttrKey("scale"), self.scale)),
-                (self.axis, self.block, self.fmt))
+                 (jax.tree_util.GetAttrKey("scale"), self.scale),
+                 (jax.tree_util.GetAttrKey("act_scale"), self.act_scale)),
+                (self.axis, self.block, self.fmt, self.act_block))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        data, scale = children
-        axis, block, fmt = aux
-        return cls(data=data, scale=scale, axis=axis, block=block, fmt=fmt)
+        data, scale, act_scale = children
+        axis, block, fmt, act_block = aux
+        return cls(data=data, scale=scale, axis=axis, block=block, fmt=fmt,
+                   act_scale=act_scale, act_block=act_block)
 
     # -- array-ish surface ---------------------------------------------------
 
@@ -169,7 +181,10 @@ class QTensor:
 
     @property
     def nbytes(self) -> int:
-        return int(self.data.size * 1 + self.scale.size * 4)
+        n = int(self.data.size * 1 + self.scale.size * 4)
+        if self.act_scale is not None:
+            n += int(self.act_scale.size * 4)
+        return n
 
     @property
     def dtype_str(self) -> str:
@@ -185,7 +200,10 @@ class QTensor:
         scales slice together, aux metadata rides along — valid because
         the quantization axis is stored from the end (negative)."""
         return QTensor(data=self.data[idx], scale=self.scale[idx],
-                       axis=self.axis, block=self.block, fmt=self.fmt)
+                       axis=self.axis, block=self.block, fmt=self.fmt,
+                       act_scale=None if self.act_scale is None
+                       else self.act_scale[idx],
+                       act_block=self.act_block)
 
     def per_channel_scale(self) -> Optional[jax.Array]:
         """The ``(..., 1, n)`` scale when per-channel, else None."""
@@ -226,3 +244,46 @@ def quantize(x: jax.Array, axis: int = -2, block: int = 0,
 
 def dequantize(q: QTensor, dtype=jnp.float32) -> jax.Array:
     return q.dequantize(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Static activation quantization (the w8a8 serve path's quantize-on-entry)
+# ---------------------------------------------------------------------------
+
+def expand_act_scale(scale: jax.Array, k: int, block: int = 0) -> jax.Array:
+    """Broadcast a static activation scale over the contraction axis.
+
+    ``scale`` is a per-tensor scalar (``block=0``) or a per-k-tile
+    ``(ceil(k/block),)`` vector; the result broadcasts against a
+    ``(..., k)`` activation.
+    """
+    s = jnp.asarray(scale, jnp.float32)
+    if not block:
+        return s.reshape(())
+    nb = -(-k // block)
+    assert s.size == nb, (s.shape, k, block)
+    return jnp.repeat(s.reshape(nb), block)[:k]
+
+
+def quantize_activation(x: jax.Array, scale: jax.Array,
+                        block: int = 0) -> jax.Array:
+    """Quantize an activation with a *static* (calibrated) scale.
+
+    Unlike :func:`quantize` (which derives the scale from the tensor),
+    the scale here was fixed at calibration time, so the int8 payload is
+    a pure elementwise op — XLA fuses it with the activation's producer
+    and the kernel streams the int8 bytes.  Values beyond the calibrated
+    range saturate (the static-quantization trade).
+    """
+    s = expand_act_scale(scale, x.shape[-1], block)
+    scaled = x.astype(jnp.float32) / s
+    return jnp.clip(jnp.round(scaled), -127, 127).astype(jnp.int8)
+
+
+def fake_quant_activation(x: jax.Array, scale: jax.Array,
+                          block: int = 0) -> jax.Array:
+    """Quantize-dequantize round trip — the XLA-path oracle of the w8a8
+    kernel's quantize-on-entry (same grid, same saturation, fp32 math)."""
+    s = expand_act_scale(scale, x.shape[-1], block)
+    q = quantize_activation(x, scale, block)
+    return (q.astype(jnp.float32) * s).astype(x.dtype)

@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
-from repro.quant import QTensor
+from repro.quant import (ActivationCalibration, QTensor, QuantConfig,
+                         attach_act_scales)
 from repro.tuning import warmup_model
 
 
@@ -42,12 +43,31 @@ class ServeEngine:
     """Single-host batched engine (the dry-run lowers its jitted steps)."""
 
     def __init__(self, params, cfg: ModelConfig, *, batch_size: int,
-                 max_len: int, seed: int = 0, warmup_gemms: bool = True):
+                 max_len: int, seed: int = 0, warmup_gemms: bool = True,
+                 quantize_activations: bool = False,
+                 calibration_batches: int = 4,
+                 act_qconfig: Optional[QuantConfig] = None):
         self.params = params
         self.cfg = cfg
         self.B = batch_size
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
+        self.quantized = _is_quantized(params)
+        # Static activation quantization (w8a8): run a calibration pass
+        # over sample traffic *before* warmup and jit — every projection
+        # site's activation distribution is observed, its static a-scale
+        # is attached to the weight QTensor, and every GEMM the jitted
+        # steps trace thereafter takes the int8xint8 ("ab") kernel path:
+        # the MXU's 2x int8 compute rate on top of PR 3's byte win.
+        self.w8a8 = False
+        if quantize_activations:
+            assert self.quantized, \
+                "quantize_activations requires weight-quantized params " \
+                "(models.common.quantize_params first)"
+            self.act_qconfig = act_qconfig or QuantConfig(act_fmt="int8")
+            assert self.act_qconfig.quantize_activations, self.act_qconfig
+            self.params = self._calibrate_activations(calibration_batches)
+            self.w8a8 = True
         # Serve-time warmup: resolve every hot-path GEMM tile through the
         # kernel-config registry (cache > autotune > analytic) before the
         # first request, so no request pays tuning/solver latency.  The
@@ -56,14 +76,16 @@ class ServeEngine:
         # the per-expert GLU/down programs of MoE archs, and residual
         # drains all plan under their own keys; a weight-quantized param
         # tree warms the int8-weight variants instead (per-branch dequant
-        # tags like ``glu.silu(dqb|dqb)``, ``int8w_*`` dtype keys), since
-        # those are the kernels its projections will issue.  The jitted
-        # prefill/decode steps below fetch the same configs at trace
-        # time.
-        self.quantized = _is_quantized(params)
+        # tags like ``glu.silu(dqb|dqb)``, ``int8w_*`` dtype keys), and a
+        # w8a8 engine the static-activation variants (``dqab`` tags,
+        # ``int8w_int8a`` keys, no rms prologue — the norm runs via XLA
+        # before the quantize-on-entry), since those are the kernels its
+        # projections will issue.  The jitted prefill/decode steps below
+        # fetch the same configs at trace time.
+        quant_mode = "w8a8" if self.w8a8 else self.quantized
         self.gemm_plan_sources = (
             warmup_model(cfg, [batch_size, batch_size * max_len],
-                         quant=self.quantized)
+                         quant=quant_mode)
             if warmup_gemms else {})
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, b, cfg, max_len=max_len))
@@ -71,6 +93,42 @@ class ServeEngine:
             lambda p, t, c, s: M.decode_step(p, t, c, s, cfg))
         self.queue: List[Request] = []
         self.done: Dict[int, Request] = {}
+
+    def _sample_inputs(self, rng: np.random.RandomState, length: int):
+        """One prefill input of sample traffic (tokens or embeds)."""
+        toks = jnp.asarray(rng.randint(0, self.cfg.vocab_size,
+                                       (1, length)), jnp.int32)
+        if self.cfg.frontend == "tokens":
+            return {"tokens": toks}
+        if not hasattr(self, "_sample_table"):
+            d = self.cfg.d_model
+            self._sample_table = jnp.asarray(
+                np.random.RandomState(0).randn(self.cfg.vocab_size, d)
+                * 0.02, self.cfg.dtype())
+        return {"embeds": self._sample_table[toks]}
+
+    def _calibrate_activations(self, n_batches: int):
+        """The classic post-training static calibration loop: forward a
+        few sample batches with an :class:`ActivationCalibration` context
+        recording every quantized projection's input, then write the
+        resulting static a-scales onto the weight QTensors.
+
+        Runs the un-jitted forward on the XLA dispatch path (recording
+        rides ``io_callback``, so the ``lax.scan``-stacked layers are
+        observed too); the jitted serve steps trace afterwards, against
+        the already-annotated params.
+        """
+        rng = np.random.RandomState(1234)
+        length = max(2, min(8, self.max_len - 1))
+        with ActivationCalibration(self.act_qconfig) as ctx:
+            for _ in range(max(1, n_batches)):
+                pre_in = self._sample_inputs(rng, length)
+                jax.block_until_ready(
+                    M.prefill(self.params, pre_in, self.cfg,
+                              max_len=self.max_len)[0])
+        self.calibration_sites = sorted(ctx.calibrators)
+        return attach_act_scales(self.params, ctx.scales(),
+                                 block=self.act_qconfig.act_block)
 
     def submit(self, req: Request):
         req.generated = []

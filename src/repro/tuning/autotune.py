@@ -81,6 +81,7 @@ def time_tile(
     epilogue: str = "none",
     layout: str = "nn",
     dtype_b=None,
+    dtype_a=None,
 ) -> float:
     """Median wall seconds of one CA-MMM call under ``tile``.
 
@@ -94,6 +95,9 @@ def time_tile(
     key names, never a proxy.  ``dtype_b`` (with a ``dq*`` stage) times
     the quantized-weight kernel: int8 B operand, unit per-channel scales
     — the streamed bytes and the drain-fused dequant are the real thing.
+    ``dtype_a`` (with a ``dqab`` stage) additionally streams an int8 A
+    operand with unit per-row a-scales — the full w8a8 variant, int32
+    accumulation included.
     """
     from repro.kernels import ca_gemm_program, ca_mmm_k_outer, ops
     from repro.kernels.program import program_from_tag, synthetic_operands
@@ -102,6 +106,8 @@ def time_tile(
     a, b = _make_operands(m, n, k, dtype)
     if dtype_b is not None and jnp.dtype(dtype_b) != jnp.dtype(dtype):
         _, b = _make_operands(m, n, k, dtype_b)
+    if dtype_a is not None and jnp.dtype(dtype_a) != jnp.dtype(dtype):
+        a, _ = _make_operands(m, n, k, dtype_a)
 
     if tile.order == "k_outer":
         if epilogue != "none" or layout != "nn":
@@ -200,20 +206,21 @@ def autotune_gemm(
     epilogue: str = "none",
     layout: str = "nn",
     dtype_b=None,
+    dtype_a=None,
 ) -> TuneResult:
     """Measure model-nominated candidates; return the fastest.
 
     ``timer`` injects a measurement function (tests use a stub; production
     uses :func:`time_tile`).  Candidates are measured best-prior-first.
-    ``epilogue``/``layout``/``dtype_b`` select the kernel variant being
-    timed, so the winner cached under a fused/transposed/quantized key
-    was measured as one.
+    ``epilogue``/``layout``/``dtype_b``/``dtype_a`` select the kernel
+    variant being timed, so the winner cached under a fused/transposed/
+    quantized key was measured as one.
     """
     if candidates is None:
         candidates = tspace.candidate_tile_configs(
             m, n, k, dtype_in=dtype, hw=hw, top_n=max_candidates,
             orders=orders, semiring=semiring, epilogue=epilogue,
-            dtype_b=dtype_b)
+            dtype_b=dtype_b, dtype_a=dtype_a)
     if epilogue != "none" or layout != "nn":
         # k_outer has no fused/transposed kernel variant — timing it as a
         # plain-GEMM proxy would let a wrong-variant measurement win the
@@ -227,7 +234,7 @@ def autotune_gemm(
             return time_tile(m, n, k, tile, dtype=dtype, semiring=semiring,
                              interpret=interpret, warmup=warmup, iters=iters,
                              epilogue=epilogue, layout=layout,
-                             dtype_b=dtype_b)
+                             dtype_b=dtype_b, dtype_a=dtype_a)
 
     # Roofline prior orders the measurements; a k_outer schedule re-reads
     # the C tile per k step, which the prior reflects via inflated Q.

@@ -83,19 +83,32 @@ class KernelRegistry:
                      epilogue: str = "none",
                      layout: str = "nn",
                      dtype_b=None,
+                     dtype_a=None,
                      **tune_kwargs) -> Resolution:
         """``dtype_b`` is the weight/B-operand dtype of a mixed-precision
-        (quantized) GEMM; it changes the cache key's dtype field to the
-        composite form (``"int8w_bf16a"``) and the VMEM budgets the
-        analytic/space paths solve under."""
+        (quantized) GEMM; ``dtype_a`` is the *streamed* A/activation
+        dtype when it too differs from the serve dtype (the w8a8 path's
+        int8 activations).  Either changes the cache key's dtype field
+        to the composite form (``"int8w_bf16a"``, ``"int8w_int8a"``) and
+        the VMEM budgets the analytic/space paths solve under."""
         hw = hw or self.hw
-        if dtype_b is not None and jnp.dtype(dtype_b) != jnp.dtype(dtype):
+        if dtype_a is not None and dtype_b is None:
+            # An int8 A stream only exists on the 'ab' dequant path,
+            # which always has an int8 weight too — a lone dtype_a is a
+            # caller bug that would mint an unservable key.
+            raise ValueError("dtype_a requires dtype_b (w8a8 keys pair "
+                             "int8 activations with int8 weights)")
+        if dtype_b is not None and (
+                dtype_a is not None
+                or jnp.dtype(dtype_b) != jnp.dtype(dtype)):
             from repro.quant.scales import quant_dtype_str  # leaf module
 
-            dtype_str = quant_dtype_str(dtype, dtype_b)
+            dtype_str = quant_dtype_str(dtype_a if dtype_a is not None
+                                        else dtype, dtype_b)
         else:
             dtype_str = jnp.dtype(dtype).name
             dtype_b = None
+            dtype_a = None
         key = cache_key(m, n, k, dtype_str, semiring, hw, epilogue, layout)
         exact = (m, n, k, dtype_str, semiring, hw.name, epilogue, layout)
         with self._lock:
@@ -125,6 +138,8 @@ class KernelRegistry:
         if autotune:
             if dtype_b is not None:
                 tune_kwargs = dict(tune_kwargs, dtype_b=dtype_b)
+            if dtype_a is not None:
+                tune_kwargs = dict(tune_kwargs, dtype_a=dtype_a)
             result = self._tuner(m, n, k, dtype=dtype, semiring=semiring,
                                  hw=hw, epilogue=epilogue, layout=layout,
                                  **tune_kwargs)
@@ -143,14 +158,15 @@ class KernelRegistry:
 
         if semiring == "plus_times" and epilogue == "none":
             tile = solve_tile_config(m, n, k, dtype_in=dtype, hw=hw,
-                                     dtype_b=dtype_b)
+                                     dtype_b=dtype_b, dtype_a=dtype_a)
         else:
             # Non-standard semirings (min_plus) and fused epilogues have
             # kernel-specific VMEM footprints the plain solver doesn't
             # model; take the space generator's top candidate, which does.
             tile = _space.candidate_tile_configs(
                 m, n, k, dtype_in=dtype, hw=hw, top_n=1,
-                semiring=semiring, epilogue=epilogue, dtype_b=dtype_b)[0]
+                semiring=semiring, epilogue=epilogue, dtype_b=dtype_b,
+                dtype_a=dtype_a)[0]
         res = Resolution(tile, "analytic", key)
         with self._lock:
             self._analytic[exact] = res
@@ -163,23 +179,27 @@ class KernelRegistry:
                 epilogue: str = "none",
                 layout: str = "nn",
                 dtype_b=None,
+                dtype_a=None,
                 **tune_kwargs) -> TileConfig:
         """The everyday entry point: just the tile."""
         return self.resolve_full(m, n, k, dtype, semiring, hw,
                                  epilogue=epilogue, layout=layout,
-                                 dtype_b=dtype_b, **tune_kwargs).config
+                                 dtype_b=dtype_b, dtype_a=dtype_a,
+                                 **tune_kwargs).config
 
     def warmup(self, shapes: Iterable[Tuple],
                dtype=jnp.bfloat16,
                semiring: str = "plus_times") -> Dict[str, str]:
         """Resolve a batch of GEMM signatures ahead of first use.
 
-        Each entry is ``(m, n, k)``, ``(m, n, k, epilogue, layout)`` or
-        ``(m, n, k, epilogue, layout, weight_dtype_str)`` — the longer
-        forms pre-plan fused/transpose-streaming and quantized-weight
-        kernels under their own cache keys.  Serve engines call this at
-        startup so no request pays the tuning (or even solver) latency.
-        Returns {key: source} for logging.
+        Each entry is ``(m, n, k)``, ``(m, n, k, epilogue, layout)``,
+        ``(m, n, k, epilogue, layout, weight_dtype_str)`` or
+        ``(m, n, k, epilogue, layout, weight_dtype_str, act_dtype_str)``
+        — the longer forms pre-plan fused/transpose-streaming, quantized-
+        weight and quantized-activation (w8a8) kernels under their own
+        cache keys.  Serve engines call this at startup so no request
+        pays the tuning (or even solver) latency.  Returns {key: source}
+        for logging.
         """
         out = {}
         for entry in shapes:
@@ -188,9 +208,11 @@ class KernelRegistry:
                 else ("none", "nn")
             dtype_b = jnp.dtype(entry[5]) if len(entry) > 5 and entry[5] \
                 else None
+            dtype_a = jnp.dtype(entry[6]) if len(entry) > 6 and entry[6] \
+                else None
             r = self.resolve_full(m, n, k, dtype, semiring,
                                   epilogue=epilogue, layout=layout,
-                                  dtype_b=dtype_b)
+                                  dtype_b=dtype_b, dtype_a=dtype_a)
             out[r.key] = r.source
         return out
 

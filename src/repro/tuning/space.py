@@ -70,6 +70,7 @@ def candidate_tile_configs(
     bk_candidates: Iterable[int] = DEFAULT_BK_CANDIDATES,
     epilogue: str = "none",
     dtype_b=None,
+    dtype_a=None,
 ) -> List[TileConfig]:
     """Model-pruned candidate list, best-first by effective intensity.
 
@@ -89,6 +90,9 @@ def candidate_tile_configs(
     activations) shrinks the B stream buffers in the budget: a quantized
     kernel's feasible region is *wider* than the uniform-dtype one, and
     the candidates here exploit that instead of inheriting bf16 limits.
+    ``dtype_a`` (the w8a8 path's int8 activation stream) does the same
+    for the A double buffer; the accumulator stays 4 B/element (int32 is
+    as wide as fp32), so only the stream terms shrink.
     """
     from repro.kernels.program import program_cost  # no cycle: leaf module
 
@@ -98,6 +102,8 @@ def candidate_tile_configs(
     pro_mk, pro_kn = cost.prologue_mk, cost.prologue_kn
     itemsize_in = jnp.dtype(dtype_in).itemsize
     itemsize_b = jnp.dtype(dtype_b).itemsize if dtype_b is not None \
+        else itemsize_in
+    itemsize_a = jnp.dtype(dtype_a).itemsize if dtype_a is not None \
         else itemsize_in
     acc_bytes = jnp.dtype(dtype_acc).itemsize
     budget = int(hw.vmem_bytes * vmem_fraction)
@@ -123,6 +129,7 @@ def candidate_tile_configs(
                            epilogue_mn_ops=epi_mn,
                            epilogue_bias=epi_bias,
                            itemsize_b=itemsize_b,
+                           itemsize_a=itemsize_a,
                            n_b=n_b, n_out=n_out,
                            prologue_mk_ops=pro_mk,
                            prologue_kn_ops=pro_kn) > budget:
@@ -140,7 +147,8 @@ def candidate_tile_configs(
     solved = solve_tile_config(m, n, k, dtype_in=dtype_in,
                                dtype_acc=dtype_acc, hw=hw,
                                vmem_fraction=vmem_fraction,
-                               max_block=max_block, dtype_b=dtype_b)
+                               max_block=max_block, dtype_b=dtype_b,
+                               dtype_a=dtype_a)
     consider(solved.bm, solved.bn, solved.bk)
 
     for bk in bks:
@@ -148,7 +156,7 @@ def candidate_tile_configs(
             # Largest bn the budget allows at this (bm, bk), then a short
             # geometric descent below it — the model says intensity falls
             # monotonically with bn at fixed bm, so deep descent is waste.
-            fixed = 2 * bm * bk * (itemsize_in + 4 * pro_mk)
+            fixed = 2 * bm * bk * (itemsize_a + 4 * pro_mk)
             # B-side prologue blocks ((bk, bn) fp32) scale with bn, so
             # they join the per-bn slope, not the fixed term.
             per_bn = 2 * bk * (n_b * itemsize_b + 4 * pro_kn) \
@@ -177,6 +185,7 @@ def candidate_tile_configs(
                                  epilogue_mn_ops=epi_mn,
                                  epilogue_bias=epi_bias,
                                  itemsize_b=itemsize_b,
+                                 itemsize_a=itemsize_a,
                                  n_b=n_b, n_out=n_out,
                                  prologue_mk_ops=pro_mk,
                                  prologue_kn_ops=pro_kn)

@@ -35,7 +35,7 @@ def model_gemm_shapes(cfg: ModelConfig, rows: int) -> List[GemmShape]:
     return sorted({w[:3] for w in model_gemm_workloads(cfg, rows)})
 
 
-def quantize_workloads(loads) -> List[Tuple]:
+def quantize_workloads(loads, acts: bool = False) -> List[Tuple]:
     """Rewrite forward workload entries as their int8-weight variants.
 
     Each ('nn'-layout) entry gains a ``dqb`` dequant stage on *every
@@ -44,16 +44,30 @@ def quantize_workloads(loads) -> List[Tuple]:
     registry key the quantized serve path resolves, so warmup plans the
     kernels that will actually run.  Backward/transposed layouts pass
     through unquantized (training differentiates dense master weights).
-    """
-    from repro.kernels.program import program_with_dequant  # leaf module
 
+    ``acts=True`` emits the **w8a8** variants instead: ``dqab`` stages,
+    a trailing ``"int8"`` *activation*-dtype field (the
+    ``int8w_int8a`` composite key), and no rms prologue — the w8a8
+    serve path normalizes via XLA before quantizing on entry, so the
+    kernel it issues carries no ``rms>`` prefix.
+    """
+    import dataclasses as _dc
+
+    from repro.kernels.program import (NO_PROLOGUE, program_from_tag,
+                                       program_tag, program_with_dequant)
+
+    mode = "ab" if acts else "b"
     out = []
     for (m, n, k, epi, lay) in loads:
-        if lay == "nn":
-            out.append((m, n, k, program_with_dequant(epi, "b"), lay,
-                        "int8"))
-        else:
+        if lay != "nn":
             out.append((m, n, k, epi, lay))
+            continue
+        tag = program_with_dequant(epi, mode)
+        entry = (m, n, k, tag, lay, "int8")
+        if acts:
+            spec = _dc.replace(program_from_tag(tag), prologue=NO_PROLOGUE)
+            entry = (m, n, k, program_tag(spec), lay, "int8", "int8")
+        out.append(entry)
     return sorted(out)
 
 
@@ -113,15 +127,18 @@ def model_gemm_workloads(cfg: ModelConfig, rows: int,
 
 
 def warmup_model(cfg: ModelConfig, rows_list, registry=None,
-                 train: bool = False, quant: bool = False) -> dict:
+                 train: bool = False, quant=False) -> dict:
     """Resolve every hot-path GEMM config for the given row counts.
 
-    ``quant=True`` plans the int8-weight variants instead (dequant-fused
-    epilogue tags, ``int8w_*`` cache keys) — what a weight-quantized
-    serve engine will actually issue.  Returns {cache_key: source} so
-    callers can log what was tuned, served from cache, or fell back to
-    the analytic model.
+    ``quant=True`` (or ``"w8"``) plans the int8-weight variants instead
+    (dequant-fused epilogue tags, ``int8w_*`` cache keys);
+    ``quant="w8a8"`` plans the static-activation variants (``dqab``
+    tags, ``int8w_int8a`` keys) — in each case exactly what the
+    corresponding serve engine will issue.  Returns {cache_key: source}
+    so callers can log what was tuned, served from cache, or fell back
+    to the analytic model.
     """
+    assert quant in (False, True, "w8", "w8a8"), quant
     if registry is None:
         from repro.tuning.registry import get_registry
 
@@ -132,6 +149,6 @@ def warmup_model(cfg: ModelConfig, rows_list, registry=None,
             continue
         loads = model_gemm_workloads(cfg, rows, train=train)
         if quant:
-            loads = quantize_workloads(loads)
+            loads = quantize_workloads(loads, acts=(quant == "w8a8"))
         resolved.update(registry.warmup(loads, dtype=cfg.dtype()))
     return resolved

@@ -379,3 +379,294 @@ def test_quantize_tensor_respects_config_block():
     assert q.block == 128 and q.scale.shape == (2, 32)
     with pytest.raises(AssertionError):
         QuantConfig(block=100)  # not bk-aligned
+
+
+# ---------------------------------------------------------------------------
+# Calibrator correctness (the bugs that motivated this PR)
+# ---------------------------------------------------------------------------
+
+def test_calibrator_percentile_scales_axis0_match_transposed():
+    """Regression: the percentile reservoir used to flatten with
+    ``reshape(-1, amax.shape[-1])``, silently mixing channels whenever
+    the channel axis was not last — axis=0 scales must equal the
+    axis=-1 scales of the transposed stream."""
+    cfg = QuantConfig(method="percentile", percentile=99.0)
+    cal0 = Calibrator(cfg, axis=0)
+    cal1 = Calibrator(cfg, axis=-1)
+    batches = [_randn((12, 40), s) * (1.0 + np.arange(12)[:, None])
+               for s in range(3)]
+    for b in batches:
+        cal0.observe(b)          # channel axis first
+        cal1.observe(b.T)        # channel axis last
+    np.testing.assert_allclose(np.asarray(cal0.scale()),
+                               np.asarray(cal1.scale()), rtol=1e-6)
+
+
+def test_calibrator_reservoir_subsamples_long_streams():
+    """Long percentile runs keep a bounded *uniform subsample*, not the
+    first 64 batches: late batches must be able to enter the reservoir,
+    and its size must stay bounded."""
+    from repro.quant.calibrate import _MAX_RESERVOIR
+
+    cal = Calibrator(QuantConfig(method="percentile"), axis=-1)
+    n_total = _MAX_RESERVOIR * 3
+    for i in range(n_total):
+        # Batch i carries the constant value i + 1 — membership is
+        # readable off the reservoir contents.
+        cal.observe(jnp.full((2, 8), float(i + 1)))
+    assert len(cal._reservoir) == _MAX_RESERVOIR
+    members = {int(np.asarray(r)[0, 0]) for r in cal._reservoir}
+    # Deterministic seed: some tail batches must have displaced head ones.
+    assert max(members) > _MAX_RESERVOIR, sorted(members)[-5:]
+    assert len(members) == _MAX_RESERVOIR
+    # absmax state still spans the whole stream regardless of sampling
+    assert float(jnp.max(cal._amax)) == float(n_total)
+
+
+def test_calibrator_percentile_empty_reservoir_raises():
+    """An empty reservoir must be an explicit error, not a silent
+    absmax fallback (which would return the wrong kind of scale)."""
+    cal = Calibrator(QuantConfig(method="percentile"), axis=-1)
+    cal.observe(_randn((4, 8), 40))
+    cal._reservoir = []  # simulate restored/corrupted state
+    with pytest.raises(RuntimeError, match="reservoir"):
+        cal.scale()
+    with pytest.raises(RuntimeError, match="reservoir"):
+        cal.static_scale()
+
+
+def test_calibrator_static_scale_layouts():
+    """Per-tensor () and per-tile (ceil(k/g),) static a-scales, both
+    methods; the per-tile absmax scale must match a direct blockwise
+    reduction over the full stream."""
+    k, g = 300, 128
+    batches = [_randn((6, k), s) * (1.0 + 5.0 * s) for s in range(3)]
+    cal = Calibrator(QuantConfig(act_fmt="int8"), axis=-1)
+    for b in batches:
+        cal.observe(b)
+    s0 = cal.static_scale()
+    assert s0.shape == ()
+    allx = np.abs(np.concatenate([np.asarray(b) for b in batches], 0))
+    np.testing.assert_allclose(float(s0), allx.max() / 127.0, rtol=1e-6)
+    st = cal.static_scale(block=g)
+    assert st.shape == (3,)  # ceil(300/128)
+    for i in range(3):
+        blk = allx[:, i * g:(i + 1) * g]
+        np.testing.assert_allclose(float(st[i]), blk.max() / 127.0,
+                                   rtol=1e-6)
+    # percentile mode produces the same layouts
+    calp = Calibrator(QuantConfig(act_fmt="int8", method="percentile",
+                                  percentile=99.0), axis=-1)
+    for b in batches:
+        calp.observe(b)
+    assert calp.static_scale().shape == ()
+    assert calp.static_scale(block=g).shape == (3,)
+
+
+# ---------------------------------------------------------------------------
+# w8a8 static activation quantization vs the XLA dequant oracle
+# ---------------------------------------------------------------------------
+
+def _fake_quant(x, s, block=0):
+    from repro.quant import fake_quant_activation
+
+    return fake_quant_activation(x, s, block)
+
+
+def _static_scale_for(a, block=0):
+    cal = Calibrator(QuantConfig(act_fmt="int8"), axis=-1)
+    cal.observe(a)
+    return cal.static_scale(block)
+
+
+@pytest.mark.parametrize("m,n,k", [(37, 96, 100), (5, 130, 70),
+                                   (1, 128, 128), (16, 64, 300)])
+def test_w8a8_static_per_tensor_vs_oracle(m, n, k):
+    """Quantize-on-entry with a calibrated per-tensor scale == the
+    fake-quant XLA oracle, ragged shapes (incl. m < 8) included."""
+    a = _randn((m, k), 50)
+    qw = quantize(_randn((k, n), 51), axis=-2)
+    s = _static_scale_for(a)
+    got = quant_matmul(a, qw, act_scale=s, interpret=True)
+    want = jnp.dot(_fake_quant(a, s), qw.dequantize(),
+                   preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-3)
+    # and inside the documented band of the dense fp32 oracle
+    dense = np.asarray(a) @ np.asarray(_randn((k, n), 51))
+    rel = np.abs(np.asarray(got) - dense).max() / np.abs(dense).max()
+    assert rel < 1e-1, rel
+
+
+def test_w8a8_per_tile_a_and_b_scales_vs_oracle():
+    """Per-tile a-scales x per-tile b-scales: both applied to each
+    k-step's partial product, fp32 accumulation."""
+    m, n, k, g = 37, 64, 300, 128
+    a = _randn((m, k), 52) * (1.0 + 10.0 * (np.arange(k)[None, :] >= g))
+    w = np.random.RandomState(53).randn(k, n) * (
+        1.0 + 50.0 * (np.arange(k)[:, None] >= g))
+    qw = quantize(jnp.asarray(w, jnp.float32), axis=-2, block=g)
+    s = _static_scale_for(a, block=g)
+    assert s.shape == (3,)
+    got = quant_matmul(a, qw, act_scale=s, act_block=g, interpret=True)
+    want = jnp.dot(_fake_quant(a, s, g), qw.dequantize(),
+                   preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4,
+        atol=2e-3 * float(jnp.abs(want).max()))
+
+
+def test_quant_glu_per_tile_scales_apply_on_both_branches():
+    """Regression for the branch >= 1 per-tile bug: the kernel used to
+    apply per-tile weight scales per k-step only on branch 0, leaving
+    branch 1 to the drain-time rescale its own comment called wrong.
+    Blocky weights make the error enormous if it regresses."""
+    m, n, k, g = 21, 64, 256, 128
+    a = _randn((m, k), 54)
+    mag = 1.0 + 100.0 * (np.arange(k)[:, None] >= g)
+    wg = np.random.RandomState(55).randn(k, n) * mag
+    wu = np.random.RandomState(56).randn(k, n) * mag
+    qg = quantize(jnp.asarray(wg, jnp.float32), axis=-2, block=g)
+    qu = quantize(jnp.asarray(wu, jnp.float32), axis=-2, block=g)
+    from repro.kernels import quant_glu_matmul
+
+    got = np.asarray(quant_glu_matmul(a, qg, qu, interpret=True))
+    want = np.asarray(jax.nn.silu(a @ qg.dequantize())
+                      * (a @ qu.dequantize()))
+    scale = np.abs(want).max()
+    assert np.abs(got - want).max() / scale < 1e-5
+
+
+def test_w8a8_glu_program_vs_oracle():
+    """Dual-branch GLU on the full int8xint8 path: one int8 x stream,
+    per-branch 'ab' dequant, per-tile a- and b-scales."""
+    m, n, k, g = 13, 96, 256, 128
+    a = _randn((m, k), 57)
+    qg = quantize(_randn((k, n), 58), axis=-2, block=g)
+    qu = quantize(_randn((k, n), 59), axis=-2, block=g)
+    s = _static_scale_for(a, block=g)
+    from repro.kernels import quant_glu_matmul
+
+    got = np.asarray(quant_glu_matmul(a, qg, qu, act_scale=s, act_block=g,
+                                      interpret=True))
+    af = _fake_quant(a, s, g)
+    want = np.asarray(jax.nn.silu(af @ qg.dequantize())
+                      * (af @ qu.dequantize()))
+    np.testing.assert_allclose(got, want, rtol=2e-4,
+                               atol=2e-3 * np.abs(want).max())
+
+
+def test_w8a8_int32_accumulator_headroom_k4096():
+    """k = 4096 full-saturation worst case: 4096 * 127 * 127 ≈ 6.6e7
+    stays far inside int32 — the kernel's int32 accumulation must be
+    exact (bit-equal to a fp64 integer sum)."""
+    m, n, k = 4, 128, 4096
+    # Worst-case payloads: every product at the grid's extreme.
+    a = jnp.full((m, k), 4.0, jnp.float32)        # quantizes to +127
+    w = jnp.asarray(
+        np.where(np.arange(k)[:, None] % 2, 1.0, -1.0)
+        * np.ones((k, n)), jnp.float32)           # +-127 alternating
+    from repro.core.io_model import TileConfig
+
+    qw = quantize(w, axis=-2)
+    s = jnp.asarray(4.0 / 127.0, jnp.float32)
+    got = np.asarray(quant_matmul(
+        a, qw, act_scale=s, interpret=True,
+        tile=TileConfig(bm=8, bn=128, bk=1024)))
+    # Exact integer expectation: s_a * s_b * sum(x_q * w_q), in fp64.
+    xq = np.full((m, k), 127.0)
+    wq = np.asarray(qw.data, np.float64)
+    ref = (float(s) * np.asarray(qw.scale, np.float64)) * (xq @ wq)
+    np.testing.assert_allclose(got, ref.astype(np.float32), rtol=1e-6)
+
+
+def test_w8a8_matmul_with_fused_epilogue_composes():
+    """'ab' dequant first, then bias/act/residual in real units — on the
+    static-activation path with leading batch dims via ca_matmul."""
+    import dataclasses as dc
+
+    m, n, k = 24, 64, 80
+    x = _randn((2, 12, k), 60)
+    qw = quantize(_randn((k, n), 61), axis=-2)
+    s = _static_scale_for(x.reshape(m, k))
+    qw8 = dc.replace(qw, act_scale=s, act_block=0)
+    epi = Epilogue(bias=_randn((n,), 62), activation="silu",
+                   residual=_randn((2, 12, n), 63))
+    with gemm_mode("xla"):
+        y1 = ca_matmul(x, qw8, epilogue=epi)
+    with gemm_mode("interpret"):
+        y2 = ca_matmul(x, qw8, epilogue=epi)
+    assert y1.shape == (2, 12, n)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-3)
+
+
+def test_attach_act_scales_and_stacked_slicing():
+    """attach_act_scales writes per-site scales onto matching QTensors
+    (layer-stacked ones broadcast over layers so lax.scan slices them);
+    unmatched sites stay weight-only."""
+    from repro.quant import activation_site, attach_act_scales
+
+    q2 = quantize(_randn((40, 24), 64), axis=-2)          # site k40n24
+    q3 = quantize(_randn((3, 40, 24), 65), axis=-2)       # stacked, same
+    qo = quantize(_randn((16, 8), 66), axis=-2)           # uncalibrated
+    scales = {activation_site(q2.shape): jnp.asarray(0.05, jnp.float32)}
+    tree = attach_act_scales({"a": q2, "b": q3, "c": qo}, scales)
+    assert float(tree["a"].act_scale) == pytest.approx(0.05)
+    assert tree["b"].act_scale.shape == (3,)
+    assert tree["c"].act_scale is None
+    sliced = tree["b"][1]
+    assert isinstance(sliced, QTensor) and sliced.act_scale.shape == ()
+    # scan over the stacked QTensor threads the act_scale leaf too
+    def body(c, q):
+        return c, q.act_scale
+    _, scs = jax.lax.scan(body, 0, tree["b"])
+    assert scs.shape == (3,)
+
+
+def test_serve_engine_w8a8_calibrates_and_generates():
+    """ServeEngine(quantize_activations=True): startup calibration over
+    sample traffic -> static a-scales on every projection -> int8w_int8a
+    warmup keys -> end-to-end generation, logits close to dense."""
+    from repro.models import common as cm
+    from repro.models import model as M
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = _tiny_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    qparams = cm.quantize_params(params)
+    eng = ServeEngine(qparams, cfg, batch_size=1, max_len=16,
+                      quantize_activations=True, calibration_batches=2)
+    assert eng.quantized and eng.w8a8
+    # every quantized projection site was observed and annotated
+    assert eng.calibration_sites
+    qt = [v for v in eng.params.values() if isinstance(v, QTensor)]
+    assert qt and all(q.act_scale is not None for q in qt)
+    # warmup planned the w8a8 variants: composite dtype + dqab tags,
+    # and no rms prologue (the norm runs via XLA before quantization)
+    w8a8_keys = [key for key in eng.gemm_plan_sources
+                 if "int8w_int8a" in key]
+    assert w8a8_keys and any("dqab" in key for key in w8a8_keys)
+    assert not any("rms>" in key for key in w8a8_keys)
+    eng.submit(Request(uid=0, prompt=np.arange(5) % 500, max_new_tokens=3))
+    done = eng.run()
+    assert len(done[0].generated) == 3
+    # accuracy: w8a8 logits stay close to the dense model's
+    toks = jnp.asarray(np.arange(8)[None] % 500, jnp.int32)
+    ld, _ = M.prefill(params, {"tokens": toks}, cfg, max_len=16)
+    lq, _ = M.prefill(eng.params, {"tokens": toks}, cfg, max_len=16)
+    a, b = np.asarray(ld)[0], np.asarray(lq)[0]
+    cos = (a * b).sum(-1) / (np.linalg.norm(a, axis=-1)
+                             * np.linalg.norm(b, axis=-1))
+    assert (cos > 0.99).all(), cos
+
+
+def test_w8a8_requires_weight_quantized_params():
+    from repro.models import model as M
+    from repro.serve.engine import ServeEngine
+
+    cfg = _tiny_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    with pytest.raises(AssertionError, match="quantize_activations"):
+        ServeEngine(params, cfg, batch_size=1, max_len=16,
+                    quantize_activations=True)

@@ -98,6 +98,58 @@ def test_registry_dtype_b_resolves_distinctly(tmp_path):
     assert same.key == plain.key
 
 
+def test_registry_dtype_a_composite_key(tmp_path):
+    """dtype_a keys the w8a8 plan under int8w_int8a — distinct from both
+    the plain and the weight-only composite keys; a lone dtype_a (no
+    int8 weight to pair with) is rejected."""
+    r = _tuned_registry(tmp_path, [], autotune_enabled=False)
+    w8 = r.resolve_full(37, 1024, 1024, dtype=jnp.bfloat16,
+                        dtype_b=jnp.int8, epilogue="dqb")
+    w8a8 = r.resolve_full(37, 1024, 1024, dtype=jnp.bfloat16,
+                          dtype_b=jnp.int8, dtype_a=jnp.int8,
+                          epilogue="dqab")
+    assert "int8w_int8a" in w8a8.key and "int8w_bf16a" in w8.key
+    assert w8a8.key != w8.key
+    # exact literal form is part of the persistent-cache contract
+    assert w8a8.key == \
+        "tpu-v5e/int8w_int8a/plus_times/dqab/nn/m64n1024k1024"
+    with pytest.raises(ValueError, match="dtype_a requires dtype_b"):
+        r.resolve_full(37, 1024, 1024, dtype=jnp.bfloat16,
+                       dtype_a=jnp.int8)
+
+
+def test_space_w8a8_itemsize_budget():
+    """int8 A *and* B operands shrink both stream buffers: candidates
+    stay inside VMEM under the w8a8 accounting and the feasible tile set
+    is at least as wide as the weight-only one."""
+    cands = candidate_tile_configs(37, 4096, 4096, dtype_in=jnp.bfloat16,
+                                   dtype_b=jnp.int8, dtype_a=jnp.int8,
+                                   top_n=6, epilogue="dqab")
+    assert cands
+    budget = 0.75 * V5E.vmem_bytes
+    for c in cands:
+        assert tile_vmem_bytes(c.bm, c.bn, c.bk, 2, 4,
+                               itemsize_b=1, itemsize_a=1) <= budget
+    w8_only = candidate_tile_configs(37, 4096, 4096,
+                                     dtype_in=jnp.bfloat16,
+                                     dtype_b=jnp.int8, top_n=6,
+                                     epilogue="dqb")
+    assert max(c.bn for c in cands) >= max(c.bn for c in w8_only)
+
+
+def test_time_tile_w8a8_variant():
+    """time_tile(dtype_a=int8, dqab tag) must run the real w8a8 kernel
+    (int8 A operand, unit a-scales) without error."""
+    from repro.tuning.autotune import time_tile
+
+    tile = solve_tile_config(16, 64, 128, dtype_in=jnp.bfloat16,
+                             dtype_b=jnp.int8, dtype_a=jnp.int8)
+    t = time_tile(16, 64, 128, tile, dtype=jnp.bfloat16,
+                  epilogue="dqab", dtype_b=jnp.int8, dtype_a=jnp.int8,
+                  interpret=True, warmup=0, iters=1)
+    assert t > 0
+
+
 def test_space_mixed_itemsize_budget():
     """int8 B operands shrink the stream budget: every candidate stays
     inside VMEM under the *mixed* accounting, and the feasible bn at
@@ -477,12 +529,26 @@ def test_model_gemm_shapes_and_warmup(tmp_path):
     assert (32, cfg.d_model, cfg.d_ff, "dqb+res", "nn", "int8") in qloads
     assert all(len(w) == 6 for w in qloads)  # all forward loads are 'nn'
 
+    # w8a8 variants: dqab stages, a trailing activation dtype, and no
+    # rms prologue (the w8a8 serve path normalizes via XLA before the
+    # quantize-on-entry, so the kernel it issues carries no rms> tag)
+    aloads = quantize_workloads(loads, acts=True)
+    assert (32, cfg.d_ff, cfg.d_model, "glu.silu(dqab|dqab)", "nn",
+            "int8", "int8") in aloads
+    assert (32, cfg.d_model, cfg.d_ff, "dqab+res", "nn", "int8",
+            "int8") in aloads
+    assert all(len(w) == 7 for w in aloads)
+    assert not any("rms>" in w[3] for w in aloads)
+
     calls = []
     treg.set_registry(_tuned_registry(tmp_path, calls, autotune_enabled=False))
     sources = warmup_model(cfg, [32])
     assert sources and set(sources.values()) == {"analytic"}
     qsources = warmup_model(cfg, [32], quant=True)
     assert qsources and all("int8w_" in k for k in qsources)
+    asources = warmup_model(cfg, [32], quant="w8a8")
+    assert asources and all("int8w_int8a" in k for k in asources)
+    assert any("dqab" in k for k in asources)
     # Second warmup: served from the exact-shape analytic memo (the
     # resolver runs again but nothing is re-solved or re-timed).
     before = dict(treg.get_registry().stats)
