@@ -77,7 +77,14 @@ N = 16384  # paper's benchmark size
 # int8w on the decode shape: planned bytes incl. the int8 A panel,
 # roofline seconds at the MXU's 2x int8 rate, numerics vs the
 # fake-quant oracle; byte ratio gated at <= W8A8_RATIO_GATE).
-JSON_SCHEMA_VERSION = 5
+# v6: adds the top-level "model_error" section — per-entry measured_s /
+# model_predicted_s ratio for every record that carries a wall
+# measurement, plus geomean/min/max over the run.  This is the
+# quantified model-vs-measured gap the ROADMAP "performance model v2"
+# fit consumes (on this CPU container the ratios are orders of
+# magnitude — that is the point: the error is now a tracked number,
+# not an anecdote).
+JSON_SCHEMA_VERSION = 6
 DEFAULT_JSON_PATH = "BENCH_gemm.json"
 
 # The ragged serving shape of the fused section: 37 decode tokens through
@@ -712,6 +719,38 @@ def check_baseline(records, base_idx) -> int:
     return failures
 
 
+def model_error_section(records):
+    """Schema-v6 ``model_error``: measured vs model-predicted wall time.
+
+    One entry per record carrying both a ``median_s`` measurement and a
+    ``model_predicted_s`` roofline — ``error_ratio`` is measured/planned
+    (1.0 = perfect model; >> 1 on this CPU container, where the v5e
+    roofline is aspirational).  The geomean across the run is the single
+    scalar the perf-model-v2 fit will drive toward 1.0.
+    """
+    entries = []
+    for rec in records:
+        med = rec.get("median_s")
+        pred = rec.get("model_predicted_s")
+        if med is None or pred is None or med <= 0 or pred <= 0:
+            continue
+        entries.append({
+            "kind": rec["kind"],
+            "shape": rec["shape"],
+            "dtype": rec["dtype"],
+            "measured_s": float(med),
+            "model_predicted_s": float(pred),
+            "error_ratio": float(med) / float(pred),
+        })
+    section = {"n_entries": len(entries), "entries": entries}
+    if entries:
+        ratios = np.asarray([e["error_ratio"] for e in entries])
+        section["geomean_error_ratio"] = float(np.exp(np.log(ratios).mean()))
+        section["min_error_ratio"] = float(ratios.min())
+        section["max_error_ratio"] = float(ratios.max())
+    return section
+
+
 def write_json(records, path=DEFAULT_JSON_PATH):
     payload = {
         "schema": JSON_SCHEMA_VERSION,
@@ -719,6 +758,7 @@ def write_json(records, path=DEFAULT_JSON_PATH):
         "hardware_model": V5E.name,
         "backend": jax.default_backend(),
         "results": records,
+        "model_error": model_error_section(records),
     }
     p = pathlib.Path(path)
     p.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")

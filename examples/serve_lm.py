@@ -17,6 +17,13 @@ a startup calibration pass over sample traffic, attaches static a-scales
 to every projection, and serves through the int8xint8 ("ab") kernel —
 the MXU's 2x int8 compute rate on top of the byte win
 (``int8w_int8a`` cache keys).
+
+``--trace trace.jsonl`` writes Chrome-trace-event spans (warmup,
+calibration, per-request prefill/decode) — load the file in Perfetto or
+chrome://tracing.  ``--metrics`` prints the engine's metrics report
+(TTFT/TPOT histograms, prefill/decode split, tokens/s, plan sources) and
+enables the GEMM ledger so the report includes achieved-vs-planned
+bytes per serve step (see docs/OBSERVABILITY.md).
 """
 
 import argparse
@@ -27,6 +34,8 @@ import numpy as np
 from repro.configs import get_reduced
 from repro.models import common as cm
 from repro.models import model as M
+from repro.obs import enable_tracing, flush
+from repro.obs.ledger import get_ledger
 from repro.quant import QuantConfig
 from repro.serve.engine import Request, ServeEngine
 
@@ -39,9 +48,24 @@ def main(argv=None):
                          "fp32 per-channel scales, drain-fused dequant); "
                          "w8a8 additionally calibrates static activation "
                          "scales and serves int8xint8")
+    ap.add_argument("--trace", nargs="?", const="trace.jsonl", default=None,
+                    metavar="PATH",
+                    help="write Perfetto-loadable trace spans to PATH "
+                         "(default trace.jsonl)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="enable the GEMM ledger and print the metrics "
+                         "report after serving")
+    ap.add_argument("--archs", nargs="+",
+                    default=["stablelm-1.6b", "mamba2-370m", "zamba2-7b"],
+                    help="reduced configs to serve")
     args = ap.parse_args(argv)
 
-    for arch in ("stablelm-1.6b", "mamba2-370m", "zamba2-7b"):
+    if args.trace:
+        print(f"# tracing to {enable_tracing(args.trace)}")
+    if args.metrics:
+        get_ledger().enable()
+
+    for arch in args.archs:
         cfg = get_reduced(arch)
         params = M.init_params(cfg, jax.random.PRNGKey(0))
         note = ""
@@ -71,6 +95,12 @@ def main(argv=None):
         done = eng.run()
         outs = {u: r.generated for u, r in done.items()}
         print(f"{arch:16s} greedy={outs[0]} sampled={outs[1]}{note}")
+        if args.metrics:
+            print(f"--- metrics ({arch}) ---")
+            print(eng.metrics_report())
+    if args.trace:
+        flush()
+        print(f"# trace written to {args.trace}")
 
 
 if __name__ == "__main__":

@@ -21,16 +21,18 @@ benchmarks can report planned Q alongside compiled HLO bytes.
 
 from __future__ import annotations
 
+import dataclasses
 import threading
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.hardware import TpuTarget, V5E
 from repro.core.io_model import TileConfig
 from repro.kernels import ops as kops
-from repro.kernels.epilogue import Epilogue, apply_reference
+from repro.kernels.epilogue import Epilogue, IDENTITY, apply_reference
 from repro.kernels.program import (GemmProgramSpec, NO_PROLOGUE,
                                    PrologueSpec, RmsPrologue,
                                    apply_rms_reference, rms_row_scale)
@@ -81,6 +83,41 @@ def plan_for(m: int, n: int, k: int, dtype, hw: TpuTarget = V5E,
     return get_registry().resolve(m, n, k, dtype=dtype, hw=hw,
                                   epilogue=epilogue, layout=layout,
                                   dtype_b=dtype_b)
+
+
+def _ledger():
+    """The process-global GEMM ledger (imported lazily — ``repro.obs``
+    imports ``repro.core`` for the io_model, not the other way around)."""
+    from repro.obs.ledger import get_ledger
+
+    return get_ledger()
+
+
+def _quant_matmul_tag(epi_spec, prologue, act_scale):
+    """The program tag :func:`repro.kernels.ops.quant_matmul` will build
+    for these inputs, mirrored here so dispatch resolves the plan exactly
+    once and the ledger attributes it.  Returns ``(tag, dtype_a)`` —
+    ``dtype_a`` is int8 on the w8a8 ("ab") path.  A static activation
+    scale forces the norm out of the program (the rms prologue cannot
+    decorate an int8 stream), matching the kernel path's normalization
+    fold."""
+    deq = "ab" if act_scale is not None else "b"
+    spec = dataclasses.replace(epi_spec, dequant=deq)
+    pro = PrologueSpec(kind="rms") if (prologue is not None
+                                      and act_scale is None) else NO_PROLOGUE
+    tag = GemmProgramSpec(prologue=pro, branches=(spec,)).tag()
+    return tag, (jnp.int8 if deq == "ab" else None)
+
+
+def _quant_glu_tag(prologue, act_scale, activation):
+    """Same mirror for :func:`repro.kernels.ops.quant_glu_matmul`."""
+    deq = "ab" if act_scale is not None else "b"
+    branch = dataclasses.replace(IDENTITY, dequant=deq)
+    pro = PrologueSpec(kind="rms") if (prologue is not None
+                                      and act_scale is None) else NO_PROLOGUE
+    tag = GemmProgramSpec(prologue=pro, branches=(branch, branch),
+                          combine="glu", combine_activation=activation).tag()
+    return tag, (jnp.int8 if deq == "ab" else None)
 
 
 def _flatten_epilogue(epilogue: Optional[Epilogue], lead, m: int, n: int):
@@ -186,6 +223,19 @@ def ca_matmul(
         # A static-activation weight applies the identical
         # quantize-dequantize round trip to x, so this stays the exact
         # oracle of the w8a8 kernel's math.
+        led = _ledger()
+        if led.enabled and quant.fmt == "int8" and m > 0:
+            # Record under the program the kernel path *would* serve —
+            # the plan (and its planned bytes) is backend-independent.
+            tag, dtype_a = _quant_matmul_tag(
+                epilogue.spec() if epilogue is not None else IDENTITY,
+                prologue, act_scale)
+            led.record_gemm(
+                m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
+                dtype_b=jnp.int8, dtype_a=dtype_a, out_dtype=out_dtype,
+                scale_a_elements=(int(np.size(act_scale))
+                                  if act_scale is not None else 0),
+                scale_b_elements=int(np.size(quant.scale)))
         if prologue is not None:
             x = _apply_rms_xla(x, prologue)
         if act_scale is not None and quant.fmt == "int8":
@@ -204,7 +254,28 @@ def ca_matmul(
             prologue = None
         x2 = x.reshape(m, k)
         epi2 = _flatten_epilogue(epilogue, lead, m, n)
-        y2 = kops.quant_matmul(x2, quant, epi2,
+        # Plan here (not in ops) so the resolution happens exactly once
+        # and the ledger can attribute it; the tag mirrors the one
+        # quant_matmul builds, and the serve dtype is the *float* x dtype
+        # (ops quantizes after computing its key the same way).
+        from repro.tuning import get_registry  # lazy: tuning imports kernels
+
+        tag, dtype_a = _quant_matmul_tag(
+            epi2.spec() if epi2 is not None else IDENTITY,
+            prologue, act_scale)
+        res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
+                                          epilogue=tag, dtype_b=jnp.int8,
+                                          dtype_a=dtype_a)
+        led = _ledger()
+        if led.enabled:
+            led.record_gemm(
+                m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
+                dtype_b=jnp.int8, dtype_a=dtype_a, out_dtype=out_dtype,
+                scale_a_elements=(int(np.size(act_scale))
+                                  if act_scale is not None else 0),
+                scale_b_elements=int(np.size(quant.scale)),
+                resolution=res)
+        y2 = kops.quant_matmul(x2, quant, epi2, res.config,
                                interpret=(mode == "interpret"),
                                out_dtype=out_dtype, hw=hw,
                                prologue=prologue,
@@ -213,6 +284,16 @@ def ca_matmul(
         return y2.reshape(*lead, n).astype(out_dtype)
 
     if mode == "xla" or m == 0:
+        led = _ledger()
+        if led.enabled and m > 0 and not jnp.issubdtype(x.dtype,
+                                                        jnp.integer):
+            tag = GemmProgramSpec(
+                prologue=PrologueSpec(kind="rms") if prologue is not None
+                else NO_PROLOGUE,
+                branches=(epilogue.spec() if epilogue is not None
+                          else IDENTITY,)).tag()
+            led.record_gemm(m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
+                            out_dtype=out_dtype)
         if prologue is not None:
             x = _apply_rms_xla(x, prologue)
         acc = jnp.float32 if not jnp.issubdtype(x.dtype, jnp.integer) else jnp.int32
@@ -226,14 +307,19 @@ def ca_matmul(
     epi2 = _flatten_epilogue(epilogue, lead, m, n)
     # Plan here (not in ops) so the caller's hw target reaches the
     # registry; the key carries the full program tag (prologue included).
-    from repro.kernels.epilogue import IDENTITY
+    from repro.tuning import get_registry  # lazy: tuning imports kernels
 
     tag = GemmProgramSpec(
         prologue=PrologueSpec(kind="rms") if prologue is not None
         else NO_PROLOGUE,
         branches=(epi2.spec() if epi2 is not None else IDENTITY,)).tag()
-    tile = plan_for(m, n, k, x.dtype, hw, epilogue=tag)
-    y2 = kops.fused_matmul(x2, w, epi2, tile,
+    res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
+                                      epilogue=tag)
+    led = _ledger()
+    if led.enabled:
+        led.record_gemm(m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
+                        out_dtype=out_dtype, resolution=res)
+    y2 = kops.fused_matmul(x2, w, epi2, res.config,
                            interpret=(mode == "interpret"),
                            out_dtype=out_dtype, prologue=prologue)
     return y2.reshape(*lead, n).astype(out_dtype)
@@ -290,6 +376,28 @@ def ca_glu_matmul(
     kernel_ok = mode != "xla" and m > 0 and \
         (not quantized or (w_gate.fmt == "int8" and w_up.fmt == "int8"))
     if not kernel_ok:
+        led = _ledger()
+        if led.enabled and m > 0 and \
+                (not quantized or (w_gate.fmt == "int8"
+                                   and w_up.fmt == "int8")):
+            if quantized:
+                tag, dtype_a = _quant_glu_tag(prologue, act_scale,
+                                              activation)
+                led.record_gemm(
+                    m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
+                    dtype_b=jnp.int8, dtype_a=dtype_a, out_dtype=out_dtype,
+                    scale_a_elements=(int(np.size(act_scale))
+                                      if act_scale is not None else 0),
+                    scale_b_elements=(int(np.size(w_gate.scale))
+                                      + int(np.size(w_up.scale))))
+            else:
+                tag = GemmProgramSpec(
+                    prologue=PrologueSpec(kind="rms")
+                    if prologue is not None else NO_PROLOGUE,
+                    branches=(IDENTITY, IDENTITY), combine="glu",
+                    combine_activation=activation).tag()
+                led.record_gemm(m, n, k, x.dtype, tag=tag, mode=mode,
+                                hw=hw, out_dtype=out_dtype)
         if prologue is not None:
             x = _apply_rms_xla(x, prologue)
         if quantized and act_scale is not None and w_gate.fmt == "int8":
@@ -307,23 +415,44 @@ def ca_glu_matmul(
         prologue = None
     x2 = x.reshape(m, k)
     interpret = mode == "interpret"
+    from repro.tuning import get_registry  # lazy: tuning imports kernels
+
+    led = _ledger()
     if quantized:
+        # Resolve here (once) and hand the tile down, mirroring the tag
+        # quant_glu_matmul builds; serve dtype is the float x dtype.
+        tag, dtype_a = _quant_glu_tag(prologue, act_scale, activation)
+        res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
+                                          epilogue=tag, dtype_b=jnp.int8,
+                                          dtype_a=dtype_a)
+        if led.enabled:
+            led.record_gemm(
+                m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
+                dtype_b=jnp.int8, dtype_a=dtype_a, out_dtype=out_dtype,
+                scale_a_elements=(int(np.size(act_scale))
+                                  if act_scale is not None else 0),
+                scale_b_elements=(int(np.size(w_gate.scale))
+                                  + int(np.size(w_up.scale))),
+                resolution=res)
         y2 = kops.quant_glu_matmul(x2, w_gate, w_up, activation=activation,
-                                   prologue=prologue, interpret=interpret,
+                                   prologue=prologue, tile=res.config,
+                                   interpret=interpret,
                                    out_dtype=out_dtype, hw=hw,
                                    act_scale=act_scale,
                                    act_block=act_block or 0)
     else:
-        from repro.kernels.epilogue import IDENTITY
-
         tag = GemmProgramSpec(
             prologue=PrologueSpec(kind="rms") if prologue is not None
             else NO_PROLOGUE,
             branches=(IDENTITY, IDENTITY), combine="glu",
             combine_activation=activation).tag()
-        tile = plan_for(m, n, k, x.dtype, hw, epilogue=tag)
+        res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
+                                          epilogue=tag)
+        if led.enabled:
+            led.record_gemm(m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
+                            out_dtype=out_dtype, resolution=res)
         y2 = kops.glu_matmul(x2, w_gate, w_up, activation=activation,
-                             prologue=prologue, tile=tile,
+                             prologue=prologue, tile=res.config,
                              interpret=interpret, out_dtype=out_dtype)
     return y2.reshape(*lead, n).astype(out_dtype)
 
@@ -357,6 +486,13 @@ def ca_expert_matmul(
     assert x.shape[-3] == E and x.shape[-1] == k_w, (x.shape, w.shape)
     out_dtype = out_dtype or x.dtype
     if mode == "xla" or x.size == 0:
+        led = _ledger()
+        if led.enabled and x.size > 0:
+            # One record covering the whole einsum: E identical per-expert
+            # GEMMs (the kernel path records each via its inner ca_matmul).
+            led.record_gemm(x.size // (E * k_w), n, k_w, x.dtype,
+                            tag="none", mode=mode, hw=hw,
+                            out_dtype=out_dtype, calls=E)
         z = jnp.einsum("...ecd,edf->...ecf", x, w,
                        preferred_element_type=jnp.float32)
         return z.astype(out_dtype)
@@ -384,6 +520,14 @@ def ca_expert_glu_matmul(
     assert w_up.shape == w_gate.shape, (w_up.shape, w_gate.shape)
     out_dtype = out_dtype or x.dtype
     if mode == "xla" or x.size == 0:
+        led = _ledger()
+        if led.enabled and x.size > 0:
+            tag = GemmProgramSpec(branches=(IDENTITY, IDENTITY),
+                                  combine="glu",
+                                  combine_activation=activation).tag()
+            led.record_gemm(x.size // (E * k_w), n, k_w, x.dtype,
+                            tag=tag, mode=mode, hw=hw,
+                            out_dtype=out_dtype, calls=E)
         from repro.kernels.epilogue import act_fn
 
         g = jnp.einsum("...ecd,edf->...ecf", x, w_gate,

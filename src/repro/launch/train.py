@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config, get_reduced
 from repro.data.pipeline import DataConfig, batch_for_model
+from repro.obs import get_metrics, span
 from repro.optim import adamw
 from repro.runtime.fault import HeartbeatMonitor
 from repro.train import step as T
@@ -61,13 +62,28 @@ def run_training(
         print(f"resumed from checkpoint at step {start}")
 
     losses = []
+    obs = get_metrics()
+    step_hist = obs.histogram("train.step_seconds",
+                              "Wall time of one optimizer step")
+    steps_done = obs.counter("train.steps_total", "Optimizer steps run")
+    loss_gauge = obs.gauge("train.loss", "Most recent training loss")
     t0 = time.time()
     for i in range(start, steps):
+        t_step = time.perf_counter()
         batch = batch_for_model(cfg, data_cfg, i)
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        state, metrics = step_fn(state, batch)
+        with span("train.step", step=i, arch=arch):
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
         mon.beat(0, i)
         losses.append(float(metrics["loss"]))
+        step_hist.observe(time.perf_counter() - t_step)
+        steps_done.inc()
+        loss_gauge.set(losses[-1])
+        obs.gauge("train.tokens_per_second",
+                  "Throughput of the last optimizer step").set(
+                      data_cfg.global_batch * data_cfg.seq_len
+                      / max(time.perf_counter() - t_step, 1e-9))
         if fail_at is not None and i == fail_at:
             raise RuntimeError(f"injected failure at step {i}")
         if mgr is not None and (i + 1) % ckpt_every == 0:

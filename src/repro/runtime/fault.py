@@ -17,6 +17,17 @@ import math
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.obs.metrics import get_metrics
+
+
+def _fault_counter(event: str):
+    """Labeled child of the fault-event counter — a fault-injection run
+    is auditable from the metrics snapshot alone."""
+    return get_metrics().counter(
+        "fault.events_total",
+        "Fault-runtime events by kind (injected/restart/resize)").labels(
+            kind=event)
+
 
 @dataclasses.dataclass
 class HostStatus:
@@ -54,9 +65,14 @@ class HeartbeatMonitor:
 
     def dead_hosts(self, now: Optional[float] = None) -> List[int]:
         now = self.clock() if now is None else now
-        return [i for i, h in self.hosts.items()
+        dead = [i for i, h in self.hosts.items()
                 if h.last_beat is not None
                 and now - h.last_beat > self.timeout_s]
+        get_metrics().gauge(
+            "fault.dead_hosts",
+            "Hosts past the heartbeat timeout at last check").set(
+                len(dead))
+        return dead
 
     def stragglers(self) -> List[int]:
         """Hosts whose mean step time is straggler_z sigmas above fleet."""
@@ -82,7 +98,10 @@ class FailureInjector:
         self.fail_at_steps = dict(fail_at_steps)
 
     def check(self, step: int) -> Optional[str]:
-        return self.fail_at_steps.pop(step, None)
+        kind = self.fail_at_steps.pop(step, None)
+        if kind is not None:
+            _fault_counter("injected:" + kind.split(":")[0]).inc()
+        return kind
 
 
 class SimulatedFailure(RuntimeError):
@@ -135,10 +154,12 @@ class TrainSupervisor:
             except SimulatedFailure:
                 restarts += 1
                 events.append((step, "crash->restart"))
+                _fault_counter("restart").inc()
                 if restarts > self.max_restarts:
                     raise
             except ResizeEvent as e:
                 resizes += 1
                 n_hosts = e.new_n_hosts
                 events.append((step, f"resize->{n_hosts}"))
+                _fault_counter("resize").inc()
         return SupervisorReport(restarts, resizes, step, events)

@@ -11,6 +11,8 @@ cache, rolling SWA cache, O(1) SSM state — whatever the config dictates).
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -19,6 +21,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.obs import get_metrics, span
+from repro.obs.ledger import get_ledger
 from repro.quant import (ActivationCalibration, QTensor, QuantConfig,
                          attach_act_scales)
 from repro.tuning import warmup_model
@@ -60,13 +64,21 @@ class ServeEngine:
         # steps trace thereafter takes the int8xint8 ("ab") kernel path:
         # the MXU's 2x int8 compute rate on top of PR 3's byte win.
         self.w8a8 = False
+        metrics = get_metrics()
         if quantize_activations:
             assert self.quantized, \
                 "quantize_activations requires weight-quantized params " \
                 "(models.common.quantize_params first)"
             self.act_qconfig = act_qconfig or QuantConfig(act_fmt="int8")
             assert self.act_qconfig.quantize_activations, self.act_qconfig
-            self.params = self._calibrate_activations(calibration_batches)
+            t0 = time.perf_counter()
+            with span("serve.calibrate", batches=calibration_batches):
+                self.params = self._calibrate_activations(
+                    calibration_batches)
+            metrics.gauge(
+                "serve.calibration_seconds",
+                "Wall time of the w8a8 static-activation calibration "
+                "pass").set(time.perf_counter() - t0)
             self.w8a8 = True
         # Serve-time warmup: resolve every hot-path GEMM tile through the
         # kernel-config registry (cache > autotune > analytic) before the
@@ -83,16 +95,40 @@ class ServeEngine:
         # projections will issue.  The jitted prefill/decode steps below
         # fetch the same configs at trace time.
         quant_mode = "w8a8" if self.w8a8 else self.quantized
-        self.gemm_plan_sources = (
-            warmup_model(cfg, [batch_size, batch_size * max_len],
-                         quant=quant_mode)
-            if warmup_gemms else {})
+        t0 = time.perf_counter()
+        with span("serve.warmup", quant=str(quant_mode)):
+            self.gemm_plan_sources = (
+                warmup_model(cfg, [batch_size, batch_size * max_len],
+                             quant=quant_mode)
+                if warmup_gemms else {})
+        metrics.gauge(
+            "serve.warmup_seconds",
+            "Wall time of the GEMM plan warmup (registry prewarm)").set(
+                time.perf_counter() - t0)
+        plan_counter = metrics.counter(
+            "serve.gemm_plan_total",
+            "Warmup-resolved GEMM plans by source (cache/autotune/"
+            "analytic)")
+        for src in self.gemm_plan_sources.values():
+            plan_counter.labels(source=src).inc()
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, b, cfg, max_len=max_len))
         self._decode = jax.jit(
             lambda p, t, c, s: M.decode_step(p, t, c, s, cfg))
         self.queue: List[Request] = []
         self.done: Dict[int, Request] = {}
+        self._submit_t: Dict[int, float] = {}
+
+    @functools.cached_property
+    def _sample_table(self) -> jax.Array:
+        """Deterministic demo embedding table for embeds-frontend configs
+        (seed 0, the historical convention) — built once and shared by
+        calibration sampling and the serve loop; ``run()`` used to
+        rebuild this (vocab, d) randn per request."""
+        return jnp.asarray(
+            np.random.RandomState(0).randn(self.cfg.vocab_size,
+                                           self.cfg.d_model) * 0.02,
+            self.cfg.dtype())
 
     def _sample_inputs(self, rng: np.random.RandomState, length: int):
         """One prefill input of sample traffic (tokens or embeds)."""
@@ -100,11 +136,6 @@ class ServeEngine:
                                        (1, length)), jnp.int32)
         if self.cfg.frontend == "tokens":
             return {"tokens": toks}
-        if not hasattr(self, "_sample_table"):
-            d = self.cfg.d_model
-            self._sample_table = jnp.asarray(
-                np.random.RandomState(0).randn(self.cfg.vocab_size, d)
-                * 0.02, self.cfg.dtype())
         return {"embeds": self._sample_table[toks]}
 
     def _calibrate_activations(self, n_batches: int):
@@ -133,6 +164,7 @@ class ServeEngine:
     def submit(self, req: Request):
         req.generated = []
         self.queue.append(req)
+        self._submit_t[req.uid] = time.perf_counter()
 
     def _sample(self, logits: jax.Array, temperature: float) -> int:
         logits = logits[..., :self.cfg.vocab_size]
@@ -145,33 +177,117 @@ class ServeEngine:
 
     def run(self) -> Dict[int, Request]:
         """Serve everything in the queue (batch-of-1 prefill, batched
-        decode loop per request group of equal prompt length)."""
+        decode loop per request group of equal prompt length).
+
+        Fully instrumented: queue wait, TTFT (dequeue to first sampled
+        token — prefill plus one sample), per-output-token decode latency
+        (TPOT), and the prefill/decode wall split land in the metrics
+        registry; each phase runs under a trace span and a GEMM-ledger
+        step, so ``metrics_report()`` can state achieved bytes/s against
+        the planned I/O model.
+        """
+        metrics = get_metrics()
+        ledger = get_ledger()
+        queue_wait = metrics.histogram(
+            "serve.queue_wait_seconds", "submit() to dequeue latency")
+        ttft = metrics.histogram(
+            "serve.ttft_seconds", "Dequeue to first sampled token")
+        tpot = metrics.histogram(
+            "serve.tpot_seconds",
+            "Per-output-token decode latency (decode step + sample)")
+        prefill_s = metrics.counter(
+            "serve.prefill_seconds_total", "Wall time in prefill+sample")
+        decode_s = metrics.counter(
+            "serve.decode_seconds_total", "Wall time in the decode loop")
+        n_tokens = metrics.counter(
+            "serve.tokens_generated_total", "Sampled output tokens")
+        n_requests = metrics.counter(
+            "serve.requests_total", "Requests served to completion")
+        t_run = time.perf_counter()
         while self.queue:
             req = self.queue.pop(0)
-            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            if self.cfg.frontend == "tokens":
-                pre_in = {"tokens": toks}
-            else:
-                d = self.cfg.d_model
-                rng = np.random.RandomState(0)
-                table = jnp.asarray(
-                    rng.randn(self.cfg.vocab_size, d) * 0.02,
-                    self.cfg.dtype())
-                pre_in = {"embeds": table[toks]}
-            logits, cache = self._prefill(self.params, pre_in)
-            nxt = self._sample(logits, req.temperature)
-            req.generated.append(nxt)
-            pos = toks.shape[1]
-            for _ in range(req.max_new_tokens - 1):
+            t_req = time.perf_counter()
+            submitted = self._submit_t.pop(req.uid, None)
+            if submitted is not None:
+                queue_wait.observe(t_req - submitted)
+            with span("serve.request", uid=req.uid,
+                      prompt_len=len(req.prompt),
+                      max_new_tokens=req.max_new_tokens):
+                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
                 if self.cfg.frontend == "tokens":
-                    step_in = {"tokens": jnp.full((1, 1), nxt, jnp.int32)}
+                    pre_in = {"tokens": toks}
                 else:
-                    step_in = {"embeds": table[jnp.full((1, 1), nxt,
-                                                        jnp.int32)]}
-                logits, cache = self._decode(self.params, step_in, cache,
-                                             jnp.int32(pos))
-                nxt = self._sample(logits, req.temperature)
+                    pre_in = {"embeds": self._sample_table[toks]}
+                with span("serve.prefill", uid=req.uid,
+                          length=toks.shape[1]), \
+                        ledger.step("prefill"):
+                    logits, cache = self._prefill(self.params, pre_in)
+                    nxt = self._sample(logits, req.temperature)
+                t_first = time.perf_counter()
+                ttft.observe(t_first - t_req)
+                prefill_s.inc(t_first - t_req)
                 req.generated.append(nxt)
-                pos += 1
+                n_tokens.inc()
+                pos = toks.shape[1]
+                with span("serve.decode", uid=req.uid,
+                          tokens=req.max_new_tokens - 1):
+                    for _ in range(req.max_new_tokens - 1):
+                        t_tok = time.perf_counter()
+                        if self.cfg.frontend == "tokens":
+                            step_in = {"tokens": jnp.full((1, 1), nxt,
+                                                          jnp.int32)}
+                        else:
+                            step_in = {"embeds": self._sample_table[
+                                jnp.full((1, 1), nxt, jnp.int32)]}
+                        with ledger.step("decode"):
+                            logits, cache = self._decode(
+                                self.params, step_in, cache,
+                                jnp.int32(pos))
+                            nxt = self._sample(logits, req.temperature)
+                        dt = time.perf_counter() - t_tok
+                        tpot.observe(dt)
+                        decode_s.inc(dt)
+                        n_tokens.inc()
+                        req.generated.append(nxt)
+                        pos += 1
             self.done[req.uid] = req
+            n_requests.inc()
+        elapsed = time.perf_counter() - t_run
+        if elapsed > 0:
+            metrics.gauge(
+                "serve.tokens_per_second",
+                "Output tokens over the last run()'s wall time").set(
+                    n_tokens.value / elapsed)
         return self.done
+
+    def metrics_snapshot(self) -> Dict[str, dict]:
+        """JSON-ready view of everything observed: the metrics registry
+        plus the GEMM ledger's per-step aggregates (record list elided —
+        ``get_ledger().snapshot()`` has the full dump)."""
+        led = get_ledger()
+        return {
+            "metrics": get_metrics().snapshot(),
+            "gemm_plan_sources": dict(self.gemm_plan_sources),
+            "ledger": {"enabled": led.enabled,
+                       "aggregate": led.aggregate(),
+                       "steps": led.steps_summary()},
+        }
+
+    def metrics_report(self) -> str:
+        """Human-readable serve report: metric lines (TTFT/TPOT
+        histograms, prefill/decode split, tokens/s, plan sources) plus
+        one line per GEMM-ledger step label with achieved GB/s and model
+        error when the ledger is enabled."""
+        lines = [get_metrics().report()]
+        led = get_ledger()
+        steps = led.steps_summary() if led.enabled else {}
+        for label, agg in sorted(steps.items()):
+            line = (f"ledger.{label}: steps={agg['steps']} "
+                    f"gemms={agg['gemm_calls']} "
+                    f"planned={agg['planned_bytes'] / 1e6:.2f}MB")
+            if "achieved_gbps" in agg:
+                line += f" achieved={agg['achieved_gbps']:.3f}GB/s"
+            if "model_error" in agg:
+                line += f" model_error={agg['model_error']:.3g}x"
+            lines.append(line)
+        return "\n".join(l for l in lines if l)

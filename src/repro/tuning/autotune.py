@@ -249,24 +249,40 @@ def autotune_gemm(
     ranked = sorted(candidates, key=prior)
     best_prior = prior(ranked[0])
 
+    from repro.obs import get_metrics, span
+
     trials: List[Tuple[TileConfig, float]] = []
     best: Optional[Tuple[TileConfig, float]] = None
     since_improved = 0
     early = False
-    for tile in ranked:
-        t = float(timer(tile))
-        trials.append((tile, t))
-        if best is None or t < best[1]:
-            best = (tile, t)
-            since_improved = 0
-        else:
-            since_improved += 1
-        if best[1] <= early_stop_factor * best_prior:
-            early = True
-            break
-        if since_improved >= patience:
-            early = True
-            break
+    t_tune = time.perf_counter()
+    with span("tune.gemm", m=m, n=n, k=k,
+              dtype=jnp.dtype(dtype).name, epilogue=epilogue,
+              layout=layout, candidates=len(ranked)):
+        for tile in ranked:
+            with span("tune.trial", bm=tile.bm, bn=tile.bn, bk=tile.bk,
+                      order=tile.order):
+                t = float(timer(tile))
+            trials.append((tile, t))
+            if best is None or t < best[1]:
+                best = (tile, t)
+                since_improved = 0
+            else:
+                since_improved += 1
+            if best[1] <= early_stop_factor * best_prior:
+                early = True
+                break
+            if since_improved >= patience:
+                early = True
+                break
+
+    metrics = get_metrics()
+    metrics.counter("tuning.autotune_trials_total",
+                    "Candidate tiles measured by the autotuner").inc(
+                        len(trials))
+    metrics.histogram("tuning.autotune_seconds",
+                      "Wall time of one autotune_gemm call").observe(
+                          time.perf_counter() - t_tune)
 
     assert best is not None
     return TuneResult(config=best[0], measured_s=best[1],

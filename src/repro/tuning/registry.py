@@ -27,11 +27,18 @@ import jax.numpy as jnp
 
 from repro.core.hardware import TpuTarget, V5E
 from repro.core.io_model import TileConfig, solve_tile_config
+from repro.obs.metrics import get_metrics
 from repro.tuning import autotune as _autotune
 from repro.tuning import space as _space
 from repro.tuning.cache import CacheEntry, TuningCache, cache_key
 
 _ENV_AUTOTUNE = "REPRO_AUTOTUNE"
+
+
+def _count(name: str, description: str, **labels) -> None:
+    """Increment an obs counter (labeled child when labels given)."""
+    c = get_metrics().counter(name, description)
+    (c.labels(**labels) if labels else c).inc()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,10 +122,16 @@ class KernelRegistry:
             hit = self._mem.get(key)
             if hit is not None:
                 self.stats["cache"] += 1
+                _count("tuning.cache_hit_total",
+                       "Registry resolutions served from cache",
+                       tier="memory")
                 return hit
             hit = self._analytic.get(exact)
             if hit is not None:
                 self.stats["analytic"] += 1
+                _count("tuning.solver_fallback_total",
+                       "Resolutions answered by the analytic model",
+                       tier="memo")
                 return hit
             # Persistent cache (only ever holds measured results), so a
             # process that tuned yesterday serves hits today without
@@ -128,8 +141,13 @@ class KernelRegistry:
                 res = Resolution(entry.to_tile(), "cache", key)
                 self._mem[key] = res
                 self.stats["cache"] += 1
+                _count("tuning.cache_hit_total",
+                       "Registry resolutions served from cache",
+                       tier="persistent")
                 return res
             autotune = self.autotune_enabled
+        _count("tuning.cache_miss_total",
+               "Resolutions that found no cached config")
 
         # Tuning (kernel compiles + timed runs, possibly minutes) and the
         # analytic solve both run OUTSIDE the lock so concurrent threads
@@ -148,12 +166,17 @@ class KernelRegistry:
                 prior = self._mem.get(key)
                 if prior is not None:  # lost the race: keep the first win
                     self.stats["cache"] += 1
+                    _count("tuning.cache_hit_total",
+                           "Registry resolutions served from cache",
+                           tier="memory")
                     return prior
                 self.cache.put(key, CacheEntry.from_tile(
                     result.config, measured_s=result.measured_s,
                     predicted_s=result.predicted_s, n_tried=result.n_tried))
                 self._mem[key] = res
                 self.stats["autotune"] += 1
+                _count("tuning.autotune_total",
+                       "Resolutions answered by a fresh autotune run")
                 return res
 
         if semiring == "plus_times" and epilogue == "none":
@@ -171,6 +194,8 @@ class KernelRegistry:
         with self._lock:
             self._analytic[exact] = res
             self.stats["analytic"] += 1
+        _count("tuning.solver_fallback_total",
+               "Resolutions answered by the analytic model", tier="solve")
         return res
 
     def resolve(self, m: int, n: int, k: int, dtype=jnp.bfloat16,

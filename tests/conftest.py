@@ -43,6 +43,25 @@ def _isolated_kernel_registry(tmp_path, monkeypatch):
     treg.reset_registry()
 
 
+@pytest.fixture(autouse=True)
+def _isolated_obs(monkeypatch):
+    """Fresh metrics registry / ledger / tracer per test.
+
+    Observability state is global by design (hot paths hook in without
+    plumbing); tests must not see each other's counters or spans."""
+    from repro import obs
+
+    monkeypatch.delenv("REPRO_LEDGER", raising=False)
+    monkeypatch.delenv("REPRO_TRACE", raising=False)
+    obs.reset_metrics()
+    obs.reset_ledger()
+    obs.disable_tracing()
+    yield
+    obs.reset_metrics()
+    obs.reset_ledger()
+    obs.disable_tracing()
+
+
 @pytest.fixture
 def rng():
     return np.random.RandomState(0)

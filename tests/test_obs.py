@@ -1,0 +1,310 @@
+"""Observability stack: metrics math, trace round trip, GEMM ledger
+agreement with the io_model, and the serve engine's end-to-end report.
+
+The ledger tests pin the PR's acceptance bar: the planned bytes the
+dispatch hook records must equal the io_model expressions the benchmarks
+gate on — exactly, not approximately — for the three CI-gated workloads
+(fused bias+gelu, one-pass GLU, w8a8).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gemm import ca_expert_matmul, ca_glu_matmul, ca_matmul
+from repro.core.io_model import (epilogue_q_elements, io_volume_bytes,
+                                 io_volume_elements,
+                                 io_volume_elements_program)
+from repro.obs import (enable_ledger, get_ledger, get_metrics, read_trace,
+                       span, tracing_enabled)
+from repro.obs import trace as trace_mod
+from repro.obs.metrics import Histogram
+from repro.obs.trace import disable_tracing, enable_tracing, instant
+from repro.tuning import get_registry
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_counter_inc_labels_and_negative():
+    c = get_metrics().counter("t.requests", "test counter")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    c.labels(kind="a").inc(2)
+    c.labels(kind="b").inc()
+    # parent value sums the label children; children stay separate.
+    assert c.value == 6.5
+    assert c.labels(kind="a").value == 2
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_set_add_none_until_written():
+    g = get_metrics().gauge("t.level", "test gauge")
+    assert g.value is None
+    g.set(4.0)
+    g.add(-1.5)
+    assert g.value == 2.5
+
+
+def test_registry_kind_mismatch_raises():
+    reg = get_metrics()
+    reg.counter("t.same_name", "first as counter")
+    with pytest.raises(TypeError):
+        reg.histogram("t.same_name", "now as histogram")
+
+
+def test_histogram_bucket_bounds_and_index():
+    h = Histogram("t.h", "bucket math")
+    # Bucket i holds (base*factor^(i-1), base*factor^i]: an exact bound
+    # lands in its own bucket, epsilon above lands in the next.
+    for i in (0, 3, 10):
+        upper = h.bucket_upper(i)
+        assert upper == h.base * h.factor ** i
+        assert h._index(upper) == i
+        assert h._index(upper * 1.01) == i + 1
+    assert h._index(-0.5) == -1      # <=0 values must not crash
+    h.observe(-0.5)
+    assert h.count == 1 and h.snapshot()["min"] == -0.5
+
+
+def test_histogram_stats_and_percentiles():
+    h = Histogram("t.lat", "latencies")
+    vals = [0.001, 0.002, 0.004, 0.008, 0.1]
+    for v in vals:
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == len(vals)
+    assert snap["sum"] == pytest.approx(sum(vals))
+    assert snap["min"] == min(vals) and snap["max"] == max(vals)
+    assert snap["mean"] == pytest.approx(np.mean(vals))
+    # percentile returns the holding bucket's upper bound: an exact
+    # over-estimate of at most one factor, clamped to the observed max.
+    p50 = h.percentile(50)
+    assert np.median(vals) <= p50 <= np.median(vals) * h.factor
+    assert h.percentile(100) == max(vals)
+    assert h.percentile(0) <= min(vals) * h.factor
+    empty = Histogram("t.empty", "")
+    assert empty.percentile(50) is None
+
+
+def test_metrics_snapshot_and_report():
+    reg = get_metrics()
+    reg.counter("t.a", "").inc(3)
+    reg.histogram("t.b", "").observe(0.5)
+    snap = reg.snapshot()
+    assert snap["t.a"] == {"type": "counter", "value": 3}
+    assert snap["t.b"]["count"] == 1
+    rep = reg.report()
+    assert "t.a: 3" in rep and "t.b: count=1" in rep
+
+
+# ---------------------------------------------------------------------------
+# trace
+# ---------------------------------------------------------------------------
+
+def test_span_is_shared_noop_when_disabled():
+    assert not tracing_enabled()
+    s1, s2 = span("a"), span("b", attr=1)
+    assert s1 is s2 is trace_mod._NOOP
+    with s1:                           # and it is a working context manager
+        pass
+
+
+def test_trace_roundtrip_and_nesting(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    enable_tracing(path)
+    assert tracing_enabled()
+    with span("outer", phase="test"):
+        with span("inner", i=0):
+            pass
+        instant("tick", note="x")
+    disable_tracing()
+    assert not tracing_enabled()
+
+    events = read_trace(path)
+    by_name = {e["name"]: e for e in events}
+    assert set(by_name) == {"outer", "inner", "tick"}
+    for e in events:
+        assert e["cat"] == "repro"
+        assert {"name", "ph", "ts", "pid", "tid"} <= set(e)
+    inner, outer = by_name["inner"], by_name["outer"]
+    assert inner["ph"] == outer["ph"] == "X"
+    assert by_name["tick"]["ph"] == "i"
+    assert outer["args"] == {"phase": "test"}
+    # Nesting is interval containment on one tid (how Perfetto rebuilds
+    # the flame graph from "X" events).
+    assert inner["tid"] == outer["tid"]
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-6
+    # The array-format file is also one valid JSON document.
+    import json
+    text = open(path).read().rstrip().rstrip(",")
+    assert len(json.loads(text + "\n]")) == len(events)
+
+
+# ---------------------------------------------------------------------------
+# GEMM ledger vs io_model (the CI-gated bench workloads, xla mode)
+# ---------------------------------------------------------------------------
+
+def test_ledger_disabled_is_noop(rng):
+    led = get_ledger()
+    assert not led.enabled
+    assert led.record_gemm(8, 8, 8, jnp.float32, tag="none") is None
+    ca_matmul(jnp.asarray(rng.randn(8, 16), jnp.float32),
+              jnp.asarray(rng.randn(16, 8), jnp.float32))
+    assert led.records == []
+    assert get_metrics().snapshot() == {}
+
+
+def test_ledger_fused_bytes_match_io_model(rng):
+    from repro.kernels.epilogue import Epilogue
+    from repro.kernels.program import program_cost
+
+    led = enable_ledger()
+    m, n, k = 37, 1024, 1024          # the fused-epilogue CI gate shape
+    x = jnp.asarray(rng.randn(m, k), jnp.float32)
+    w = jnp.asarray(rng.randn(k, n), jnp.float32)
+    b = jnp.asarray(rng.randn(n), jnp.float32)
+    ca_matmul(x, w, epilogue=Epilogue(bias=b, activation="gelu"))
+    (rec,) = led.records
+    assert rec.tag == "bias+gelu" and rec.dtype == "float32"
+    assert rec.config_source in ("cache", "autotune", "analytic")
+    tile = get_registry().resolve(m, n, k, dtype=jnp.float32,
+                                  epilogue=rec.tag)
+    cost = program_cost(rec.tag)
+    want = (io_volume_elements(m, n, k, min(tile.bm, m), min(tile.bn, n))
+            + epilogue_q_elements(m, n, cost.stream_mn, cost.has_bias,
+                                  fused=True)) * 4
+    assert rec.planned_bytes == want
+    assert rec.planned_flops == 2.0 * m * n * k
+    assert rec.planned_s > 0
+    src = rec.config_source
+    snap = get_metrics().snapshot()["gemm.ledger_records_total"]
+    assert snap["labels"] == {f"source={src}": 1}
+
+
+def test_ledger_glu_bytes_match_io_model(rng):
+    led = enable_ledger()
+    m, n, k = 512, 4096, 1024          # the one-pass GLU CI gate shape
+    x = jnp.asarray(rng.randn(m, k), jnp.float32)
+    wg = jnp.asarray(rng.randn(k, n), jnp.float32)
+    wu = jnp.asarray(rng.randn(k, n), jnp.float32)
+    ca_glu_matmul(x, wg, wu)
+    (rec,) = led.records
+    assert rec.tag == "glu.silu(none|none)"
+    tile = get_registry().resolve(m, n, k, dtype=jnp.float32,
+                                  epilogue=rec.tag)
+    want = io_volume_elements_program(
+        m, n, k, min(tile.bm, m), min(tile.bn, n), n_b=2) * 4
+    assert rec.planned_bytes == want
+    assert rec.planned_flops == 2.0 * m * n * k * 2   # two branches
+
+
+def test_ledger_w8a8_bytes_match_io_model(rng):
+    from repro.quant import quantize_tensor
+
+    led = enable_ledger()
+    m, n, k = 37, 1024, 1024           # the w8a8 CI gate shape
+    qw = quantize_tensor(
+        jnp.asarray(rng.randn(k, n), jnp.float32).astype(jnp.bfloat16))
+    qw = dataclasses.replace(qw, act_scale=jnp.float32(0.5))
+    xb = jnp.asarray(rng.randn(m, k), jnp.float32).astype(jnp.bfloat16)
+    ca_matmul(xb, qw)
+    (rec,) = led.records
+    assert rec.tag == "dqab" and rec.dtype == "int8w_int8a"
+    tile = get_registry().resolve(m, n, k, dtype=jnp.bfloat16,
+                                  epilogue=rec.tag, dtype_b=jnp.int8,
+                                  dtype_a=jnp.int8)
+    want = io_volume_bytes(m, n, k, min(tile.bm, m), min(tile.bn, n),
+                           a_itemsize=1, b_itemsize=1, out_itemsize=2) \
+        + 4.0 * epilogue_q_elements(m, n, scale_b_elements=n,
+                                    scale_a_elements=1)
+    assert rec.planned_bytes == want
+    # w8a8 plans its roofline at the MXU's int8 rate: strictly less
+    # compute time than the identical bf16-rate plan would give.
+    assert rec.planned_s <= max(
+        rec.planned_flops / led.hw.peak_flops(jnp.bfloat16),
+        rec.planned_bytes / led.hw.hbm_bandwidth)
+
+
+def test_ledger_expert_loop_folds_calls(rng):
+    led = enable_ledger()
+    xe = jnp.asarray(rng.randn(2, 4, 8, 16), jnp.float32)
+    we = jnp.asarray(rng.randn(4, 16, 32), jnp.float32)
+    ca_expert_matmul(xe, we)
+    (rec,) = led.records
+    assert rec.calls == 4 and rec.m == 2 * 8      # per-expert token slab
+
+
+def test_ledger_step_replay_and_rates(rng):
+    led = enable_ledger()
+    x = jnp.asarray(rng.randn(16, 32), jnp.float32)
+    w = jnp.asarray(rng.randn(32, 16), jnp.float32)
+    with led.step("s"):
+        ca_matmul(x, w)
+    with led.step("s"):                # compiled-cache-hit step: records
+        pass                           # nothing, replays the traced program
+    agg = led.steps_summary()["s"]
+    assert agg["steps"] == 2 and agg["gemm_calls"] == 2
+    assert agg["planned_bytes"] == 2 * led.records[0].planned_bytes
+    assert agg["achieved_gbps"] > 0 and agg["model_error"] > 0
+
+
+# ---------------------------------------------------------------------------
+# serve engine end to end
+# ---------------------------------------------------------------------------
+
+def test_serve_engine_metrics_e2e():
+    from collections import Counter as TallyCounter
+
+    from repro.configs import get_reduced
+    from repro.models import model as M
+    from repro.serve.engine import Request, ServeEngine
+
+    enable_ledger()
+    cfg = get_reduced("stablelm-1.6b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(params, cfg, batch_size=1, max_len=24)
+    r = np.random.RandomState(0)
+    new_tokens = [4, 3]
+    for uid, n_new in enumerate(new_tokens):
+        eng.submit(Request(uid=uid,
+                           prompt=r.randint(0, cfg.vocab_size, 6),
+                           max_new_tokens=n_new))
+    eng.run()
+
+    snap = eng.metrics_snapshot()
+    mets = snap["metrics"]
+    assert mets["serve.ttft_seconds"]["count"] == len(new_tokens)
+    assert mets["serve.ttft_seconds"]["min"] > 0
+    assert mets["serve.tpot_seconds"]["count"] == sum(
+        n - 1 for n in new_tokens)
+    assert mets["serve.queue_wait_seconds"]["count"] == len(new_tokens)
+    assert mets["serve.tokens_generated_total"]["value"] == sum(new_tokens)
+    assert mets["serve.requests_total"]["value"] == len(new_tokens)
+    assert mets["serve.tokens_per_second"]["value"] > 0
+    assert mets["serve.warmup_seconds"]["value"] > 0
+    # Plan-source counter must tally exactly the warmup's plan map.
+    want_sources = TallyCounter(eng.gemm_plan_sources.values())
+    got = mets["serve.gemm_plan_total"]["labels"]
+    assert got == {f"source={s}": c for s, c in want_sources.items()}
+    # Ledger: one prefill step per request, one decode step per non-first
+    # token, each with achieved-vs-planned rates.
+    steps = snap["ledger"]["steps"]
+    assert steps["prefill"]["steps"] == len(new_tokens)
+    assert steps["decode"]["steps"] == sum(n - 1 for n in new_tokens)
+    for agg in steps.values():
+        assert agg["gemm_calls"] > 0 and agg["planned_bytes"] > 0
+        assert agg["achieved_gbps"] > 0 and agg["model_error"] > 0
+
+    report = eng.metrics_report()
+    for needle in ("serve.ttft_seconds", "serve.tpot_seconds",
+                   "serve.tokens_per_second", "serve.gemm_plan_total",
+                   "ledger.prefill", "ledger.decode", "model_error"):
+        assert needle in report, needle
