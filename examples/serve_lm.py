@@ -18,6 +18,14 @@ to every projection, and serves through the int8xint8 ("ab") kernel —
 the MXU's 2x int8 compute rate on top of the byte win
 (``int8w_int8a`` cache keys).
 
+``--chaos`` serves a 4-request queue under a deterministic
+:class:`repro.runtime.fault.FaultPlan` — one fatal kernel failure (fails
+exactly one request), one recoverable kernel failure (re-dispatched on
+the XLA oracle, ``gemm.fallback_total``), one NaN decode step (walks the
+quant degradation ladder, ``serve.degraded_total``), and one slow decode
+step.  Statuses print per request; pair with ``--metrics`` to see the
+fault counters (see docs/ROBUSTNESS.md).
+
 ``--trace trace.jsonl`` writes Chrome-trace-event spans (warmup,
 calibration, per-request prefill/decode) — load the file in Perfetto or
 chrome://tracing.  ``--metrics`` prints the engine's metrics report
@@ -37,6 +45,7 @@ from repro.models import model as M
 from repro.obs import enable_tracing, flush
 from repro.obs.ledger import get_ledger
 from repro.quant import QuantConfig
+from repro.runtime.fault import FaultPlan
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -55,6 +64,12 @@ def main(argv=None):
     ap.add_argument("--metrics", action="store_true",
                     help="enable the GEMM ledger and print the metrics "
                          "report after serving")
+    ap.add_argument("--chaos", action="store_true",
+                    help="serve a 4-request queue under a deterministic "
+                         "FaultPlan (fatal kernel, recoverable kernel, "
+                         "NaN decode step, slow decode step) and print "
+                         "per-request statuses; pair with --quantize so "
+                         "the NaN triggers the degradation ladder")
     ap.add_argument("--archs", nargs="+",
                     default=["stablelm-1.6b", "mamba2-370m", "zamba2-7b"],
                     help="reduced configs to serve")
@@ -87,14 +102,36 @@ def main(argv=None):
             if args.quantize == "w8a8":
                 note += f" calib-sites={len(eng.calibration_sites)}"
         rng = np.random.RandomState(0)
-        for uid in range(2):
-            eng.submit(Request(uid=uid,
-                               prompt=rng.randint(0, cfg.vocab_size, 12),
-                               max_new_tokens=6,
-                               temperature=0.0 if uid == 0 else 0.7))
-        done = eng.run()
-        outs = {u: r.generated for u, r in done.items()}
-        print(f"{arch:16s} greedy={outs[0]} sampled={outs[1]}{note}")
+        if args.chaos:
+            # Deterministic chaos: dispatch 0 (request 0's first GEMM) is
+            # a fatal kernel failure — exactly that request fails;
+            # dispatch 1 (request 1) is recoverable — re-dispatched on
+            # the XLA oracle; decode step 5 (request 2's first) goes NaN
+            # — the quant ladder degrades and retries; decode step 15
+            # (request 3's first) runs slow.
+            plan = FaultPlan(kernel_fatal_at=(0,), kernel_fail_at=(1,),
+                             nan_decode_at=(5,), slow_decode_at={15: 0.05})
+            for uid in range(4):
+                eng.submit(Request(uid=uid,
+                                   prompt=rng.randint(0, cfg.vocab_size, 12),
+                                   max_new_tokens=6))
+            with plan:
+                done = eng.run()
+            stat = " ".join(
+                f"req{u}={r.status}"
+                + (f"({r.quant_level})" if r.status == "degraded" else "")
+                for u, r in sorted(done.items()))
+            print(f"{arch:16s} chaos: {stat} "
+                  f"injected={sorted(plan.injected)}{note}")
+        else:
+            for uid in range(2):
+                eng.submit(Request(uid=uid,
+                                   prompt=rng.randint(0, cfg.vocab_size, 12),
+                                   max_new_tokens=6,
+                                   temperature=0.0 if uid == 0 else 0.7))
+            done = eng.run()
+            outs = {u: r.generated for u, r in done.items()}
+            print(f"{arch:16s} greedy={outs[0]} sampled={outs[1]}{note}")
         if args.metrics:
             print(f"--- metrics ({arch}) ---")
             print(eng.metrics_report())

@@ -1,5 +1,7 @@
-"""Sharded, async, elastic checkpointing."""
+"""Sharded, async, elastic, *verified* checkpointing."""
 
 from repro.checkpoint import manager
+from repro.checkpoint.manager import (CheckpointCorruptionError,
+                                      CheckpointManager)
 
-__all__ = ["manager"]
+__all__ = ["manager", "CheckpointCorruptionError", "CheckpointManager"]

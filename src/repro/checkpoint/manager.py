@@ -7,7 +7,14 @@ Design (1000+-node-minded, executed single-host here):
   another host's data.
 * Writes are atomic: tmp directory + ``os.replace`` rename, so a crash
   mid-save never corrupts the latest-complete pointer.
-* ``keep_last`` GC bounds disk usage.
+* ``keep_last`` GC bounds disk usage (the last-known-good step is always
+  retained, so GC can never delete the only restorable checkpoint).
+* **Verified restore**: the manifest carries a sha256 per shard file;
+  ``restore`` verifies before loading and — when no explicit step was
+  requested — silently falls back to the newest step that verifies,
+  counting ``checkpoint.corrupt_total`` / ``checkpoint.fallback_total``.
+  An explicitly requested corrupt step raises
+  :class:`CheckpointCorruptionError`.
 * **Elastic restore**: ``restore(..., shardings=...)`` device_puts the
   loaded arrays under *any* target sharding/mesh — restoring a checkpoint
   taken on a 16x16 mesh onto 2x16x16 (or onto fewer hosts after a failure)
@@ -20,14 +27,33 @@ Design (1000+-node-minded, executed single-host here):
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+import warnings
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """An explicitly requested checkpoint step failed verification."""
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _ckpt_counter(name: str, desc: str):
+    from repro.obs import get_metrics  # lazy: obs is optional plumbing here
+    return get_metrics().counter(name, desc)
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -49,18 +75,77 @@ class CheckpointManager:
         self.keep_last = keep_last
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._last_good: Optional[int] = None  # pinned against GC
 
     # -- paths ------------------------------------------------------------
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:010d}")
 
-    def latest_step(self) -> Optional[int]:
+    def _steps(self) -> List[int]:
         steps = []
         for name in os.listdir(self.dir):
             if name.startswith("step_") and not name.endswith(".tmp"):
                 if os.path.exists(os.path.join(self.dir, name, "MANIFEST.json")):
                     steps.append(int(name.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self._steps()
         return max(steps) if steps else None
+
+    # -- verification ------------------------------------------------------
+    def verify_step(self, step: int) -> bool:
+        """True iff ``step``'s manifest parses and every shard matches its
+        recorded sha256.
+
+        Legacy checkpoints (manifests without a ``checksums`` map) fall
+        back to a load-check of each shard — a truncated ``.npz`` still
+        fails, a healthy one passes.
+        """
+        d = self._step_dir(step)
+        try:
+            with open(os.path.join(d, "MANIFEST.json")) as f:
+                manifest = json.load(f)
+            if manifest.get("step") != step or "keys" not in manifest:
+                return False
+        except (OSError, ValueError):
+            return False
+        checksums = manifest.get("checksums")
+        shards = sorted(n for n in os.listdir(d)
+                        if n.startswith("host_") and n.endswith(".npz"))
+        if not shards:
+            return False
+        for name in shards:
+            path = os.path.join(d, name)
+            if checksums is not None:
+                want = checksums.get(name)
+                if want is None or _sha256(path) != want:
+                    return False
+            else:  # legacy manifest: at least require a loadable archive
+                try:
+                    with np.load(path) as data:
+                        data.files  # noqa: B018 - forces the zip directory read
+                except Exception:
+                    return False
+        if checksums is not None:
+            missing = set(checksums) - set(shards)
+            if missing:
+                return False
+        return True
+
+    def latest_verifiable_step(self) -> Optional[int]:
+        """Newest step that passes :meth:`verify_step` (None if nothing
+        does), counting corrupt steps walked over."""
+        for step in reversed(self._steps()):
+            if self.verify_step(step):
+                return step
+            _ckpt_counter(
+                "checkpoint.corrupt_total",
+                "Checkpoint steps that failed verification").inc()
+            warnings.warn(
+                f"checkpoint step {step} failed verification; "
+                "falling back to an older step", RuntimeWarning)
+        return None
 
     # -- save -------------------------------------------------------------
     def save(self, step: int, tree, *, host_id: int = 0,
@@ -89,18 +174,21 @@ class CheckpointManager:
         final = self._step_dir(step)
         tmp = final + ".tmp"
         os.makedirs(tmp, exist_ok=True)
-        np.savez(os.path.join(tmp, f"host_{host_id:05d}.npz"), **host_np)
+        shard = f"host_{host_id:05d}.npz"
+        np.savez(os.path.join(tmp, shard), **host_np)
         manifest = {
             "step": step,
             "keys": sorted(host_np),
             "shapes": {k: list(v.shape) for k, v in host_np.items()},
             "dtypes": {k: str(v.dtype) for k, v in host_np.items()},
+            "checksums": {shard: _sha256(os.path.join(tmp, shard))},
         }
         with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
+        self._last_good = step  # written + checksummed under the rename
         self._gc()
 
     def _gc(self):
@@ -108,6 +196,8 @@ class CheckpointManager:
             int(n.split("_")[1]) for n in os.listdir(self.dir)
             if n.startswith("step_") and not n.endswith(".tmp"))
         for s in steps[:-self.keep_last]:
+            if s == self._last_good:
+                continue  # never delete the only known-restorable step
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     # -- restore ----------------------------------------------------------
@@ -118,10 +208,38 @@ class CheckpointManager:
         ``shardings`` (same pytree structure, jax.sharding.Sharding leaves)
         enables elastic re-shard: arrays are device_put under the *target*
         topology regardless of the mesh they were saved from.
+
+        Every restore verifies shard checksums first.  With ``step=None``
+        a corrupt newest step falls back to the newest step that *does*
+        verify (``checkpoint.fallback_total``); an explicit corrupt
+        ``step`` raises :class:`CheckpointCorruptionError`.
         """
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        if step is not None:
+            if not self.verify_step(step):
+                _ckpt_counter(
+                    "checkpoint.corrupt_total",
+                    "Checkpoint steps that failed verification").inc()
+                raise CheckpointCorruptionError(
+                    f"checkpoint step {step} in {self.dir} failed "
+                    "verification (bad manifest or shard checksum)")
+        else:
+            newest = self.latest_step()
+            if newest is None:
+                raise FileNotFoundError(f"no checkpoint in {self.dir}")
+            step = self.latest_verifiable_step()
+            if step is None:
+                raise CheckpointCorruptionError(
+                    f"no checkpoint step in {self.dir} passes "
+                    "verification")
+            if step != newest:
+                _ckpt_counter(
+                    "checkpoint.fallback_total",
+                    "Restores that fell back past a corrupt newest "
+                    "step").inc()
+        _ckpt_counter(
+            "checkpoint.verified_total",
+            "Checkpoint steps restored after passing verification").inc()
+        self._last_good = step
         path = os.path.join(self._step_dir(step), f"host_{host_id:05d}.npz")
         data = np.load(path)
         flat_like = _flatten(like)

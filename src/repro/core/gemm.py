@@ -65,6 +65,84 @@ class gemm_mode:
         set_gemm_mode(self.prev)
 
 
+# ---------------------------------------------------------------------------
+# Kernel-failure fallback (the degradation ladder's first rung)
+# ---------------------------------------------------------------------------
+
+_fallback_enabled = True
+
+
+def set_gemm_fallback(enabled: bool) -> None:
+    """Enable/disable the kernel-failure -> XLA-oracle re-dispatch.
+
+    On (the production default) a Pallas compile/execute failure — or an
+    injected :class:`~repro.runtime.fault.InjectedKernelFailure` — is
+    counted in ``gemm.fallback_total{stage}`` and the same GEMM re-runs
+    on the XLA oracle path with identical semantics.  Off (what the test
+    suite sets, so kernel bugs cannot hide behind the oracle) the failure
+    propagates to the caller.
+    """
+    global _fallback_enabled
+    _fallback_enabled = bool(enabled)
+
+
+def gemm_fallback_enabled() -> bool:
+    return _fallback_enabled
+
+
+class gemm_fallback:
+    """Context manager for temporarily switching the fallback policy."""
+
+    def __init__(self, enabled: bool):
+        self.enabled = enabled
+
+    def __enter__(self):
+        self.prev = gemm_fallback_enabled()
+        set_gemm_fallback(self.enabled)
+        return self
+
+    def __exit__(self, *exc):
+        set_gemm_fallback(self.prev)
+
+
+def _fault_check(stage: str) -> None:
+    """Chaos hook: raise the active FaultPlan's scheduled failure for
+    this dispatch, if any.  Zero-cost until ``repro.runtime.fault`` has
+    been imported (a plan cannot exist before its module loads)."""
+    import sys
+
+    fault = sys.modules.get("repro.runtime.fault")
+    if fault is None:
+        return
+    plan = fault.active_fault_plan()
+    if plan is not None:
+        plan.check_gemm(stage)
+
+
+def _note_fallback(stage: str, exc: Exception) -> None:
+    """Account a kernel-dispatch failure and authorize the XLA
+    re-dispatch — or re-raise when the failure is fatal (an injected
+    ``fatal=True``) or the fallback policy is off."""
+    if getattr(exc, "fatal", False) or not _fallback_enabled:
+        raise exc
+    from repro.obs.metrics import get_metrics  # lazy: obs imports core
+
+    get_metrics().counter(
+        "gemm.fallback_total",
+        "Kernel-path GEMM dispatch failures re-dispatched on the XLA "
+        "oracle path, by dispatch stage").labels(stage=stage).inc()
+
+
+def _fault_check_xla(stage: str) -> None:
+    """Fault hook on the XLA dispatch path: an injected recoverable
+    failure counts as a fallback (the 're-dispatch' is the XLA path we
+    are already on); a fatal one propagates."""
+    try:
+        _fault_check(stage)
+    except Exception as e:
+        _note_fallback(stage, e)
+
+
 def plan_for(m: int, n: int, k: int, dtype, hw: TpuTarget = V5E,
              epilogue: str = "none", layout: str = "nn",
              dtype_b=None) -> TileConfig:
@@ -223,6 +301,8 @@ def ca_matmul(
         # A static-activation weight applies the identical
         # quantize-dequantize round trip to x, so this stays the exact
         # oracle of the w8a8 kernel's math.
+        if m > 0:
+            _fault_check_xla("quant_matmul")
         led = _ledger()
         if led.enabled and quant.fmt == "int8" and m > 0:
             # Record under the program the kernel path *would* serve —
@@ -247,43 +327,53 @@ def ca_matmul(
         return z.astype(out_dtype)
 
     if quant is not None:
-        if act_scale is not None and prologue is not None:
-            # The norm cannot ride an int8 stream: apply its reference
-            # chain up front, then quantize the normalized activation.
-            x = _apply_rms_xla(x, prologue)
-            prologue = None
-        x2 = x.reshape(m, k)
-        epi2 = _flatten_epilogue(epilogue, lead, m, n)
-        # Plan here (not in ops) so the resolution happens exactly once
-        # and the ledger can attribute it; the tag mirrors the one
-        # quant_matmul builds, and the serve dtype is the *float* x dtype
-        # (ops quantizes after computing its key the same way).
-        from repro.tuning import get_registry  # lazy: tuning imports kernels
+        x_in, pro_in = x, prologue
+        try:
+            _fault_check("quant_matmul")
+            if act_scale is not None and prologue is not None:
+                # The norm cannot ride an int8 stream: apply its reference
+                # chain up front, then quantize the normalized activation.
+                x = _apply_rms_xla(x, prologue)
+                prologue = None
+            x2 = x.reshape(m, k)
+            epi2 = _flatten_epilogue(epilogue, lead, m, n)
+            # Plan here (not in ops) so the resolution happens exactly once
+            # and the ledger can attribute it; the tag mirrors the one
+            # quant_matmul builds, and the serve dtype is the *float* x
+            # dtype (ops quantizes after computing its key the same way).
+            from repro.tuning import get_registry  # lazy: tuning imports kernels
 
-        tag, dtype_a = _quant_matmul_tag(
-            epi2.spec() if epi2 is not None else IDENTITY,
-            prologue, act_scale)
-        res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
-                                          epilogue=tag, dtype_b=jnp.int8,
-                                          dtype_a=dtype_a)
-        led = _ledger()
-        if led.enabled:
-            led.record_gemm(
-                m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
-                dtype_b=jnp.int8, dtype_a=dtype_a, out_dtype=out_dtype,
-                scale_a_elements=(int(np.size(act_scale))
-                                  if act_scale is not None else 0),
-                scale_b_elements=int(np.size(quant.scale)),
-                resolution=res)
-        y2 = kops.quant_matmul(x2, quant, epi2, res.config,
-                               interpret=(mode == "interpret"),
-                               out_dtype=out_dtype, hw=hw,
-                               prologue=prologue,
-                               act_scale=act_scale,
-                               act_block=quant.act_block)
+            tag, dtype_a = _quant_matmul_tag(
+                epi2.spec() if epi2 is not None else IDENTITY,
+                prologue, act_scale)
+            res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
+                                              epilogue=tag, dtype_b=jnp.int8,
+                                              dtype_a=dtype_a)
+            led = _ledger()
+            if led.enabled:
+                led.record_gemm(
+                    m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
+                    dtype_b=jnp.int8, dtype_a=dtype_a, out_dtype=out_dtype,
+                    scale_a_elements=(int(np.size(act_scale))
+                                      if act_scale is not None else 0),
+                    scale_b_elements=int(np.size(quant.scale)),
+                    resolution=res)
+            y2 = kops.quant_matmul(x2, quant, epi2, res.config,
+                                   interpret=(mode == "interpret"),
+                                   out_dtype=out_dtype, hw=hw,
+                                   prologue=prologue,
+                                   act_scale=act_scale,
+                                   act_block=quant.act_block)
+        except Exception as e:
+            _note_fallback("quant_matmul", e)
+            return ca_matmul(x_in, out_dtype=out_dtype, hw=hw, mode="xla",
+                             epilogue=epilogue, quant=quant,
+                             prologue=pro_in)
         return y2.reshape(*lead, n).astype(out_dtype)
 
     if mode == "xla" or m == 0:
+        if m > 0:
+            _fault_check_xla("matmul")
         led = _ledger()
         if led.enabled and m > 0 and not jnp.issubdtype(x.dtype,
                                                         jnp.integer):
@@ -303,25 +393,32 @@ def ca_matmul(
             z = apply_reference(z, epilogue.spec(), epilogue.operands())
         return z.astype(out_dtype)
 
-    x2 = x.reshape(m, k)
-    epi2 = _flatten_epilogue(epilogue, lead, m, n)
-    # Plan here (not in ops) so the caller's hw target reaches the
-    # registry; the key carries the full program tag (prologue included).
-    from repro.tuning import get_registry  # lazy: tuning imports kernels
+    try:
+        _fault_check("matmul")
+        x2 = x.reshape(m, k)
+        epi2 = _flatten_epilogue(epilogue, lead, m, n)
+        # Plan here (not in ops) so the caller's hw target reaches the
+        # registry; the key carries the full program tag (prologue
+        # included).
+        from repro.tuning import get_registry  # lazy: tuning imports kernels
 
-    tag = GemmProgramSpec(
-        prologue=PrologueSpec(kind="rms") if prologue is not None
-        else NO_PROLOGUE,
-        branches=(epi2.spec() if epi2 is not None else IDENTITY,)).tag()
-    res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
-                                      epilogue=tag)
-    led = _ledger()
-    if led.enabled:
-        led.record_gemm(m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
-                        out_dtype=out_dtype, resolution=res)
-    y2 = kops.fused_matmul(x2, w, epi2, res.config,
-                           interpret=(mode == "interpret"),
-                           out_dtype=out_dtype, prologue=prologue)
+        tag = GemmProgramSpec(
+            prologue=PrologueSpec(kind="rms") if prologue is not None
+            else NO_PROLOGUE,
+            branches=(epi2.spec() if epi2 is not None else IDENTITY,)).tag()
+        res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
+                                          epilogue=tag)
+        led = _ledger()
+        if led.enabled:
+            led.record_gemm(m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
+                            out_dtype=out_dtype, resolution=res)
+        y2 = kops.fused_matmul(x2, w, epi2, res.config,
+                               interpret=(mode == "interpret"),
+                               out_dtype=out_dtype, prologue=prologue)
+    except Exception as e:
+        _note_fallback("matmul", e)
+        return ca_matmul(x, w, out_dtype=out_dtype, hw=hw, mode="xla",
+                         epilogue=epilogue, prologue=prologue)
     return y2.reshape(*lead, n).astype(out_dtype)
 
 
@@ -373,9 +470,12 @@ def ca_glu_matmul(
         _maybe_record_activation(w_gate, x, prologue)
         act_scale, act_block = w_gate.act_scale, w_gate.act_block
 
+    stage = "quant_glu" if quantized else "glu"
     kernel_ok = mode != "xla" and m > 0 and \
         (not quantized or (w_gate.fmt == "int8" and w_up.fmt == "int8"))
     if not kernel_ok:
+        if m > 0:
+            _fault_check_xla(stage)
         led = _ledger()
         if led.enabled and m > 0 and \
                 (not quantized or (w_gate.fmt == "int8"
@@ -410,50 +510,60 @@ def ca_glu_matmul(
 
         return (act_fn(activation)(g) * u).astype(out_dtype)
 
-    if quantized and act_scale is not None and prologue is not None:
-        x = _apply_rms_xla(x, prologue)
-        prologue = None
-    x2 = x.reshape(m, k)
-    interpret = mode == "interpret"
-    from repro.tuning import get_registry  # lazy: tuning imports kernels
+    x_in, pro_in = x, prologue
+    try:
+        _fault_check(stage)
+        if quantized and act_scale is not None and prologue is not None:
+            x = _apply_rms_xla(x, prologue)
+            prologue = None
+        x2 = x.reshape(m, k)
+        interpret = mode == "interpret"
+        from repro.tuning import get_registry  # lazy: tuning imports kernels
 
-    led = _ledger()
-    if quantized:
-        # Resolve here (once) and hand the tile down, mirroring the tag
-        # quant_glu_matmul builds; serve dtype is the float x dtype.
-        tag, dtype_a = _quant_glu_tag(prologue, act_scale, activation)
-        res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
-                                          epilogue=tag, dtype_b=jnp.int8,
-                                          dtype_a=dtype_a)
-        if led.enabled:
-            led.record_gemm(
-                m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
-                dtype_b=jnp.int8, dtype_a=dtype_a, out_dtype=out_dtype,
-                scale_a_elements=(int(np.size(act_scale))
-                                  if act_scale is not None else 0),
-                scale_b_elements=(int(np.size(w_gate.scale))
-                                  + int(np.size(w_up.scale))),
-                resolution=res)
-        y2 = kops.quant_glu_matmul(x2, w_gate, w_up, activation=activation,
-                                   prologue=prologue, tile=res.config,
-                                   interpret=interpret,
-                                   out_dtype=out_dtype, hw=hw,
-                                   act_scale=act_scale,
-                                   act_block=act_block or 0)
-    else:
-        tag = GemmProgramSpec(
-            prologue=PrologueSpec(kind="rms") if prologue is not None
-            else NO_PROLOGUE,
-            branches=(IDENTITY, IDENTITY), combine="glu",
-            combine_activation=activation).tag()
-        res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
-                                          epilogue=tag)
-        if led.enabled:
-            led.record_gemm(m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
-                            out_dtype=out_dtype, resolution=res)
-        y2 = kops.glu_matmul(x2, w_gate, w_up, activation=activation,
-                             prologue=prologue, tile=res.config,
-                             interpret=interpret, out_dtype=out_dtype)
+        led = _ledger()
+        if quantized:
+            # Resolve here (once) and hand the tile down, mirroring the
+            # tag quant_glu_matmul builds; serve dtype is the float x
+            # dtype.
+            tag, dtype_a = _quant_glu_tag(prologue, act_scale, activation)
+            res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
+                                              epilogue=tag, dtype_b=jnp.int8,
+                                              dtype_a=dtype_a)
+            if led.enabled:
+                led.record_gemm(
+                    m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
+                    dtype_b=jnp.int8, dtype_a=dtype_a, out_dtype=out_dtype,
+                    scale_a_elements=(int(np.size(act_scale))
+                                      if act_scale is not None else 0),
+                    scale_b_elements=(int(np.size(w_gate.scale))
+                                      + int(np.size(w_up.scale))),
+                    resolution=res)
+            y2 = kops.quant_glu_matmul(x2, w_gate, w_up,
+                                       activation=activation,
+                                       prologue=prologue, tile=res.config,
+                                       interpret=interpret,
+                                       out_dtype=out_dtype, hw=hw,
+                                       act_scale=act_scale,
+                                       act_block=act_block or 0)
+        else:
+            tag = GemmProgramSpec(
+                prologue=PrologueSpec(kind="rms") if prologue is not None
+                else NO_PROLOGUE,
+                branches=(IDENTITY, IDENTITY), combine="glu",
+                combine_activation=activation).tag()
+            res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
+                                              epilogue=tag)
+            if led.enabled:
+                led.record_gemm(m, n, k, x.dtype, tag=tag, mode=mode,
+                                hw=hw, out_dtype=out_dtype, resolution=res)
+            y2 = kops.glu_matmul(x2, w_gate, w_up, activation=activation,
+                                 prologue=prologue, tile=res.config,
+                                 interpret=interpret, out_dtype=out_dtype)
+    except Exception as e:
+        _note_fallback(stage, e)
+        return ca_glu_matmul(x_in, w_gate, w_up, activation=activation,
+                             out_dtype=out_dtype, hw=hw, mode="xla",
+                             prologue=pro_in)
     return y2.reshape(*lead, n).astype(out_dtype)
 
 

@@ -1,5 +1,15 @@
-"""Fault tolerance: heartbeats, stragglers, restart, resize."""
+"""Fault tolerance: heartbeats, stragglers, restart, resize, chaos."""
 
 from repro.runtime import fault
+from repro.runtime.fault import (DecodeFault, FailureInjector, FaultPlan,
+                                 HeartbeatMonitor, InjectedKernelFailure,
+                                 ResizeEvent, SimulatedFailure,
+                                 TrainSupervisor, TransientServeError,
+                                 active_fault_plan)
 
-__all__ = ["fault"]
+__all__ = [
+    "fault",
+    "DecodeFault", "FailureInjector", "FaultPlan", "HeartbeatMonitor",
+    "InjectedKernelFailure", "ResizeEvent", "SimulatedFailure",
+    "TrainSupervisor", "TransientServeError", "active_fault_plan",
+]

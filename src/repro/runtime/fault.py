@@ -1,5 +1,6 @@
 """Fault tolerance runtime: heartbeats, straggler detection, supervised
-restart, elastic resize.
+restart, elastic resize — and deterministic chaos injection for the
+serve path.
 
 This container has one host, so host failure/stragglers are *simulated*
 through the same interfaces a multi-host deployment would use: hosts
@@ -8,14 +9,24 @@ timeout and stragglers by step-time z-score; the supervisor restarts the
 training function from the last checkpoint on failure and re-shards it
 onto the surviving topology on resize (checkpoint.manager elastic
 restore).  All policies are deterministic and unit-tested.
+
+The serve side is :class:`FaultPlan`: a thread-local context (the
+``ActivationCalibration`` pattern) that schedules faults by *position* —
+the nth GEMM dispatch raises :class:`InjectedKernelFailure` (fatal or
+XLA-fallback-recoverable), the nth decode step gets NaN logits, a
+transient error, or a stall.  ``core/gemm`` and ``serve/engine`` consult
+the active plan at their dispatch points, so every failure mode the
+fault-tolerance layer claims to survive is unit-testable end-to-end
+(docs/ROBUSTNESS.md).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.obs.metrics import get_metrics
 
@@ -114,6 +125,142 @@ class ResizeEvent(RuntimeError):
         self.new_n_hosts = new_n_hosts
 
 
+# ---------------------------------------------------------------------------
+# Chaos injection (the serve path's deterministic fault source)
+# ---------------------------------------------------------------------------
+
+class InjectedKernelFailure(RuntimeError):
+    """A scheduled kernel compile/execute failure.
+
+    ``fatal=False`` models a Pallas failure the dispatch layer recovers
+    from (``core/gemm`` re-dispatches the XLA oracle and counts
+    ``gemm.fallback_total{stage}``); ``fatal=True`` models a failure the
+    fallback cannot absorb either — it propagates to the request wrapper
+    and fails exactly that request.
+    """
+
+    def __init__(self, msg: str, fatal: bool = False):
+        super().__init__(msg)
+        self.fatal = fatal
+
+
+class TransientServeError(RuntimeError):
+    """A retryable failure (the serve engine's exponential-backoff class)."""
+
+    transient = True
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeFault:
+    """What the active plan injects into one decode step."""
+
+    nan: bool = False
+    transient: bool = False
+    slow_s: float = 0.0
+
+
+_plan_tls = threading.local()
+
+
+def active_fault_plan() -> Optional["FaultPlan"]:
+    stack = getattr(_plan_tls, "stack", None)
+    return stack[-1] if stack else None
+
+
+class FaultPlan:
+    """Deterministic fault schedule, positional over two event streams.
+
+    * **GEMM dispatches** — every ``ca_matmul``/``ca_glu_matmul``
+      dispatch (any backend mode, m > 0) advances one counter;
+      ``kernel_fail_at`` indices raise a *recoverable*
+      :class:`InjectedKernelFailure` there (the dispatch layer falls back
+      to XLA), ``kernel_fatal_at`` indices raise a fatal one (the request
+      fails).  Under ``jax.jit`` dispatches happen at trace time, so a
+      fatal injection poisons exactly the request whose trace consumed
+      that index — the next request re-traces cleanly.
+    * **Decode steps** — every serve decode iteration advances the other
+      counter; ``nan_decode_at`` poisons that step's logits with NaN
+      (exercising the quant degradation ladder), ``transient_decode_at``
+      raises :class:`TransientServeError` (exercising retry/backoff),
+      ``slow_decode_at`` maps step index -> stall seconds (straggler
+      steps; also what deadline enforcement is tested against).
+
+    Indices are 0-based and consumed once: a request retried after an
+    injection advances past the poisoned position, so retries see clean
+    steps.  The plan is a context manager (thread-local stack, the
+    ``ActivationCalibration`` pattern) and records everything it injected
+    in ``self.injected`` — a chaos run is auditable from the plan alone,
+    and from ``fault.events_total{kind=injected:*}``.
+    """
+
+    def __init__(self,
+                 kernel_fail_at: Sequence[int] = (),
+                 kernel_fatal_at: Sequence[int] = (),
+                 nan_decode_at: Sequence[int] = (),
+                 transient_decode_at: Sequence[int] = (),
+                 slow_decode_at: Optional[Mapping[int, float]] = None):
+        self.kernel_fail_at = frozenset(kernel_fail_at)
+        self.kernel_fatal_at = frozenset(kernel_fatal_at)
+        assert not (self.kernel_fail_at & self.kernel_fatal_at), \
+            "a GEMM dispatch index cannot be both recoverable and fatal"
+        self.nan_decode_at = frozenset(nan_decode_at)
+        self.transient_decode_at = frozenset(transient_decode_at)
+        self.slow_decode_at = dict(slow_decode_at or {})
+        self.gemm_dispatches = 0
+        self.decode_steps = 0
+        self.injected: List[Tuple[str, int]] = []
+
+    # -- context manager ----------------------------------------------------
+
+    def __enter__(self) -> "FaultPlan":
+        stack = getattr(_plan_tls, "stack", None)
+        if stack is None:
+            stack = _plan_tls.stack = []
+        stack.append(self)
+        return self
+
+    def __exit__(self, *exc):
+        _plan_tls.stack.pop()
+
+    # -- injection points ---------------------------------------------------
+
+    def _inject(self, kind: str, index: int) -> None:
+        self.injected.append((kind, index))
+        _fault_counter("injected:" + kind).inc()
+
+    def check_gemm(self, stage: str) -> None:
+        """Called once per GEMM dispatch; raises when one is scheduled."""
+        i = self.gemm_dispatches
+        self.gemm_dispatches += 1
+        if i in self.kernel_fatal_at:
+            self._inject("kernel_fatal", i)
+            raise InjectedKernelFailure(
+                f"injected fatal kernel failure at GEMM dispatch {i} "
+                f"(stage {stage})", fatal=True)
+        if i in self.kernel_fail_at:
+            self._inject("kernel", i)
+            raise InjectedKernelFailure(
+                f"injected kernel failure at GEMM dispatch {i} "
+                f"(stage {stage})", fatal=False)
+
+    def decode_fault(self) -> Optional[DecodeFault]:
+        """Called once per serve decode step; the engine acts on it."""
+        i = self.decode_steps
+        self.decode_steps += 1
+        nan = i in self.nan_decode_at
+        transient = i in self.transient_decode_at
+        slow = self.slow_decode_at.get(i, 0.0)
+        if not (nan or transient or slow):
+            return None
+        if nan:
+            self._inject("nan", i)
+        if transient:
+            self._inject("transient", i)
+        if slow:
+            self._inject("slow", i)
+        return DecodeFault(nan=nan, transient=transient, slow_s=slow)
+
+
 @dataclasses.dataclass
 class SupervisorReport:
     restarts: int
@@ -133,10 +280,11 @@ class TrainSupervisor:
     """
 
     def __init__(self, ckpt_manager, save_every: int = 10,
-                 max_restarts: int = 8):
+                 max_restarts: int = 8, max_resizes: int = 32):
         self.ckpt = ckpt_manager
         self.save_every = save_every
         self.max_restarts = max_restarts
+        self.max_resizes = max_resizes
 
     def run(self, make_runner, total_steps: int, n_hosts: int
             ) -> SupervisorReport:
@@ -144,8 +292,11 @@ class TrainSupervisor:
         events: List[Tuple[int, str]] = []
         step = 0
         while step < total_steps:
-            start = (self.ckpt.latest_step() or -1) + 1 \
-                if self.ckpt.latest_step() is not None else step
+            # A checkpoint at step s resumes at s + 1 — including s == 0
+            # (`latest_step() or -1` treated the falsy step 0 as missing
+            # and re-ran the completed step).
+            latest = self.ckpt.latest_step()
+            start = latest + 1 if latest is not None else step
             runner = make_runner(start, n_hosts)
             try:
                 for step in runner:
@@ -162,4 +313,8 @@ class TrainSupervisor:
                 n_hosts = e.new_n_hosts
                 events.append((step, f"resize->{n_hosts}"))
                 _fault_counter("resize").inc()
+                # A resize storm that never progresses must not loop the
+                # supervisor forever — the cap bounds it like restarts.
+                if resizes > self.max_resizes:
+                    raise
         return SupervisorReport(restarts, resizes, step, events)

@@ -6,14 +6,28 @@ Fixed-capacity decode batch; finished slots are refilled from the queue
 Sampling is greedy or temperature-based and fully deterministic given the
 seed.  KV caches are the per-arch pytrees from models/ (compressed MLA
 cache, rolling SWA cache, O(1) SSM state — whatever the config dictates).
+
+Fault tolerance (docs/ROBUSTNESS.md): every request is isolated — a
+kernel error or non-finite logits fails *that* request
+(``serve.requests_failed_total{reason}``) while the rest of the queue
+completes.  Admission is bounded (``max_queue`` with reject/shed-oldest
+backpressure, ``serve.rejected_total{policy}``), requests carry a queue
+TTL and a decode deadline, transient failures retry with exponential
+backoff, and non-finite logits walk the per-request quant degradation
+ladder w8a8 -> int8w -> dense (``serve.degraded_total{from,to}``).  A
+failed startup calibration degrades the engine to weight-only quant
+instead of crashing.  All of it is deterministically testable through
+:class:`repro.runtime.fault.FaultPlan`.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import time
-from typing import Dict, List, Optional
+import warnings
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +39,34 @@ from repro.obs import get_metrics, span
 from repro.obs.ledger import get_ledger
 from repro.quant import (ActivationCalibration, QTensor, QuantConfig,
                          attach_act_scales)
+from repro.runtime.fault import (InjectedKernelFailure, TransientServeError,
+                                 active_fault_plan)
 from repro.tuning import warmup_model
+
+# Per-request quant degradation ladder, most- to least-quantized.  A
+# request whose logits go non-finite is retried one rung down (dense =
+# the config dtype, QTensors dequantized); past the last rung it fails.
+QUANT_LEVELS = ("w8a8", "int8w", "dense")
+
+_FAILED_DESC = "Requests failed, by reason (kernel/nonfinite/deadline/...)"
+_DEGRADED_DESC = ("Quant degradations, by from/to level (per-request "
+                  "ladder steps and engine-init calibration fallback)")
+_REJECTED_DESC = "Requests rejected/shed at admission, by policy"
+_FALLBACK_DESC = ("Kernel-path GEMM dispatch failures re-dispatched on "
+                  "the XLA oracle path, by dispatch stage")
+
+
+class NonFiniteLogits(RuntimeError):
+    """Sampled logits contained NaN/Inf — the quant-degradation trigger."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """A request ran past its decode deadline."""
+
+
+def _next_level(level: str) -> Optional[str]:
+    i = QUANT_LEVELS.index(level)
+    return QUANT_LEVELS[i + 1] if i + 1 < len(QUANT_LEVELS) else None
 
 
 def _is_quantized(params) -> bool:
@@ -41,6 +82,20 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0
     generated: Optional[List[int]] = None
+    # -- lifecycle ----------------------------------------------------------
+    # pending -> queued -> running -> done | degraded | failed; rejected
+    # requests (admission) never run.  ``degraded`` is a *successful*
+    # terminal state: the output exists but was served below the engine's
+    # base quant level and/or through a GEMM fallback.
+    status: str = "pending"
+    error: Optional[str] = None
+    deadline_s: Optional[float] = None   # decode wall-clock budget (dequeue-relative)
+    queue_ttl_s: Optional[float] = None  # max submit()->dequeue wait
+    max_retries: int = 0                 # transient-failure retry budget
+    attempts: int = 0                    # serve attempts consumed
+    quant_level: Optional[str] = None    # level of the last attempt
+    degraded_to: Optional[str] = None    # set when the ladder stepped down
+    fallbacks: int = 0                   # GEMM->XLA fallbacks during serving
 
 
 class ServeEngine:
@@ -50,20 +105,32 @@ class ServeEngine:
                  max_len: int, seed: int = 0, warmup_gemms: bool = True,
                  quantize_activations: bool = False,
                  calibration_batches: int = 4,
-                 act_qconfig: Optional[QuantConfig] = None):
+                 act_qconfig: Optional[QuantConfig] = None,
+                 max_queue: int = 0, overflow: str = "reject",
+                 retry_backoff_s: float = 0.05,
+                 check_finite: bool = True):
+        assert overflow in ("reject", "shed_oldest"), overflow
         self.params = params
         self.cfg = cfg
         self.B = batch_size
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
         self.quantized = _is_quantized(params)
+        self.max_queue = max_queue          # 0 = unbounded admission
+        self.overflow = overflow
+        self.retry_backoff_s = retry_backoff_s
+        self.check_finite = check_finite
         # Static activation quantization (w8a8): run a calibration pass
         # over sample traffic *before* warmup and jit — every projection
         # site's activation distribution is observed, its static a-scale
         # is attached to the weight QTensor, and every GEMM the jitted
         # steps trace thereafter takes the int8xint8 ("ab") kernel path:
         # the MXU's 2x int8 compute rate on top of PR 3's byte win.
+        # A calibration failure (e.g. an empty percentile reservoir)
+        # degrades the engine to weight-only quant instead of aborting
+        # startup — counted in serve.degraded_total{from=w8a8,to=int8w}.
         self.w8a8 = False
+        self.calibration_sites: List[str] = []
         metrics = get_metrics()
         if quantize_activations:
             assert self.quantized, \
@@ -72,14 +139,22 @@ class ServeEngine:
             self.act_qconfig = act_qconfig or QuantConfig(act_fmt="int8")
             assert self.act_qconfig.quantize_activations, self.act_qconfig
             t0 = time.perf_counter()
-            with span("serve.calibrate", batches=calibration_batches):
-                self.params = self._calibrate_activations(
-                    calibration_batches)
+            try:
+                with span("serve.calibrate", batches=calibration_batches):
+                    self.params = self._calibrate_activations(
+                        calibration_batches)
+                self.w8a8 = True
+            except Exception as e:  # degrade, don't crash engine startup
+                warnings.warn(
+                    f"activation calibration failed ({e!r}); degrading "
+                    "engine to weight-only int8 serving", RuntimeWarning)
+                metrics.counter("serve.degraded_total",
+                                _DEGRADED_DESC).labels(
+                    **{"from": "w8a8", "to": "int8w"}).inc()
             metrics.gauge(
                 "serve.calibration_seconds",
                 "Wall time of the w8a8 static-activation calibration "
                 "pass").set(time.perf_counter() - t0)
-            self.w8a8 = True
         # Serve-time warmup: resolve every hot-path GEMM tile through the
         # kernel-config registry (cache > autotune > analytic) before the
         # first request, so no request pays tuning/solver latency.  The
@@ -115,7 +190,10 @@ class ServeEngine:
             lambda p, b: M.prefill(p, b, cfg, max_len=max_len))
         self._decode = jax.jit(
             lambda p, t, c, s: M.decode_step(p, t, c, s, cfg))
-        self.queue: List[Request] = []
+        self.base_level = ("w8a8" if self.w8a8
+                           else "int8w" if self.quantized else "dense")
+        self._level_params: Dict[str, object] = {self.base_level: self.params}
+        self.queue: Deque[Request] = collections.deque()
         self.done: Dict[int, Request] = {}
         self._submit_t: Dict[int, float] = {}
 
@@ -161,10 +239,69 @@ class ServeEngine:
         return attach_act_scales(self.params, ctx.scales(),
                                  block=self.act_qconfig.act_block)
 
-    def submit(self, req: Request):
+    # -- degradation ladder -------------------------------------------------
+
+    def _params_for(self, level: str):
+        """The param tree serving quant ``level`` (built lazily, cached).
+
+        ``int8w`` strips the calibrated ``act_scale`` from every QTensor
+        (weight-only int8); ``dense`` dequantizes every QTensor to the
+        config dtype.  The jitted steps retrace per distinct tree
+        structure, so a degraded retry pays one compile, not a new
+        engine.
+        """
+        params = self._level_params.get(level)
+        if params is not None:
+            return params
+        is_q = lambda x: isinstance(x, QTensor)  # noqa: E731
+        base = self._level_params[self.base_level]
+        if level == "int8w":
+            params = jax.tree.map(
+                lambda l: dataclasses.replace(l, act_scale=None,
+                                              act_block=0)
+                if is_q(l) and l.act_scale is not None else l,
+                base, is_leaf=is_q)
+        elif level == "dense":
+            dt = self.cfg.dtype()
+            params = jax.tree.map(
+                lambda l: l.dequantize(dt) if is_q(l) else l,
+                base, is_leaf=is_q)
+        else:
+            raise ValueError(f"cannot degrade to level {level!r}")
+        self._level_params[level] = params
+        return params
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, req: Request) -> bool:
+        """Admit a request (True) or reject/shed under backpressure.
+
+        With ``max_queue`` set, a full queue either rejects the new
+        request (``overflow="reject"``) or sheds the oldest queued one to
+        admit it (``overflow="shed_oldest"``); both outcomes land in
+        ``done`` with status ``"rejected"`` and count
+        ``serve.rejected_total{policy}``.
+        """
         req.generated = []
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            rejected = get_metrics().counter("serve.rejected_total",
+                                             _REJECTED_DESC)
+            if self.overflow == "reject":
+                req.status = "rejected"
+                req.error = f"queue full ({len(self.queue)}/{self.max_queue})"
+                rejected.labels(policy="reject").inc()
+                self.done[req.uid] = req
+                return False
+            old = self.queue.popleft()
+            self._submit_t.pop(old.uid, None)
+            old.status = "rejected"
+            old.error = "shed: queue full and a newer request arrived"
+            rejected.labels(policy="shed_oldest").inc()
+            self.done[old.uid] = old
+        req.status = "queued"
         self.queue.append(req)
         self._submit_t[req.uid] = time.perf_counter()
+        return True
 
     def _sample(self, logits: jax.Array, temperature: float) -> int:
         logits = logits[..., :self.cfg.vocab_size]
@@ -174,6 +311,17 @@ class ServeEngine:
             return int(jnp.argmax(logits[0, -1]))
         self.key, sub = jax.random.split(self.key)
         return int(jax.random.categorical(sub, logits[0, -1] / temperature))
+
+    def _ensure_finite(self, logits: jax.Array) -> None:
+        """Raise :class:`NonFiniteLogits` when the sampled row is poisoned
+        (one cheap reduction per token; the sample already syncs)."""
+        if not self.check_finite:
+            return
+        if not bool(jnp.all(jnp.isfinite(
+                logits[0, -1, ..., :self.cfg.vocab_size]))):
+            raise NonFiniteLogits("non-finite logits in sampled row")
+
+    # -- the serve loop -----------------------------------------------------
 
     def run(self) -> Dict[int, Request]:
         """Serve everything in the queue (batch-of-1 prefill, batched
@@ -185,80 +333,192 @@ class ServeEngine:
         registry; each phase runs under a trace span and a GEMM-ledger
         step, so ``metrics_report()`` can state achieved bytes/s against
         the planned I/O model.
+
+        Every request is served under an isolation wrapper: failures
+        (kernel errors, non-finite logits past the degradation ladder,
+        deadline/TTL overruns, exhausted retries) mark *that* request
+        failed and the loop continues with the next one.
         """
         metrics = get_metrics()
-        ledger = get_ledger()
-        queue_wait = metrics.histogram(
-            "serve.queue_wait_seconds", "submit() to dequeue latency")
-        ttft = metrics.histogram(
-            "serve.ttft_seconds", "Dequeue to first sampled token")
-        tpot = metrics.histogram(
-            "serve.tpot_seconds",
-            "Per-output-token decode latency (decode step + sample)")
-        prefill_s = metrics.counter(
-            "serve.prefill_seconds_total", "Wall time in prefill+sample")
-        decode_s = metrics.counter(
-            "serve.decode_seconds_total", "Wall time in the decode loop")
-        n_tokens = metrics.counter(
-            "serve.tokens_generated_total", "Sampled output tokens")
-        n_requests = metrics.counter(
-            "serve.requests_total", "Requests served to completion")
+        self._h = {
+            "queue_wait": metrics.histogram(
+                "serve.queue_wait_seconds", "submit() to dequeue latency"),
+            "ttft": metrics.histogram(
+                "serve.ttft_seconds", "Dequeue to first sampled token"),
+            "tpot": metrics.histogram(
+                "serve.tpot_seconds",
+                "Per-output-token decode latency (decode step + sample)"),
+            "prefill_s": metrics.counter(
+                "serve.prefill_seconds_total",
+                "Wall time in prefill+sample"),
+            "decode_s": metrics.counter(
+                "serve.decode_seconds_total",
+                "Wall time in the decode loop"),
+            "tokens": metrics.counter(
+                "serve.tokens_generated_total", "Sampled output tokens"),
+            "n_requests": metrics.counter(
+                "serve.requests_total", "Requests served to completion"),
+            "failed": metrics.counter(
+                "serve.requests_failed_total", _FAILED_DESC),
+            "degraded": metrics.counter(
+                "serve.degraded_total", _DEGRADED_DESC),
+            "retries": metrics.counter(
+                "serve.retries_total",
+                "Transient-failure retries (exponential backoff)"),
+            "fallback": metrics.counter(
+                "gemm.fallback_total", _FALLBACK_DESC),
+        }
+        tokens = self._h["tokens"]
         t_run = time.perf_counter()
         while self.queue:
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             t_req = time.perf_counter()
             submitted = self._submit_t.pop(req.uid, None)
             if submitted is not None:
-                queue_wait.observe(t_req - submitted)
-            with span("serve.request", uid=req.uid,
-                      prompt_len=len(req.prompt),
-                      max_new_tokens=req.max_new_tokens):
-                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-                if self.cfg.frontend == "tokens":
-                    pre_in = {"tokens": toks}
-                else:
-                    pre_in = {"embeds": self._sample_table[toks]}
-                with span("serve.prefill", uid=req.uid,
-                          length=toks.shape[1]), \
-                        ledger.step("prefill"):
-                    logits, cache = self._prefill(self.params, pre_in)
-                    nxt = self._sample(logits, req.temperature)
-                t_first = time.perf_counter()
-                ttft.observe(t_first - t_req)
-                prefill_s.inc(t_first - t_req)
-                req.generated.append(nxt)
-                n_tokens.inc()
-                pos = toks.shape[1]
-                with span("serve.decode", uid=req.uid,
-                          tokens=req.max_new_tokens - 1):
-                    for _ in range(req.max_new_tokens - 1):
-                        t_tok = time.perf_counter()
-                        if self.cfg.frontend == "tokens":
-                            step_in = {"tokens": jnp.full((1, 1), nxt,
-                                                          jnp.int32)}
-                        else:
-                            step_in = {"embeds": self._sample_table[
-                                jnp.full((1, 1), nxt, jnp.int32)]}
-                        with ledger.step("decode"):
-                            logits, cache = self._decode(
-                                self.params, step_in, cache,
-                                jnp.int32(pos))
-                            nxt = self._sample(logits, req.temperature)
-                        dt = time.perf_counter() - t_tok
-                        tpot.observe(dt)
-                        decode_s.inc(dt)
-                        n_tokens.inc()
-                        req.generated.append(nxt)
-                        pos += 1
-            self.done[req.uid] = req
-            n_requests.inc()
+                wait = t_req - submitted
+                self._h["queue_wait"].observe(wait)
+                if req.queue_ttl_s is not None and wait > req.queue_ttl_s:
+                    self._finish_failed(
+                        req, "queue_ttl",
+                        f"queued {wait:.3f}s > ttl {req.queue_ttl_s}s")
+                    continue
+            req.status = "running"
+            self._serve_with_recovery(req, t_req)
         elapsed = time.perf_counter() - t_run
         if elapsed > 0:
             metrics.gauge(
                 "serve.tokens_per_second",
                 "Output tokens over the last run()'s wall time").set(
-                    n_tokens.value / elapsed)
+                    tokens.value / elapsed)
         return self.done
+
+    def _finish_failed(self, req: Request, reason: str, msg: str) -> None:
+        req.status = "failed"
+        req.error = f"{reason}: {msg}" if msg else reason
+        self._h["failed"].labels(reason=reason).inc()
+        self.done[req.uid] = req
+
+    @staticmethod
+    def _failure_reason(exc: Exception) -> str:
+        if isinstance(exc, InjectedKernelFailure):
+            return "kernel"
+        if isinstance(exc, DeadlineExceeded):
+            return "deadline"
+        if isinstance(exc, NonFiniteLogits):
+            return "nonfinite"
+        if getattr(exc, "transient", False):
+            return "transient"
+        return type(exc).__name__
+
+    def _serve_with_recovery(self, req: Request, t_req: float) -> None:
+        """Serve one request under the isolation wrapper: transient
+        failures retry with exponential backoff, non-finite logits walk
+        the quant ladder down, everything else fails exactly this
+        request.  Terminal status/error/counters are set here."""
+        level = self.base_level
+        deadline_t = (t_req + req.deadline_s
+                      if req.deadline_s is not None else None)
+        fb0 = self._h["fallback"].value
+        retries = 0
+        backoff = self.retry_backoff_s
+        while True:
+            req.attempts += 1
+            req.generated = []
+            req.quant_level = level
+            try:
+                with span("serve.request", uid=req.uid,
+                          attempt=req.attempts, level=level,
+                          prompt_len=len(req.prompt),
+                          max_new_tokens=req.max_new_tokens):
+                    self._serve_one(req, self._params_for(level),
+                                    deadline_t)
+                break
+            except NonFiniteLogits as e:
+                nxt = _next_level(level)
+                if nxt is None:
+                    self._finish_failed(req, "nonfinite", str(e))
+                    return
+                self._h["degraded"].labels(
+                    **{"from": level, "to": nxt}).inc()
+                req.degraded_to = nxt
+                level = nxt
+            except Exception as e:
+                if getattr(e, "transient", False) \
+                        and retries < req.max_retries:
+                    retries += 1
+                    self._h["retries"].inc()
+                    time.sleep(backoff)
+                    backoff *= 2
+                    continue
+                self._finish_failed(req, self._failure_reason(e), str(e))
+                return
+        req.error = None
+        req.fallbacks = int(self._h["fallback"].value - fb0)
+        req.status = ("degraded" if req.degraded_to or req.fallbacks
+                      else "done")
+        self.done[req.uid] = req
+        self._h["n_requests"].inc()
+
+    def _serve_one(self, req: Request, params, deadline_t: Optional[float]
+                   ) -> None:
+        """One serve attempt: prefill + sample, then the decode loop.
+        Raises on poisoned logits, deadline overrun, or injected faults;
+        appends sampled tokens to ``req.generated`` as it goes (a
+        deadline failure keeps the partial output)."""
+        h = self._h
+        ledger = get_ledger()
+        plan = active_fault_plan()
+        t_att = time.perf_counter()
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        if self.cfg.frontend == "tokens":
+            pre_in = {"tokens": toks}
+        else:
+            pre_in = {"embeds": self._sample_table[toks]}
+        with span("serve.prefill", uid=req.uid, length=toks.shape[1]), \
+                ledger.step("prefill"):
+            logits, cache = self._prefill(params, pre_in)
+            self._ensure_finite(logits)
+            nxt = self._sample(logits, req.temperature)
+        t_first = time.perf_counter()
+        h["ttft"].observe(t_first - t_att)
+        h["prefill_s"].inc(t_first - t_att)
+        req.generated.append(nxt)
+        h["tokens"].inc()
+        pos = toks.shape[1]
+        with span("serve.decode", uid=req.uid,
+                  tokens=req.max_new_tokens - 1):
+            for _ in range(req.max_new_tokens - 1):
+                if deadline_t is not None \
+                        and time.perf_counter() > deadline_t:
+                    raise DeadlineExceeded(
+                        f"decode deadline {req.deadline_s}s exceeded "
+                        f"after {len(req.generated)} tokens")
+                t_tok = time.perf_counter()
+                fault = plan.decode_fault() if plan is not None else None
+                if fault is not None and fault.slow_s:
+                    time.sleep(fault.slow_s)
+                if fault is not None and fault.transient:
+                    raise TransientServeError(
+                        f"injected transient failure (request {req.uid})")
+                if self.cfg.frontend == "tokens":
+                    step_in = {"tokens": jnp.full((1, 1), nxt,
+                                                  jnp.int32)}
+                else:
+                    step_in = {"embeds": self._sample_table[
+                        jnp.full((1, 1), nxt, jnp.int32)]}
+                with ledger.step("decode"):
+                    logits, cache = self._decode(
+                        params, step_in, cache, jnp.int32(pos))
+                    if fault is not None and fault.nan:
+                        logits = jnp.full_like(logits, jnp.nan)
+                    self._ensure_finite(logits)
+                    nxt = self._sample(logits, req.temperature)
+                dt = time.perf_counter() - t_tok
+                h["tpot"].observe(dt)
+                h["decode_s"].inc(dt)
+                h["tokens"].inc()
+                req.generated.append(nxt)
+                pos += 1
 
     def metrics_snapshot(self) -> Dict[str, dict]:
         """JSON-ready view of everything observed: the metrics registry

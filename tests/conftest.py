@@ -17,13 +17,18 @@ except ImportError:
 import numpy as np
 import pytest
 
-from repro.core import set_gemm_mode
+from repro.core import set_gemm_fallback, set_gemm_mode
 
 
 @pytest.fixture(autouse=True)
 def _default_gemm_mode():
+    """xla dispatch, kernel->XLA fallback OFF (a kernel bug must fail its
+    parity test, not silently serve the oracle); fault-tolerance tests
+    opt back in with ``gemm_fallback(True)``."""
     set_gemm_mode("xla")
+    set_gemm_fallback(False)
     yield
+    set_gemm_fallback(True)
 
 
 @pytest.fixture(autouse=True)

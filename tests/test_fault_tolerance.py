@@ -1,0 +1,248 @@
+"""Serve-path fault tolerance: request isolation, degradation ladder,
+chaos injection, admission backpressure, deadlines, retries.
+
+Faults are injected deterministically through
+:class:`repro.runtime.fault.FaultPlan` (positional over GEMM dispatches
+and decode steps), so every assertion here is exact: which request
+fails, which degrades, what every counter reads, and that untouched
+requests are bitwise-identical to a fault-free run.
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import gemm_fallback
+from repro.models import common as cm
+from repro.models import model as M
+from repro.obs import get_metrics
+from repro.runtime.fault import FaultPlan
+from repro.serve.engine import Request, ServeEngine
+
+
+def _engine(quantize=False, **kw):
+    cfg = get_reduced("stablelm-1.6b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    if quantize:
+        params = cm.quantize_params(params)
+    kw.setdefault("batch_size", 1)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("warmup_gemms", False)
+    return ServeEngine(params, cfg, **kw), cfg
+
+
+def _requests(cfg, n, max_new_tokens=5):
+    rng = np.random.RandomState(0)
+    return [Request(uid=u, prompt=rng.randint(0, cfg.vocab_size, 8),
+                    max_new_tokens=max_new_tokens) for u in range(n)]
+
+
+def _counter_total(name, **labels):
+    snap = get_metrics().snapshot()
+    m = snap.get(name)
+    if m is None:
+        return 0
+    if labels:
+        key = ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
+        return m.get("labels", {}).get(key, 0)
+    return m.get("value", 0)
+
+
+# -- chaos e2e (the acceptance scenario) ------------------------------------
+
+def test_chaos_isolates_poisoned_requests_exactly():
+    """Fatal kernel + recoverable kernel + NaN decode into a 4-request
+    queue: exactly the poisoned requests report failed/degraded, clean
+    and oracle-recovered requests are bitwise-identical to a fault-free
+    run, and the three counters account for every injected event."""
+    eng_clean, cfg = _engine(quantize=True)
+    for r in _requests(cfg, 4):
+        eng_clean.submit(r)
+    clean = eng_clean.run()
+    assert all(r.status == "done" for r in clean.values())
+
+    served_before = _counter_total("serve.requests_total")
+    eng, _ = _engine(quantize=True)
+    for r in _requests(cfg, 4):
+        eng.submit(r)
+    # dispatch 0 = request 0's first prefill GEMM (fatal); dispatch 1 =
+    # request 1's (recoverable -> XLA oracle); decode step 4 = request
+    # 2's first decode iteration (requests 0/1 consumed 0 + 4 steps).
+    plan = FaultPlan(kernel_fatal_at=(0,), kernel_fail_at=(1,),
+                     nan_decode_at=(4,))
+    with gemm_fallback(True), plan:
+        done = eng.run()
+
+    assert sorted(plan.injected) == [
+        ("kernel", 1), ("kernel_fatal", 0), ("nan", 4)]
+
+    # request 0: the fatal kernel failure fails exactly this request
+    assert done[0].status == "failed"
+    assert "kernel" in done[0].error
+    assert done[0].generated == []
+    # request 1: recoverable failure -> oracle fallback; marked degraded
+    # but the output is the oracle's, bitwise-identical to fault-free
+    assert done[1].status == "degraded"
+    assert done[1].fallbacks >= 1 and done[1].degraded_to is None
+    assert done[1].generated == clean[1].generated
+    # request 2: NaN logits walked the ladder int8w -> dense and retried
+    assert done[2].status == "degraded"
+    assert done[2].degraded_to == "dense"
+    assert done[2].quant_level == "dense"
+    assert done[2].attempts == 2
+    assert len(done[2].generated) == 5
+    # request 3: untouched, bitwise-identical
+    assert done[3].status == "done"
+    assert done[3].generated == clean[3].generated
+
+    # every injected event lands in exactly one counter
+    assert _counter_total("serve.requests_failed_total",
+                          reason="kernel") == 1
+    assert _counter_total("gemm.fallback_total") == 1
+    assert _counter_total("serve.degraded_total",
+                          **{"from": "int8w", "to": "dense"}) == 1
+    assert _counter_total("serve.requests_total") - served_before == 3
+    assert _counter_total("fault.events_total",
+                          kind="injected:kernel_fatal") == 1
+    assert _counter_total("fault.events_total", kind="injected:kernel") == 1
+    assert _counter_total("fault.events_total", kind="injected:nan") == 1
+
+
+def test_recoverable_kernel_failure_output_identical():
+    """A recoverable kernel failure re-dispatches the XLA oracle: same
+    output as a fault-free run, one gemm.fallback_total tick."""
+    eng_clean, cfg = _engine()
+    eng_clean.submit(_requests(cfg, 1)[0])
+    clean = eng_clean.run()
+
+    eng, _ = _engine()
+    eng.submit(_requests(cfg, 1)[0])
+    with gemm_fallback(True), FaultPlan(kernel_fail_at=(0,)) as plan:
+        done = eng.run()
+    assert plan.injected == [("kernel", 0)]
+    assert done[0].status == "degraded" and done[0].fallbacks >= 1
+    assert done[0].generated == clean[0].generated
+    assert _counter_total("gemm.fallback_total") == 1
+    assert _counter_total("serve.requests_failed_total") == 0
+
+
+def test_fallback_disabled_fails_request_not_engine():
+    """With the fallback gate off (the test-suite default), a recoverable
+    kernel fault still fails only its own request."""
+    eng, cfg = _engine()
+    for r in _requests(cfg, 2):
+        eng.submit(r)
+    with FaultPlan(kernel_fail_at=(0,)):
+        done = eng.run()
+    assert done[0].status == "failed" and "kernel" in done[0].error
+    assert done[1].status == "done" and len(done[1].generated) == 5
+
+
+def test_nonfinite_on_dense_engine_fails_request():
+    """A dense engine has no ladder rung left: NaN logits fail the
+    request with reason=nonfinite instead of degrading."""
+    eng, cfg = _engine()  # unquantized -> base level "dense"
+    eng.submit(_requests(cfg, 1)[0])
+    with FaultPlan(nan_decode_at=(0,)):
+        done = eng.run()
+    assert done[0].status == "failed"
+    assert "nonfinite" in done[0].error
+    assert _counter_total("serve.requests_failed_total",
+                          reason="nonfinite") == 1
+    assert _counter_total("serve.degraded_total") == 0
+
+
+# -- admission backpressure -------------------------------------------------
+
+def test_admission_reject():
+    eng, cfg = _engine(max_queue=2, overflow="reject")
+    reqs = _requests(cfg, 3)
+    assert eng.submit(reqs[0]) and eng.submit(reqs[1])
+    assert not eng.submit(reqs[2])
+    assert reqs[2].status == "rejected" and eng.done[2] is reqs[2]
+    assert [r.uid for r in eng.queue] == [0, 1]
+    assert 2 not in eng._submit_t
+    assert _counter_total("serve.rejected_total", policy="reject") == 1
+
+
+def test_admission_shed_oldest():
+    eng, cfg = _engine(max_queue=2, overflow="shed_oldest")
+    reqs = _requests(cfg, 3)
+    for r in reqs:
+        assert eng.submit(r)  # the *new* request is always admitted
+    assert reqs[0].status == "rejected" and eng.done[0] is reqs[0]
+    assert [r.uid for r in eng.queue] == [1, 2]
+    assert 0 not in eng._submit_t  # shed requests drop their submit stamp
+    assert _counter_total("serve.rejected_total",
+                          policy="shed_oldest") == 1
+
+
+def test_queue_ttl_expires_before_serving():
+    eng, cfg = _engine()
+    req = _requests(cfg, 1)[0]
+    req.queue_ttl_s = 0.0
+    eng.submit(req)
+    time.sleep(0.01)
+    done = eng.run()
+    assert done[0].status == "failed" and "queue_ttl" in done[0].error
+    assert done[0].generated == []  # never served
+    assert 0 not in eng._submit_t
+    assert _counter_total("serve.requests_failed_total",
+                          reason="queue_ttl") == 1
+
+
+def test_decode_deadline_keeps_partial_output():
+    eng, cfg = _engine()
+    req = _requests(cfg, 1, max_new_tokens=8)[0]
+    req.deadline_s = 0.0  # expires right after prefill
+    eng.submit(req)
+    done = eng.run()
+    assert done[0].status == "failed" and "deadline" in done[0].error
+    assert len(done[0].generated) == 1  # the prefill token survives
+    assert _counter_total("serve.requests_failed_total",
+                          reason="deadline") == 1
+
+
+# -- retries ----------------------------------------------------------------
+
+def test_transient_failure_retries_with_backoff():
+    eng, cfg = _engine(retry_backoff_s=0.001)
+    req = _requests(cfg, 1)[0]
+    req.max_retries = 2
+    eng.submit(req)
+    with FaultPlan(transient_decode_at=(0,)) as plan:
+        done = eng.run()
+    assert plan.injected == [("transient", 0)]
+    assert done[0].status == "done"  # retry past the poisoned position
+    assert done[0].attempts == 2 and len(done[0].generated) == 5
+    assert _counter_total("serve.retries_total") == 1
+    assert _counter_total("serve.requests_failed_total") == 0
+
+
+def test_transient_failure_without_budget_fails():
+    eng, cfg = _engine()
+    req = _requests(cfg, 1)[0]  # max_retries defaults to 0
+    eng.submit(req)
+    with FaultPlan(transient_decode_at=(0,)):
+        done = eng.run()
+    assert done[0].status == "failed" and "transient" in done[0].error
+    assert _counter_total("serve.retries_total") == 0
+
+
+# -- engine-init degradation ------------------------------------------------
+
+def test_calibration_failure_degrades_to_weight_only(monkeypatch):
+    def boom(self, n):
+        raise RuntimeError("empty reservoir")
+    monkeypatch.setattr(ServeEngine, "_calibrate_activations", boom)
+    with pytest.warns(RuntimeWarning, match="degrading"):
+        eng, cfg = _engine(quantize=True, quantize_activations=True)
+    assert not eng.w8a8 and eng.base_level == "int8w"
+    assert _counter_total("serve.degraded_total",
+                          **{"from": "w8a8", "to": "int8w"}) == 1
+    eng.submit(_requests(cfg, 1)[0])  # and it still serves
+    done = eng.run()
+    assert done[0].status == "done" and len(done[0].generated) == 5

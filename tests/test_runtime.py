@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.runtime.fault import (FailureInjector, HeartbeatMonitor,
@@ -72,3 +73,41 @@ def test_supervisor_restart_and_resize(tmp_path):
     assert any(h == 2 for _, h in log)
     # every step 0..19 was executed at least once
     assert set(s for s, _ in log) == set(range(20))
+
+
+def test_resume_after_step_zero_checkpoint(tmp_path):
+    """A checkpoint at step 0 resumes at step 1 — the falsy step index
+    must not be treated as 'no checkpoint' (which re-ran step 0)."""
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save(0, {"x": jnp.zeros(())})
+    starts, executed = [], []
+
+    def make_runner(start_step, n_hosts):
+        def gen():
+            starts.append(start_step)
+            for step in range(start_step, 4):
+                executed.append(step)
+                yield step
+        return gen()
+
+    report = TrainSupervisor(ckpt).run(make_runner, total_steps=4,
+                                       n_hosts=1)
+    assert starts == [1]          # resumed *after* the step-0 checkpoint
+    assert executed == [1, 2, 3]  # step 0 never re-ran
+    assert report.final_step == 4
+
+
+def test_resize_storm_is_bounded(tmp_path):
+    """A runner that resizes forever without progressing must trip the
+    supervisor's resize cap instead of looping."""
+    ckpt = CheckpointManager(str(tmp_path))
+
+    def make_runner(start_step, n_hosts):
+        def gen():
+            raise ResizeEvent(max(1, n_hosts - 1))
+            yield  # pragma: no cover - generator shape
+        return gen()
+
+    sup = TrainSupervisor(ckpt, max_resizes=3)
+    with pytest.raises(ResizeEvent):
+        sup.run(make_runner, total_steps=10, n_hosts=8)
