@@ -1,0 +1,307 @@
+"""Paged int8 KV cache vs the bf16 slab: the decode byte claim, gated.
+
+After PR 5 put both GEMM panels at 1 B/element, decode-time HBM traffic
+is dominated by the KV cache stream.  This benchmark states the paged
+cache's claim the way BENCH_gemm.json states the GEMM claims — as
+*planned* bytes from the I/O model, gated in CI, with measured wall time
+recorded so the model-vs-measured gap stays a tracked number:
+
+The **kv_bytes** section compares the planned per-decode-step KV stream
+of the int8 paged cache (1 B/element payloads + two fp32 per-page scale
+reads) against the bf16 ``max_len``-slab both serve paths used before
+this subsystem, at serve-relevant head geometries.  ``--check-baseline``
+gates the paged/slab ratio at ``ATTN_KV_RATIO_GATE`` and fails any
+regression of paged planned bytes vs the committed baseline.
+
+The **paged_decode** section times the real paged kernel (Pallas,
+interpret mode on this CPU container) and the XLA gather/dequant oracle
+on a small pool, checks their outputs agree, and records measured vs
+roofline-planned seconds for the ``model_error`` section.
+
+The **ledger** section runs one paged dispatch with the obs ledger
+enabled and asserts the recorded plan equals ``planned_attn_kv_bytes``
+— the serve engine's BENCH-visible accounting goes through the same
+function this file gates on.
+
+Every run writes ``BENCH_attn.json`` (stable schema, see
+``JSON_SCHEMA_VERSION``); the perf trajectory across PRs lives in the
+file's git history.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.hardware import V5E
+from repro.obs.ledger import GemmLedger, planned_attn_kv_bytes
+
+# v1: kv_bytes (paged int8 vs bf16 slab planned stream, ratio gated),
+# paged_decode (interpret-mode kernel vs XLA oracle timing + parity),
+# ledger (recorded plan == planned_attn_kv_bytes), model_error.
+JSON_SCHEMA_VERSION = 1
+DEFAULT_JSON_PATH = "BENCH_attn.json"
+
+# Planned paged-int8/bf16-slab KV byte ratio ceiling.  int8 payloads
+# halve the stream (0.5); per-page fp32 scales add 8 B per page per
+# batch element — about 0.5 + 4/(page * Hkv * (Dk+Dv)) — so the gate
+# leaves headroom without letting the scale overhead grow unnoticed.
+ATTN_KV_RATIO_GATE = 0.6
+
+# (heads, kv_heads, head_dim, max_len, page): a 7B-class GQA serve shape
+# and the repo's small-model shape.  Both compare at the worst case for
+# paging — context filled to max_len, every page resident.
+KV_SHAPES = (
+    (32, 8, 128, 4096, 128),
+    (8, 2, 64, 1024, 64),
+)
+
+# Tiny pool for interpret-mode wall timing (CPU container).
+TIMING_SHAPE = dict(B=2, heads=4, kv_heads=2, head_dim=32, page=8, n_pages=8)
+
+
+def _baseline_index(baseline):
+    if not baseline:
+        return {}
+    return {(r.get("kind"), tuple(r["shape"]), r["dtype"]): r
+            for r in baseline.get("results", [])}
+
+
+def _delta_note(rec, base_idx, field):
+    base = base_idx.get((rec["kind"], tuple(rec["shape"]), rec["dtype"]))
+    if not base or base.get(field) is None or rec.get(field) is None:
+        return "baseline=none"
+    b, c = float(base[field]), float(rec[field])
+    if b == 0:
+        return "baseline=0"
+    return f"baseline_{field}={b:.3g};delta={100.0 * (c - b) / b:+.1f}%"
+
+
+def run_kv_bytes(records=None, base_idx=()):
+    """Planned decode-step KV stream: int8 pages vs the bf16 slab."""
+    for (h, hkv, d, s, page) in KV_SHAPES:
+        paged = planned_attn_kv_bytes(1, s, hkv, d, d, kv_itemsize=1,
+                                      page=page)
+        slab = planned_attn_kv_bytes(1, s, hkv, d, d, kv_itemsize=2)
+        ratio = paged / slab
+        rec = {
+            "kind": "kv_bytes",
+            "shape": [h, hkv, d, s],
+            "dtype": "int8kv",
+            "page": page,
+            "planned_paged_bytes": float(paged),
+            "planned_slab_bytes": float(slab),
+            "planned_ratio": float(ratio),
+            "median_s": None,
+            "model_predicted_s": None,
+        }
+        note = _delta_note(rec, base_idx, "planned_paged_bytes") \
+            if base_idx else "baseline=none"
+        emit(f"attn_kv_bytes_h{h}kv{hkv}d{d}s{s}", 0.0,
+             f"paged={paged / 1e6:.3f}MB;slab={slab / 1e6:.3f}MB;"
+             f"ratio={ratio:.3f};gate<={ATTN_KV_RATIO_GATE};{note}")
+        if records is not None:
+            records.append(rec)
+
+
+def _make_pool(rng, *, B, heads, kv_heads, head_dim, page, n_pages):
+    NP = n_pages // B
+    kp = jnp.asarray(rng.integers(-127, 128, (n_pages, page, kv_heads,
+                                              head_dim), dtype=np.int8))
+    vp = jnp.asarray(rng.integers(-127, 128, (n_pages, page, kv_heads,
+                                              head_dim), dtype=np.int8))
+    ksc = jnp.asarray(rng.uniform(0.01, 0.03, n_pages).astype(np.float32))
+    vsc = jnp.asarray(rng.uniform(0.01, 0.03, n_pages).astype(np.float32))
+    tables = jnp.arange(n_pages, dtype=jnp.int32).reshape(B, NP)
+    lens = jnp.full((B,), NP * page - 3, jnp.int32)  # ragged tail page
+    q = jnp.asarray(rng.normal(size=(B, heads, head_dim)).astype(np.float32))
+    return q, kp, vp, ksc, vsc, tables, lens
+
+
+def run_paged_decode(records=None, base_idx=()):
+    """Measured interpret-mode kernel vs the XLA gather oracle + parity."""
+    from repro.kernels.flash_attn import paged_flash_attention_tpu
+    from repro.kvcache import paged_attention
+
+    sh = TIMING_SHAPE
+    rng = np.random.default_rng(0)
+    q, kp, vp, ksc, vsc, tables, lens = _make_pool(rng, **sh)
+    B, heads, hkv, d = sh["B"], sh["heads"], sh["kv_heads"], sh["head_dim"]
+    page = sh["page"]
+    kv_len = int(tables.shape[1]) * page
+    cache = {"k": kp, "v": vp, "k_scale": ksc, "v_scale": vsc,
+             "tables": tables, "len": lens}
+
+    interpret = jax.default_backend() != "tpu"
+    kern = jax.jit(lambda q_: paged_flash_attention_tpu(
+        q_, kp, vp, ksc, vsc, tables, lens, interpret=interpret))
+    oracle = jax.jit(lambda q_: paged_attention(q_[:, None], cache,
+                                                mode="xla")[:, 0])
+    o_k, o_x = kern(q), oracle(q)
+    err = float(jnp.max(jnp.abs(o_k.astype(jnp.float32)
+                                - o_x.astype(jnp.float32))))
+    assert err < 2e-4, f"paged kernel vs oracle mismatch: {err}"
+
+    planned = planned_attn_kv_bytes(B, kv_len, hkv, d, d, kv_itemsize=1,
+                                    page=page)
+    flops = 2.0 * B * heads * kv_len * 2 * d
+    model_s = max(flops / V5E.peak_flops(jnp.float32),
+                  planned / V5E.hbm_bandwidth)
+    for name, fn in (("paged_pallas", kern), ("gather_xla", oracle)):
+        us = time_call(fn, q)
+        emit(f"attn_{name}", us,
+             f"B={B};kv={kv_len};planned={planned / 1e3:.2f}KB;"
+             f"max_err_vs_oracle={err:.2e}")
+        if records is not None:
+            records.append({
+                "kind": "paged_decode",
+                "shape": [B, heads, hkv, d, kv_len],
+                "dtype": name,
+                "page": page,
+                "median_s": us / 1e6,
+                "model_predicted_s": model_s,
+                "planned_kv_bytes": float(planned),
+                "max_err_vs_oracle": err,
+            })
+
+
+def run_ledger(records=None, base_idx=()):
+    """The obs accounting goes through the gated function: one dispatch
+    on a private ledger must record exactly ``planned_attn_kv_bytes``."""
+    from repro.kvcache import paged_attention
+    from repro.obs.ledger import set_ledger, get_ledger
+
+    sh = TIMING_SHAPE
+    rng = np.random.default_rng(1)
+    q, kp, vp, ksc, vsc, tables, lens = _make_pool(rng, **sh)
+    cache = {"k": kp, "v": vp, "k_scale": ksc, "v_scale": vsc,
+             "tables": tables, "len": lens}
+    kv_len = int(tables.shape[1]) * sh["page"]
+    expect = planned_attn_kv_bytes(sh["B"], kv_len, sh["kv_heads"],
+                                   sh["head_dim"], sh["head_dim"],
+                                   kv_itemsize=1, page=sh["page"])
+    prior = get_ledger()
+    set_ledger(GemmLedger(enabled=True))
+    try:
+        paged_attention(q[:, None], cache, mode="xla")
+        recs = [r for r in get_ledger().records
+                if r.tag == "attn.paged_decode"]
+    finally:
+        set_ledger(prior)
+    assert len(recs) == 1 and recs[0].planned_bytes == expect, \
+        (len(recs), recs and recs[0].planned_bytes, expect)
+    emit("attn_ledger", 0.0,
+         f"records=1;planned={expect / 1e3:.2f}KB;matches_model=true")
+    if records is not None:
+        records.append({
+            "kind": "ledger",
+            "shape": [sh["B"], sh["heads"], sh["kv_heads"], sh["head_dim"],
+                      kv_len],
+            "dtype": "int8kv",
+            "median_s": None,
+            "model_predicted_s": None,
+            "ledger_planned_bytes": float(expect),
+        })
+
+
+def check_baseline(records, base_idx) -> int:
+    """CI gate: the paged/slab byte ratio must clear the gate and paged
+    planned bytes must never regress vs the committed baseline."""
+    failures = 0
+    for rec in records:
+        if rec["kind"] != "kv_bytes":
+            continue
+        if rec["planned_ratio"] > ATTN_KV_RATIO_GATE:
+            print(f"REGRESSION {rec['shape']}: planned paged/slab KV ratio "
+                  f"{rec['planned_ratio']:.3f} > {ATTN_KV_RATIO_GATE}")
+            failures += 1
+        base = base_idx.get(("kv_bytes", tuple(rec["shape"]), rec["dtype"]))
+        if base is not None and rec["planned_paged_bytes"] \
+                > base["planned_paged_bytes"]:
+            print(f"REGRESSION {rec['shape']}: planned paged bytes "
+                  f"{rec['planned_paged_bytes']:.0f} > baseline "
+                  f"{base['planned_paged_bytes']:.0f}")
+            failures += 1
+    if not failures:
+        print("# baseline check OK (paged/slab KV ratio <= "
+              f"{ATTN_KV_RATIO_GATE}, paged bytes <= baseline)")
+    return failures
+
+
+def model_error_section(records):
+    entries = []
+    for rec in records:
+        med = rec.get("median_s")
+        pred = rec.get("model_predicted_s")
+        if med is None or pred is None or med <= 0 or pred <= 0:
+            continue
+        entries.append({
+            "kind": rec["kind"], "shape": rec["shape"],
+            "dtype": rec["dtype"], "measured_s": float(med),
+            "model_predicted_s": float(pred),
+            "error_ratio": float(med) / float(pred),
+        })
+    section = {"n_entries": len(entries), "entries": entries}
+    if entries:
+        ratios = np.asarray([e["error_ratio"] for e in entries])
+        section["geomean_error_ratio"] = float(np.exp(np.log(ratios).mean()))
+    return section
+
+
+def write_json(records, path=DEFAULT_JSON_PATH):
+    payload = {
+        "schema": JSON_SCHEMA_VERSION,
+        "benchmark": "attn",
+        "hardware_model": V5E.name,
+        "backend": jax.default_backend(),
+        "results": records,
+        "model_error": model_error_section(records),
+    }
+    p = pathlib.Path(path)
+    p.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    print(f"# wrote {len(records)} records to {p}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=DEFAULT_JSON_PATH,
+                    help="output path for machine-readable results "
+                         "('' disables)")
+    ap.add_argument("--baseline", default=DEFAULT_JSON_PATH,
+                    help="committed baseline JSON to print deltas against")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="exit nonzero if the paged KV byte claim regresses "
+                         "(CI gate)")
+    ap.add_argument("--skip-timing", action="store_true",
+                    help="skip the measured paged_decode section")
+    args = ap.parse_args(argv)
+
+    base_idx = {}
+    try:
+        base_idx = _baseline_index(
+            json.loads(pathlib.Path(args.baseline).read_text()))
+    except (OSError, ValueError):
+        if args.check_baseline:
+            print(f"# no readable baseline at {args.baseline!r}; the gate "
+                  "checks only the ratio ceiling")
+
+    records = []
+    run_kv_bytes(records=records, base_idx=base_idx)
+    if not args.skip_timing:
+        run_paged_decode(records=records, base_idx=base_idx)
+    run_ledger(records=records, base_idx=base_idx)
+    rc = 0
+    if args.check_baseline:
+        rc = check_baseline(records, base_idx)
+    if args.json:
+        write_json(records, args.json)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

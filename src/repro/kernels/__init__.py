@@ -12,7 +12,8 @@ specs) and ref.py (pure-jnp oracles used by tests).
 from repro.kernels.ca_mmm import ca_mmm as ca_mmm_kernel
 from repro.kernels.ca_mmm import ca_gemm_program, ca_mmm_k_outer, layout_tag
 from repro.kernels.epilogue import Epilogue, EpilogueSpec
-from repro.kernels.flash_attn import flash_attention_tpu
+from repro.kernels.flash_attn import (flash_attention_tpu,
+                                      paged_flash_attention_tpu)
 from repro.kernels.ops import (ca_matmul_trainable, ca_mmm_any,
                                distance_product, fused_matmul, glu_matmul,
                                quant_glu_matmul, quant_matmul)
@@ -25,5 +26,6 @@ __all__ = [
     "ca_matmul_trainable", "fused_matmul", "glu_matmul", "quant_matmul",
     "quant_glu_matmul", "distance_product", "Epilogue", "EpilogueSpec",
     "GemmProgramSpec", "PrologueSpec", "RmsPrologue", "program_from_tag",
-    "program_tag", "layout_tag", "flash_attention_tpu", "ref",
+    "program_tag", "layout_tag", "flash_attention_tpu",
+    "paged_flash_attention_tpu", "ref",
 ]

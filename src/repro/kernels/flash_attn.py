@@ -90,14 +90,23 @@ def flash_attention_tpu(
     causal: bool = True,
     window: Optional[int] = None,
     scale: Optional[float] = None,
-    q_block: int = 256,
-    kv_block: int = 512,
+    q_block: Optional[int] = None,
+    kv_block: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
     B, Lq, H, D = q.shape
     _, S, Hkv, Dv = v.shape
     G = H // Hkv
     scale = D ** -0.5 if scale is None else scale
+
+    if q_block is None or kv_block is None:
+        # Block sizes resolve through the kernel-config registry (cache >
+        # autotune > analytic), like every GEMM tile in the repo.
+        from repro.tuning.attention import resolve_attention  # lazy cycle
+        cfg = resolve_attention("flash", heads=H, kv_heads=Hkv, head_dim=D,
+                                seq_len=S, kv_dtype=k.dtype).config
+        q_block = q_block or cfg.q_block
+        kv_block = kv_block or cfg.kv_block
 
     qc = min(q_block, Lq)
     kc = min(kv_block, S)
@@ -116,10 +125,9 @@ def flash_attention_tpu(
     nq, nk = Lp // qc, Sp // kc
 
     # (B*Hkv, G*L, D) layout: G query heads fold into the q rows so each
-    # grid cell is a plain (G*qc, D) x (D, kc) MXU product.
-    qr = q.reshape(B, Lp, Hkv, G, D).transpose(0, 2, 3, 1, 4) \
-          .reshape(B * Hkv, G * Lp, D)
-    # ... but rows must be ordered q-block-major: (nq, G, qc) per head.
+    # grid cell is a plain (G*qc, D) x (D, kc) MXU product.  Rows are
+    # ordered q-block-major — (nq, G, qc) per head — so one grid q-step
+    # sees all G heads of its q block.
     qr = q.reshape(B, nq, qc, Hkv, G, D).transpose(0, 3, 1, 4, 2, 5) \
           .reshape(B * Hkv, nq * G * qc, D)
     kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sp, D)
@@ -160,3 +168,143 @@ def flash_attention_tpu(
     out = out.reshape(B, Hkv, nq, G, qc, Dv).transpose(0, 2, 4, 1, 3, 5) \
              .reshape(B, nq * qc, H, Dv)
     return out[:, :Lq]
+
+
+# ---------------------------------------------------------------------------
+# Paged int8 decode attention (repro.kvcache's kernel entry point)
+# ---------------------------------------------------------------------------
+
+def _paged_fa_kernel(tables_ref, lens_ref, ksc_ref, vsc_ref, q_ref,
+                     k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                     page: int, n_kv: int, window: Optional[int],
+                     scale: float):
+    """One (batch*kv_head, page-step) cell of paged decode attention.
+
+    The kv grid dimension streams int8 KV *pages* (gathered by the
+    scalar-prefetched block table) through the same output-stationary
+    running-softmax accumulate as :func:`_fa_kernel`; the per-page fp32
+    dequant scales ride the kv step exactly like per-tile ``dqb``
+    b-scales ride a quantized GEMM's k-step — applied to the partial
+    scores / partial PV product in VMEM, so the dequantized K/V never
+    exist in HBM.
+    """
+    bh = pl.program_id(0)
+    j = pl.program_id(1)
+    b = bh // n_kv
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                       # (G, D) serve dtype
+    k = k_ref[0, :, 0, :]              # (page, D) int8 payload
+    v = v_ref[0, :, 0, :]              # (page, Dv) int8 payload
+    ksc = ksc_ref[0, 0]                # per-page fp32 scale (this page)
+    vsc = vsc_ref[0, 0]
+    # Dequant fused into the score accumulate: the int8 page contracts
+    # directly and the page scale folds into the softmax logit scale.
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * (scale * ksc)  # (G, page)
+
+    seq_len = lens_ref[b]
+    qpos = seq_len - 1                 # the decode token is the newest
+    kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    mask = kpos < seq_len              # causal + ragged tail + unmapped
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    # PV on the int8 page, the page's v-scale riding the partial product.
+    pv = jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * vsc
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _drain():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def paged_flash_attention_tpu(
+    q: jax.Array,                 # (B, H, D) — one decode token per seq
+    k_pages: jax.Array,           # (P, page, Hkv, D) int8
+    v_pages: jax.Array,           # (P, page, Hkv, Dv) int8
+    k_scale: jax.Array,           # (P,) fp32 per-page scales
+    v_scale: jax.Array,           # (P,) fp32
+    block_tables: jax.Array,      # (B, NP) int32 page ids; -1 = unmapped
+    seq_lens: jax.Array,          # (B,) int32 tokens present per sequence
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode attention streaming int8 KV pages via a block table.
+
+    The block table is a **scalar-prefetch** operand
+    (:class:`pltpu.PrefetchScalarGridSpec`): page ids are available
+    before the kernel body runs, so the K/V ``index_map`` gathers page
+    ``tables[b, j]`` of the pool for kv step ``j`` — the PagedAttention
+    layout under the paper's single-drain kernel structure.  Positions
+    are implicit (token ``t`` of page step ``j`` sits at ``j*page + t``),
+    so ragged lengths, partially-filled tail pages and unmapped table
+    slots all mask through one ``kpos < seq_len`` predicate.  Returns
+    ``(B, H, Dv)`` in ``q.dtype``.
+    """
+    B, H, D = q.shape
+    P, page, Hkv, Dv = v_pages.shape
+    G = H // Hkv
+    NP = block_tables.shape[1]
+    scale = D ** -0.5 if scale is None else scale
+
+    qr = q.reshape(B, Hkv, G, D).reshape(B * Hkv, G, D)
+    tables = jnp.maximum(block_tables, 0).astype(jnp.int32)
+    # Per-(seq, page-step) scale planes: scales ride the kv grid like the
+    # quantized GEMM's per-tile b-scales ride the k grid.
+    ksc = k_scale[tables]              # (B, NP) fp32
+    vsc = v_scale[tables]
+
+    grid = (B * Hkv, NP)
+    kernel = functools.partial(_paged_fa_kernel, page=page, n_kv=Hkv,
+                               window=window, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,     # block table + seq lens
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda bh, j, t, l: (bh // Hkv, j)),
+                pl.BlockSpec((1, 1), lambda bh, j, t, l: (bh // Hkv, j)),
+                pl.BlockSpec((1, G, D), lambda bh, j, t, l: (bh, 0, 0)),
+                pl.BlockSpec((1, page, 1, D),
+                             lambda bh, j, t, l: (t[bh // Hkv, j], 0,
+                                                  bh % Hkv, 0)),
+                pl.BlockSpec((1, page, 1, Dv),
+                             lambda bh, j, t, l: (t[bh // Hkv, j], 0,
+                                                  bh % Hkv, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, G, Dv), lambda bh, j, t, l: (bh, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, Dv), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, Dv), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, seq_lens.astype(jnp.int32), ksc, vsc, qr, k_pages, v_pages)
+    return out.reshape(B, Hkv, G, Dv).reshape(B, H, Dv)

@@ -1,0 +1,31 @@
+"""repro.kvcache — paged, quantized KV cache (docs/KVCACHE.md).
+
+After PR 5 put weights and activations at int8, decode-time HBM traffic
+is dominated by KV cache reads.  This subsystem applies the paper's
+byte-stream discipline to that last unmanaged stream:
+
+* :mod:`.pool`  — the host-side page allocator: fixed-size pages, a free
+  list, per-sequence accounting (the PagedAttention block-table idea of
+  vLLM, SOSP'23 — see PAPERS.md).
+* :mod:`.paged` — the device-side cache pytree (int8 page payloads +
+  per-page fp32 scales + block tables) with prefill bulk-insert,
+  requantizing decode append, and the decode-attention dispatch
+  (Pallas kernel on TPU, gather/dequant XLA oracle elsewhere).
+
+The Pallas kernel itself lives in :mod:`repro.kernels.flash_attn`
+(``paged_flash_attention_tpu``); its q/kv blocking and the pool's page
+size resolve through :mod:`repro.tuning.attention`.
+"""
+
+from repro.kvcache.paged import (PAGED_KEYS, gather_kv, is_paged,
+                                 make_paged_cache, model_assign_sequence,
+                                 model_release_sequence, paged_attention,
+                                 paged_decode_insert, paged_prefill_insert)
+from repro.kvcache.pool import PagePool, PagePoolExhausted
+
+__all__ = [
+    "PagePool", "PagePoolExhausted",
+    "PAGED_KEYS", "is_paged", "make_paged_cache", "gather_kv",
+    "paged_prefill_insert", "paged_decode_insert", "paged_attention",
+    "model_assign_sequence", "model_release_sequence",
+]

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.gemm import ca_matmul
 from repro.kernels.epilogue import Epilogue
+from repro import kvcache as kvc
 from repro.models import common as cm
 from repro.models.common import Defs, ParamDef
 
@@ -233,11 +234,19 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None,
     pos2d = positions if positions.ndim == 2 else positions[..., 0]
     if mode == "decode":
         assert cache is not None and step is not None
-        cache = kv_cache_insert(cache, k, v, step)
-        out = dense_attention(
-            q, cache["k"], cache["v"], q_positions=pos2d,
-            kv_positions=cache["pos"], causal=True,
-            window=cfg.sliding_window)
+        if kvc.is_paged(cache):
+            # Paged path: append quantizes into the page pool, attention
+            # streams int8 pages (fused-dequant kernel on TPU, gather
+            # oracle elsewhere).  Positions are implicit in the block
+            # table + length, so `step` goes unused.
+            cache = kvc.paged_decode_insert(cache, k, v)
+            out = kvc.paged_attention(q, cache, window=cfg.sliding_window)
+        else:
+            cache = kv_cache_insert(cache, k, v, step)
+            out = dense_attention(
+                q, cache["k"], cache["v"], q_positions=pos2d,
+                kv_positions=cache["pos"], causal=True,
+                window=cfg.sliding_window)
         new_cache = cache
     else:
         out = flash_attention(
@@ -246,8 +255,13 @@ def gqa_apply(p, x, cfg: ModelConfig, *, positions, cache=None,
             q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
         new_cache = None
         if mode == "prefill":
-            C = cache_len_for(cfg, max_len or L)
-            new_cache = kv_cache_from_prefill(k, v, pos2d, C)
+            if cache is not None and kvc.is_paged(cache):
+                # Bulk-insert into pre-assigned pages; the slab path below
+                # instead *builds* its cache from scratch.
+                new_cache = kvc.paged_prefill_insert(cache, k, v)
+            else:
+                C = cache_len_for(cfg, max_len or L)
+                new_cache = kv_cache_from_prefill(k, v, pos2d, C)
     epi = Epilogue(residual=residual) if residual is not None else None
     y = ca_matmul(out.reshape(B, L, H * Dh), cm.wcast(p["wo"], dt),
                   epilogue=epi)

@@ -94,6 +94,29 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
         lambda: attn.make_attn_cache(batch, C, cfg, dtype), cfg.n_layers)}
 
 
+def make_paged_model_cache(cfg: ModelConfig, batch: int, *, n_pages: int,
+                           page_size: int, max_pages: int):
+    """Paged decode cache: per-layer int8 page pools sharing one block
+    table of page *ids* (docs/KVCACHE.md).  Each layer's pool is stacked
+    along the leading axis like :func:`make_cache`'s slabs — page id
+    ``p`` addresses slot ``p`` in every layer, so the host allocator
+    hands out one id list per sequence regardless of depth.  GQA-family
+    transformers only (SSM caches aren't token-addressed; MLA compresses
+    instead of paginating; the zamba2 shared block would need its own
+    pool)."""
+    assert cfg.attn_kind == "gqa" and cfg.family not in ("ssm", "hybrid") \
+        and not cfg.shared_attn_every, (cfg.attn_kind, cfg.family)
+    from repro import kvcache as kvc
+
+    Dh = cfg.resolved_head_dim
+    one = kvc.make_paged_cache(n_pages, page_size, cfg.n_kv_heads, Dh, Dh,
+                               batch, max_pages)
+    layers = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (cfg.n_layers,) + t.shape).copy(),
+        one)
+    return {"layers": layers}
+
+
 # ---------------------------------------------------------------------------
 # Forward passes
 # ---------------------------------------------------------------------------
@@ -270,9 +293,12 @@ def lm_loss(logits: jax.Array, labels: jax.Array, cfg: ModelConfig,
 # Serving entry points
 # ---------------------------------------------------------------------------
 
-def prefill(params, batch_in, cfg: ModelConfig, max_len: Optional[int] = None):
+def prefill(params, batch_in, cfg: ModelConfig, max_len: Optional[int] = None,
+            cache: Optional[Dict] = None):
+    """``cache`` is only passed on the paged path: prefill *inserts into*
+    pre-assigned pages instead of building a fresh slab cache."""
     logits, cache, _ = forward(params, batch_in, cfg, mode="prefill",
-                               max_len=max_len)
+                               max_len=max_len, cache=cache)
     return logits, cache
 
 

@@ -85,6 +85,61 @@ def planned_gemm_bytes(m: int, n: int, k: int, tile: TileConfig, tag: str,
     return core + vec + epi + scales
 
 
+def planned_attn_kv_bytes(b: int, kv_len: int, kv_heads: int, head_dim: int,
+                          v_head_dim: int, *, kv_itemsize: float,
+                          page: int = 0) -> float:
+    """Planned HBM bytes an attention dispatch streams from the KV cache.
+
+    The decode-bound stream: every kv token's K and V rows once per
+    batch element at the cache's storage itemsize, plus (paged caches)
+    the two fp32 per-page scale reads.  Queries/outputs are one token
+    and charged nowhere — the slab-vs-paged comparison BENCH_attn.json
+    gates on is a pure KV-stream ratio, so keeping both sides to the KV
+    stream keeps the ratio honest.
+    """
+    core = float(b) * kv_len * kv_heads * (head_dim + v_head_dim) * kv_itemsize
+    if page:
+        core += 2.0 * _SCALE_ITEMSIZE * b * (-(-kv_len // page))
+    return core
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnRecord:
+    """One dispatched attention program.
+
+    Shares the ledger's record list with :class:`GemmRecord` — the step
+    replay and :meth:`GemmLedger.aggregate` machinery only touch the
+    duck-typed subset (``key``/``calls``/``planned_*``/``config_source``),
+    so attention dispatches ride the same per-step accounting as GEMMs.
+    """
+
+    b: int
+    q_len: int
+    kv_len: int
+    heads: int
+    kv_heads: int
+    head_dim: int
+    v_head_dim: int
+    tag: str                    # attn.paged_decode | attn.flash | ...
+    dtype: str                  # composite kv/q storage dtypes
+    mode: str                   # xla | pallas | interpret
+    config: Dict[str, Any]      # q_block/kv_block (page) of the dispatch
+    config_source: str
+    planned_bytes: float
+    planned_flops: float
+    planned_s: float
+    calls: int = 1
+
+    @property
+    def key(self) -> str:
+        return (f"{self.tag}|{self.dtype}|b{self.b}|"
+                f"q{self.q_len}xkv{self.kv_len}|"
+                f"h{self.heads}kv{self.kv_heads}d{self.head_dim}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
 @dataclasses.dataclass(frozen=True)
 class GemmRecord:
     """One dispatched GEMM program (``calls`` folds an expert loop)."""
@@ -228,6 +283,54 @@ class GemmLedger:
             "gemm.ledger_records_total",
             "GEMM dispatches recorded by the ledger").labels(
                 source=resolution.source).inc()
+        return rec
+
+    def record_attention(self, *, b: int, q_len: int, kv_len: int,
+                         heads: int, kv_heads: int, head_dim: int,
+                         v_head_dim: int, kv_dtype, q_dtype,
+                         tag: str = "attn.flash", mode: str = "xla",
+                         page: int = 0, config: Optional[Dict[str, Any]] = None,
+                         config_source: str = "analytic",
+                         hw: Optional[TpuTarget] = None,
+                         calls: int = 1) -> Optional["AttnRecord"]:
+        """Append one attention dispatch record.  No-op when disabled.
+
+        ``kv_len`` is what the kernel actually streams (for paged caches,
+        mapped pages × page size — padding included, honesty over flattery);
+        ``page`` > 0 additionally charges the fp32 per-page scale reads.
+        """
+        if not self.enabled or b <= 0 or kv_len <= 0:
+            return None
+        import jax.numpy as jnp
+
+        hw = hw or self.hw
+        kv_it = jnp.dtype(kv_dtype).itemsize
+        planned_bytes = planned_attn_kv_bytes(
+            b, kv_len, kv_heads, head_dim, v_head_dim,
+            kv_itemsize=kv_it, page=page)
+        # QK^T + PV over the full streamed window, fp32 accumulate.
+        planned_flops = 2.0 * b * heads * q_len * kv_len * (head_dim
+                                                            + v_head_dim)
+        planned_s = max(planned_flops / hw.peak_flops(q_dtype),
+                        planned_bytes / hw.hbm_bandwidth)
+        dtype_str = f"{jnp.dtype(kv_dtype).name}kv_{jnp.dtype(q_dtype).name}q"
+        rec = AttnRecord(
+            b=int(b), q_len=int(q_len), kv_len=int(kv_len), heads=int(heads),
+            kv_heads=int(kv_heads), head_dim=int(head_dim),
+            v_head_dim=int(v_head_dim), tag=tag, dtype=dtype_str, mode=mode,
+            config=dict(config or ({"page": page} if page else {})),
+            config_source=config_source,
+            planned_bytes=float(planned_bytes),
+            planned_flops=float(planned_flops),
+            planned_s=float(planned_s), calls=int(calls))
+        with self._lock:
+            self._records.append(rec)
+        from repro.obs.metrics import get_metrics
+
+        get_metrics().counter(
+            "attn.ledger_records_total",
+            "Attention dispatches recorded by the ledger").labels(
+                tag=tag, mode=mode).inc()
         return rec
 
     # -- step aggregation ----------------------------------------------------

@@ -108,7 +108,9 @@ class ServeEngine:
                  act_qconfig: Optional[QuantConfig] = None,
                  max_queue: int = 0, overflow: str = "reject",
                  retry_backoff_s: float = 0.05,
-                 check_finite: bool = True):
+                 check_finite: bool = True,
+                 paged_kv: bool = False, kv_page_size: int = 0,
+                 kv_pool_pages: int = 0, kv_max_pages_per_seq: int = 0):
         assert overflow in ("reject", "shed_oldest"), overflow
         self.params = params
         self.cfg = cfg
@@ -190,6 +192,49 @@ class ServeEngine:
             lambda p, b: M.prefill(p, b, cfg, max_len=max_len))
         self._decode = jax.jit(
             lambda p, t, c, s: M.decode_step(p, t, c, s, cfg))
+        # Paged KV mode (docs/KVCACHE.md): variable-length sequences admit
+        # against a host-side page pool instead of a max_len-sized slab;
+        # int8 pages + per-page scales replace the serve-dtype cache.  The
+        # page size resolves through the registry like every GEMM tile
+        # (the paged_decode attention entry's kv_block *is* the page).
+        self.kv_pool = None
+        self.attn_plan_sources: Dict[str, str] = {}
+        if paged_kv:
+            assert cfg.attn_kind == "gqa" \
+                and cfg.family not in ("ssm", "hybrid") \
+                and not cfg.shared_attn_every, \
+                "paged KV serving needs a plain GQA transformer " \
+                f"(got attn={cfg.attn_kind}, family={cfg.family})"
+            from repro import kvcache as kvc
+            from repro.tuning import resolve_page_size, warmup_attention
+
+            self._kvc = kvc
+            t0 = time.perf_counter()
+            with span("serve.attn_warmup", paged=True):
+                self.attn_plan_sources = warmup_attention(
+                    cfg, max_len, paged=True)
+            metrics.gauge(
+                "serve.attn_warmup_seconds",
+                "Wall time of the attention blocking warmup").set(
+                    time.perf_counter() - t0)
+            if not kv_page_size:
+                res = resolve_page_size(
+                    heads=cfg.n_heads, kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.resolved_head_dim, seq_len=max_len)
+                kv_page_size = res.config.kv_block
+            per_seq = -(-max_len // kv_page_size)
+            self.kv_max_pages_per_seq = kv_max_pages_per_seq or per_seq
+            self.kv_pool = kvc.PagePool(
+                kv_pool_pages or batch_size * per_seq, kv_page_size)
+            metrics.gauge(
+                "serve.kv_pool_pages",
+                "Page count of the serve KV pool").set(self.kv_pool.n_pages)
+            self.kv_cache = M.make_paged_model_cache(
+                cfg, 1, n_pages=self.kv_pool.n_pages,
+                page_size=kv_page_size, max_pages=self.kv_max_pages_per_seq)
+            self._prefill_paged = jax.jit(
+                lambda p, b, c: M.prefill(p, b, cfg, max_len=max_len,
+                                          cache=c))
         self.base_level = ("w8a8" if self.w8a8
                            else "int8w" if self.quantized else "dense")
         self._level_params: Dict[str, object] = {self.base_level: self.params}
@@ -283,6 +328,22 @@ class ServeEngine:
         ``serve.rejected_total{policy}``.
         """
         req.generated = []
+        if self.kv_pool is not None:
+            # A request that can never hold its worst-case KV footprint
+            # (prompt + full generation budget) is rejected up front
+            # rather than failing mid-decode with pages half-written.
+            need = self.kv_pool.pages_for(
+                len(req.prompt) + req.max_new_tokens)
+            if need > min(self.kv_pool.n_pages, self.kv_max_pages_per_seq):
+                req.status = "rejected"
+                req.error = (f"kv pages: need {need} pages, pool holds "
+                             f"{self.kv_pool.n_pages} "
+                             f"(per-seq cap {self.kv_max_pages_per_seq})")
+                get_metrics().counter(
+                    "serve.rejected_total", _REJECTED_DESC).labels(
+                        policy="kv_pages").inc()
+                self.done[req.uid] = req
+                return False
         if self.max_queue and len(self.queue) >= self.max_queue:
             rejected = get_metrics().counter("serve.rejected_total",
                                              _REJECTED_DESC)
@@ -465,6 +526,20 @@ class ServeEngine:
         Raises on poisoned logits, deadline overrun, or injected faults;
         appends sampled tokens to ``req.generated`` as it goes (a
         deadline failure keeps the partial output)."""
+        if self.kv_pool is None:
+            self._serve_attempt(req, params, deadline_t, paged=False)
+            return
+        # Paged path: pages for the worst case (prompt + full generation
+        # budget) are held for exactly the attempt's lifetime — the
+        # unconditional free keeps a failed/retried attempt from leaking
+        # pool capacity (free of a never-allocated uid is a no-op).
+        try:
+            self._serve_attempt(req, params, deadline_t, paged=True)
+        finally:
+            self.kv_pool.free(req.uid)
+
+    def _serve_attempt(self, req: Request, params,
+                       deadline_t: Optional[float], *, paged: bool) -> None:
         h = self._h
         ledger = get_ledger()
         plan = active_fault_plan()
@@ -474,9 +549,16 @@ class ServeEngine:
             pre_in = {"tokens": toks}
         else:
             pre_in = {"embeds": self._sample_table[toks]}
-        with span("serve.prefill", uid=req.uid, length=toks.shape[1]), \
-                ledger.step("prefill"):
-            logits, cache = self._prefill(params, pre_in)
+        with span("serve.prefill", uid=req.uid, length=toks.shape[1],
+                  paged=paged), ledger.step("prefill"):
+            if paged:
+                page_ids = self.kv_pool.alloc(
+                    req.uid, len(req.prompt) + req.max_new_tokens)
+                cache0 = self._kvc.model_assign_sequence(
+                    self.kv_cache, 0, page_ids)
+                logits, cache = self._prefill_paged(params, pre_in, cache0)
+            else:
+                logits, cache = self._prefill(params, pre_in)
             self._ensure_finite(logits)
             nxt = self._sample(logits, req.temperature)
         t_first = time.perf_counter()

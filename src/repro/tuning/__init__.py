@@ -12,6 +12,9 @@ the model's top candidates and remembering the winners:
   all dispatch through.
 """
 
+from repro.tuning.attention import (AttnConfig, AttnResolution,
+                                    attn_cache_key, resolve_attention,
+                                    resolve_page_size)
 from repro.tuning.autotune import TuneResult, autotune_gemm, time_tile
 from repro.tuning.cache import (SCHEMA_VERSION, CacheEntry, TuningCache,
                                 cache_key, default_cache_path, merge_caches,
@@ -19,16 +22,21 @@ from repro.tuning.cache import (SCHEMA_VERSION, CacheEntry, TuningCache,
 from repro.tuning.registry import (KernelRegistry, Resolution, get_registry,
                                    reset_registry, set_registry)
 from repro.tuning.space import candidate_tile_configs
-from repro.tuning.workload import (model_gemm_shapes, model_gemm_workloads,
-                                   quantize_workloads, warmup_model)
+from repro.tuning.workload import (model_attention_workloads,
+                                   model_gemm_shapes, model_gemm_workloads,
+                                   quantize_workloads, warmup_attention,
+                                   warmup_model)
 
 __all__ = [
+    "AttnConfig", "AttnResolution", "attn_cache_key", "resolve_attention",
+    "resolve_page_size",
     "TuneResult", "autotune_gemm", "time_tile",
     "SCHEMA_VERSION", "CacheEntry", "TuningCache", "cache_key",
     "default_cache_path", "merge_caches", "shape_bucket",
     "KernelRegistry", "Resolution", "get_registry", "reset_registry",
     "set_registry",
     "candidate_tile_configs",
-    "model_gemm_shapes", "model_gemm_workloads", "quantize_workloads",
+    "model_attention_workloads", "model_gemm_shapes",
+    "model_gemm_workloads", "quantize_workloads", "warmup_attention",
     "warmup_model",
 ]

@@ -126,6 +126,49 @@ def model_gemm_workloads(cfg: ModelConfig, rows: int,
     return sorted(w for w in loads if all(dim > 0 for dim in w[:3]))
 
 
+# (arch, heads, kv_heads, head_dim, seq_len, kv_dtype_str) — the
+# attention analog of GemmWorkload, resolved by tuning.attention.
+AttnWorkload = Tuple[str, int, int, int, int, str]
+
+
+def model_attention_workloads(cfg: ModelConfig, seq_len: int,
+                              paged: bool = False) -> List[AttnWorkload]:
+    """Attention signatures the model issues at context ``seq_len``.
+
+    Always the prefill flash kernel in the serve dtype; ``paged=True``
+    adds the int8 paged decode kernel (whose resolution also fixes the
+    KV pool's page size — see :func:`repro.tuning.attention
+    .resolve_page_size`).
+    """
+    if cfg.attn_kind != "gqa" or cfg.n_heads <= 0:
+        return []
+    import jax.numpy as jnp
+
+    h, hkv, d = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dtype_str = jnp.dtype(cfg.dtype()).name
+    loads = [("flash", h, hkv, d, seq_len, dtype_str)]
+    if paged:
+        loads.append(("paged_decode", h, hkv, d, seq_len, "int8"))
+    return sorted(loads)
+
+
+def warmup_attention(cfg: ModelConfig, seq_len: int, registry=None,
+                     paged: bool = False) -> dict:
+    """Resolve the model's attention blockings ahead of first dispatch
+    (the attention analog of :func:`warmup_model`).  Returns
+    {cache_key: source}."""
+    from repro.tuning.attention import resolve_attention
+
+    resolved = {}
+    for (arch, h, hkv, d, s, dtype_str) in model_attention_workloads(
+            cfg, seq_len, paged=paged):
+        r = resolve_attention(arch, heads=h, kv_heads=hkv, head_dim=d,
+                              seq_len=s, kv_dtype=dtype_str,
+                              registry=registry)
+        resolved[r.key] = r.source
+    return resolved
+
+
 def warmup_model(cfg: ModelConfig, rows_list, registry=None,
                  train: bool = False, quant=False) -> dict:
     """Resolve every hot-path GEMM config for the given row counts.

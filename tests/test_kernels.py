@@ -132,3 +132,127 @@ def test_flash_attention_kernel_block_invariance():
     for o in outs[1:]:
         np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
                                    rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Paged int8 decode attention kernel vs oracle
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_attn import paged_flash_attention_tpu
+
+
+def _paged_pool(seed, lens, *, page, n_pages, Hkv, D, shuffle=True):
+    """Quantize random fp32 K/V streams into a shuffled page pool.
+
+    Returns (pool arrays..., per-seq dequantized fp K/V) so parity tests
+    compare the kernel against the oracle on the *exact* values the int8
+    pages hold — no quantization tolerance in the assert.
+    """
+    rng = np.random.RandomState(seed)
+    B = len(lens)
+    NP = max(-(-l // page) for l in lens)
+    order = rng.permutation(n_pages) if shuffle else np.arange(n_pages)
+    kp = np.zeros((n_pages, page, Hkv, D), np.int8)
+    vp = np.zeros((n_pages, page, Hkv, D), np.int8)
+    ksc = np.zeros(n_pages, np.float32)
+    vsc = np.zeros(n_pages, np.float32)
+    tables = np.full((B, NP), -1, np.int32)
+    deq_k, deq_v = [], []
+    nxt = 0
+    for b, L in enumerate(lens):
+        kf = rng.randn(L, Hkv, D).astype(np.float32)
+        vf = rng.randn(L, Hkv, D).astype(np.float32)
+        npg = -(-L // page)
+        pad = npg * page - L
+        kfp = np.pad(kf, ((0, pad), (0, 0), (0, 0))).reshape(npg, page,
+                                                             Hkv, D)
+        vfp = np.pad(vf, ((0, pad), (0, 0), (0, 0))).reshape(npg, page,
+                                                             Hkv, D)
+        for j in range(npg):
+            pid = order[nxt]
+            nxt += 1
+            tables[b, j] = pid
+            for pool, scales, pages in ((kp, ksc, kfp), (vp, vsc, vfp)):
+                sc = max(np.abs(pages[j]).max(), 1e-12) / 127.0
+                pool[pid] = np.clip(np.round(pages[j] / sc), -127, 127
+                                    ).astype(np.int8)
+                scales[pid] = sc
+        deq_k.append((kp[tables[b, :npg]].astype(np.float32)
+                      * ksc[tables[b, :npg], None, None, None]
+                      ).reshape(npg * page, Hkv, D)[:L])
+        deq_v.append((vp[tables[b, :npg]].astype(np.float32)
+                      * vsc[tables[b, :npg], None, None, None]
+                      ).reshape(npg * page, Hkv, D)[:L])
+    return (jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(ksc),
+            jnp.asarray(vsc), jnp.asarray(tables),
+            jnp.asarray(np.asarray(lens, np.int32)), deq_k, deq_v)
+
+
+@pytest.mark.parametrize("window", [None, 11], ids=["causal", "sliding"])
+@pytest.mark.parametrize("gqa", [1, 2], ids=["mha", "gqa2"])
+def test_paged_attention_kernel_vs_oracle(window, gqa):
+    """Ragged lengths crossing page boundaries, shuffled page ids."""
+    Hkv, D, page = 2, 32, 8
+    H = Hkv * gqa
+    lens = [19, 27]  # both strictly inside their last (ragged) page
+    kp, vp, ksc, vsc, tables, lens_j, deq_k, deq_v = _paged_pool(
+        0, lens, page=page, n_pages=16, Hkv=Hkv, D=D)
+    q = _jax.random.normal(_jax.random.PRNGKey(7), (len(lens), H, D))
+    got = paged_flash_attention_tpu(q, kp, vp, ksc, vsc, tables, lens_j,
+                                    window=window, interpret=True)
+    for b, L in enumerate(lens):
+        want = ref.ref_flash_attention(
+            q[b][None], _jnp.asarray(deq_k[b]), _jnp.asarray(deq_v[b]),
+            causal=True, window=window)[0]
+        np.testing.assert_allclose(np.asarray(got[b]), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_freed_and_reused_pages():
+    """A page reassigned to another sequence must not leak its previous
+    tenant's keys: unmapped table slots (-1) and positions past ``len``
+    are masked no matter what the page payload holds."""
+    Hkv, D, page = 2, 16, 8
+    lens = [9, 13]
+    kp, vp, ksc, vsc, tables, lens_j, deq_k, deq_v = _paged_pool(
+        1, lens, page=page, n_pages=8, Hkv=Hkv, D=D, shuffle=False)
+    q = _jax.random.normal(_jax.random.PRNGKey(8), (len(lens), 2 * Hkv, D))
+    base = paged_flash_attention_tpu(q, kp, vp, ksc, vsc, tables, lens_j,
+                                     interpret=True)
+    # Poison every page the tables do NOT map (freed pages with stale
+    # garbage) and crank their scales: output must be bit-identical.
+    mapped = set(np.asarray(tables).ravel().tolist()) - {-1}
+    unmapped = [p for p in range(kp.shape[0]) if p not in mapped]
+    kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+    ksc2, vsc2 = np.asarray(ksc).copy(), np.asarray(vsc).copy()
+    kp2[unmapped] = 127
+    vp2[unmapped] = 127
+    ksc2[unmapped] = 1e6
+    vsc2[unmapped] = 1e6
+    got = paged_flash_attention_tpu(
+        q, _jnp.asarray(kp2), _jnp.asarray(vp2), _jnp.asarray(ksc2),
+        _jnp.asarray(vsc2), tables, lens_j, interpret=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+
+
+def test_paged_attention_matches_slab_flash():
+    """Full-pool decode agrees with the dense flash kernel on the
+    dequantized slab view of the same cache."""
+    Hkv, D, page = 2, 32, 8
+    lens = [24, 24]
+    kp, vp, ksc, vsc, tables, lens_j, deq_k, deq_v = _paged_pool(
+        2, lens, page=page, n_pages=8, Hkv=Hkv, D=D)
+    B = len(lens)
+    q = _jax.random.normal(_jax.random.PRNGKey(9), (B, 2 * Hkv, D))
+    got = paged_flash_attention_tpu(q, kp, vp, ksc, vsc, tables, lens_j,
+                                    interpret=True)
+    k_slab = _jnp.stack([_jnp.asarray(x) for x in deq_k])
+    v_slab = _jnp.stack([_jnp.asarray(x) for x in deq_v])
+    qpos = (lens_j - 1)[:, None]
+    kpos = _jnp.broadcast_to(_jnp.arange(lens[0], dtype=_jnp.int32)[None],
+                             (B, lens[0]))
+    want = flash_attention_tpu(q[:, None], k_slab, v_slab,
+                               q_positions=qpos, kv_positions=kpos,
+                               q_block=8, kv_block=8, interpret=True)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,333 @@
+"""repro.kvcache: page pool lifecycle, quantized inserts, attention
+dispatch parity, registry-resolved blocking, ledger accounting, and the
+serve engine's paged admission/allocation contract.
+
+The Pallas kernel's own parity suite lives in test_kernels.py; this file
+covers everything *around* the kernel — the subsystem promises of
+docs/KVCACHE.md."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import kvcache as kvc
+from repro.configs import get_reduced
+from repro.kvcache import PagePool, PagePoolExhausted
+from repro.models import model as M
+from repro.obs import get_metrics
+from repro.obs.ledger import get_ledger, planned_attn_kv_bytes
+from repro.serve.engine import Request, ServeEngine
+
+
+def _counter_total(name, **labels):
+    snap = get_metrics().snapshot()
+    m = snap.get(name)
+    if m is None:
+        return 0
+    if labels:
+        key = ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
+        return m.get("labels", {}).get(key, 0)
+    return m.get("value", 0)
+
+
+# -- host-side pool ----------------------------------------------------------
+
+def test_pool_alloc_free_lifecycle():
+    pool = PagePool(8, 16)
+    assert pool.pages_for(0) == 0
+    assert pool.pages_for(1) == 1
+    assert pool.pages_for(16) == 1
+    assert pool.pages_for(17) == 2
+    ids = pool.alloc(1, 40)           # 3 pages
+    assert len(ids) == 3 and pool.n_free == 5 and pool.n_used == 3
+    assert tuple(pool.owned(1)) == tuple(ids)
+    # deterministic lowest-id-first hand-out
+    assert ids == [0, 1, 2]
+    with pytest.raises(ValueError):   # double alloc under one key
+        pool.alloc(1, 1)
+    ids2 = pool.alloc(2, 80)          # 5 pages: exactly drains the pool
+    assert pool.n_free == 0
+    with pytest.raises(PagePoolExhausted):
+        pool.alloc(3, 1)
+    assert pool.free(1) == ids
+    assert pool.can_admit(48) and not pool.can_admit(64)
+    assert pool.free(99) == []        # never-allocated key: no-op
+    pool.free(2)
+    assert pool.n_free == 8 and pool.owned(2) == ()
+    assert ids2 and pool.n_used == 0
+
+
+# -- device-side cache: inserts and reuse -----------------------------------
+
+def _layer_cache(B=1, n_pages=8, page=4, Hkv=2, D=8, max_pages=4):
+    return kvc.make_paged_cache(n_pages, page, Hkv, D, D, B, max_pages)
+
+
+def test_prefill_insert_roundtrip_and_ragged_tail():
+    rng = np.random.RandomState(0)
+    cache = _layer_cache()
+    pool = PagePool(8, 4)
+    L = 7                              # crosses one page boundary
+    ids = pool.alloc(0, L)
+    tables = np.full((1, 4), -1, np.int32)
+    tables[0, :len(ids)] = ids
+    cache["tables"] = jnp.asarray(tables)
+    k = rng.randn(1, L, 2, 8).astype(np.float32)
+    v = rng.randn(1, L, 2, 8).astype(np.float32)
+    cache = kvc.paged_prefill_insert(cache, jnp.asarray(k), jnp.asarray(v))
+    assert int(cache["len"][0]) == L
+    gk, gv, pos = kvc.gather_kv(cache)
+    np.testing.assert_allclose(np.asarray(gk[0, :L]), k[0], atol=0.02)
+    np.testing.assert_allclose(np.asarray(gv[0, :L]), v[0], atol=0.02)
+    # positions past len are masked out (-1), incl. the ragged tail slot
+    assert np.all(np.asarray(pos[0, L:]) == -1)
+    assert np.all(np.asarray(pos[0, :L]) == np.arange(L))
+
+
+def test_decode_insert_appends_and_requantizes():
+    rng = np.random.RandomState(1)
+    cache = _layer_cache()
+    cache["tables"] = jnp.asarray([[0, 1, 2, -1]], jnp.int32)
+    ks, vs = [], []
+    for t in range(6):                 # fills page 0, starts page 1
+        # growing magnitude forces the append-time requantize path
+        kn = (rng.randn(1, 1, 2, 8) * (1 + t)).astype(np.float32)
+        vn = (rng.randn(1, 1, 2, 8) * (1 + t)).astype(np.float32)
+        cache = kvc.paged_decode_insert(cache, jnp.asarray(kn),
+                                        jnp.asarray(vn))
+        ks.append(kn[:, 0])
+        vs.append(vn[:, 0])
+    assert int(cache["len"][0]) == 6
+    gk, gv, pos = kvc.gather_kv(cache)
+    want_k = np.concatenate(ks, 0)
+    np.testing.assert_allclose(np.asarray(gk[0, :6]), want_k,
+                               rtol=0.05, atol=0.15)
+    assert float(cache["k_scale"][1]) > 0  # second page touched
+
+
+def test_fresh_page_append_kills_stale_payload():
+    """model_assign_sequence zeroes the assigned pages' scales, so the
+    first append onto a reused page rescales any stale int8 garbage to
+    exactly 0 — page reuse can never leak a prior tenant's keys."""
+    cache = _layer_cache()
+    # simulate a previous tenant: page 0 full of garbage at a huge scale
+    cache["k"] = cache["k"].at[0].set(127)
+    cache["v"] = cache["v"].at[0].set(127)
+    cache["k_scale"] = cache["k_scale"].at[0].set(123.0)
+    cache["v_scale"] = cache["v_scale"].at[0].set(123.0)
+    model = {"layers": jax.tree.map(lambda t: t[None].copy(), cache)}
+    model = kvc.model_assign_sequence(model, 0, [0, 1])
+    lay = jax.tree.map(lambda t: t[0], model["layers"])
+    kn = jnp.ones((1, 1, 2, 8), jnp.float32)
+    lay = kvc.paged_decode_insert(lay, kn, kn)
+    gk, _, _ = kvc.gather_kv(lay)
+    np.testing.assert_allclose(np.asarray(gk[0, 0]), np.ones((2, 8)),
+                               atol=0.01)
+    # slots 1..3 of the page dequantize to exactly 0, not stale garbage
+    assert float(jnp.abs(gk[0, 1:4]).max()) == 0.0
+
+
+def test_release_unmaps_tables():
+    model = {"layers": jax.tree.map(lambda t: t[None].copy(),
+                                    _layer_cache())}
+    model = kvc.model_assign_sequence(model, 0, [2, 3])
+    assert np.asarray(model["layers"]["tables"][0, 0, :2]).tolist() == [2, 3]
+    model = kvc.model_release_sequence(model, 0)
+    assert np.all(np.asarray(model["layers"]["tables"]) == -1)
+    assert int(model["layers"]["len"][0, 0]) == 0
+
+
+# -- attention dispatch ------------------------------------------------------
+
+def test_paged_attention_xla_vs_pallas_interpret():
+    rng = np.random.RandomState(2)
+    cache = _layer_cache(B=2, n_pages=8, page=4, Hkv=2, D=8)
+    pool = PagePool(8, 4)
+    tables = np.full((2, 4), -1, np.int32)
+    for b in range(2):
+        ids = pool.alloc(b, 11)
+        tables[b, :len(ids)] = ids
+    cache["tables"] = jnp.asarray(tables)
+    k = rng.randn(2, 11, 2, 8).astype(np.float32)
+    v = rng.randn(2, 11, 2, 8).astype(np.float32)
+    cache = kvc.paged_prefill_insert(cache, jnp.asarray(k), jnp.asarray(v))
+    q = jnp.asarray(rng.randn(2, 1, 4, 8).astype(np.float32))
+    o_xla = kvc.paged_attention(q, cache, mode="xla")
+    o_pal = kvc.paged_attention(q, cache, mode="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(o_xla), np.asarray(o_pal),
+                               rtol=2e-5, atol=2e-5)
+    o_win = kvc.paged_attention(q, cache, mode="xla", window=5)
+    assert not np.allclose(np.asarray(o_xla), np.asarray(o_win))
+
+
+# -- registry port -----------------------------------------------------------
+
+def test_attention_resolution_precedence(tmp_path):
+    from repro.tuning import (AttnConfig, KernelRegistry, TuningCache,
+                              attn_cache_key, resolve_attention)
+    from repro.core.hardware import V5E
+
+    cache = TuningCache(tmp_path / "tc.json")
+    reg = KernelRegistry(cache=cache, autotune_enabled=False)
+    r = resolve_attention("paged_decode", heads=4, kv_heads=2, head_dim=32,
+                          seq_len=256, kv_dtype=jnp.int8, registry=reg)
+    assert r.source == "analytic"
+    assert r.key == attn_cache_key(
+        "paged_decode", heads=4, kv_heads=2, head_dim=32,
+        kv_dtype_str="int8", seq_len=256, hw=V5E)
+    assert "attn.paged_decode" in r.key and "/int8/" in r.key
+    # a persisted entry wins over the analytic answer in a fresh registry
+    cache.put(r.key, AttnConfig(q_block=1, kv_block=32).to_entry())
+    reg2 = KernelRegistry(cache=TuningCache(tmp_path / "tc.json"),
+                          autotune_enabled=False)
+    r2 = resolve_attention("paged_decode", heads=4, kv_heads=2, head_dim=32,
+                           seq_len=256, kv_dtype=jnp.int8, registry=reg2)
+    assert r2.source == "cache" and r2.config.kv_block == 32
+    # memo hit on the second resolve
+    r3 = resolve_attention("paged_decode", heads=4, kv_heads=2, head_dim=32,
+                           seq_len=256, kv_dtype=jnp.int8, registry=reg2)
+    assert r3.config == r2.config
+
+
+def test_attention_autotune_times_real_kernel_and_persists(tmp_path):
+    from repro.tuning import KernelRegistry, TuningCache, resolve_attention
+
+    reg = KernelRegistry(cache=TuningCache(tmp_path / "tc.json"),
+                         autotune_enabled=True)
+    r = resolve_attention("paged_decode", heads=2, kv_heads=2, head_dim=16,
+                          seq_len=32, kv_dtype=jnp.int8, registry=reg)
+    assert r.source == "autotune"
+    entry = reg.cache.get(r.key)
+    assert entry is not None and entry.order == "attn"
+    assert entry.measured_s > 0 and entry.n_tried >= 1
+    assert entry.bn == r.config.kv_block
+
+
+def test_warmup_attention_covers_flash_and_paged():
+    from repro.tuning import warmup_attention
+
+    cfg = get_reduced("stablelm-1.6b")
+    sources = warmup_attention(cfg, 64, paged=True)
+    kinds = sorted(k.split("/")[1] for k in sources)
+    assert kinds == ["attn.flash", "attn.paged_decode"], sources
+
+
+# -- ledger accounting -------------------------------------------------------
+
+def test_ledger_attention_record_and_aggregate():
+    led = get_ledger()
+    led.enable()
+    rec = led.record_attention(b=2, q_len=1, kv_len=64, heads=4, kv_heads=2,
+                               head_dim=32, v_head_dim=32,
+                               kv_dtype=jnp.int8, q_dtype=jnp.float32,
+                               tag="attn.paged_decode", mode="xla", page=16)
+    want = planned_attn_kv_bytes(2, 64, 2, 32, 32, kv_itemsize=1, page=16)
+    assert rec.planned_bytes == want
+    # int8 payload + 2 fp32 scales per page per batch element
+    assert want == 2 * 64 * 2 * 64 * 1 + 2 * 4.0 * 2 * 4
+    # AttnRecords ride the same aggregate as GemmRecords
+    agg = led.aggregate()
+    assert rec.key in agg and agg[rec.key]["planned_bytes"] == want
+    # step replay: a compiled-cache-hit step re-charges the traced plan
+    with led.step("decode"):
+        led.record_attention(b=1, q_len=1, kv_len=32, heads=4, kv_heads=2,
+                             head_dim=32, v_head_dim=32, kv_dtype=jnp.int8,
+                             q_dtype=jnp.float32, page=16)
+    with led.step("decode"):
+        pass
+    steps = led.steps_summary()
+    assert steps["decode"]["steps"] == 2
+    assert steps["decode"]["planned_bytes"] == 2 * planned_attn_kv_bytes(
+        1, 32, 2, 32, 32, kv_itemsize=1, page=16)
+
+
+def test_paged_attention_records_dispatch():
+    led = get_ledger()
+    led.enable()
+    cache = _layer_cache()
+    cache["tables"] = jnp.asarray([[0, 1, -1, -1]], jnp.int32)
+    cache["len"] = jnp.asarray([5], jnp.int32)
+    q = jnp.zeros((1, 1, 4, 8), jnp.float32)
+    kvc.paged_attention(q, cache, mode="xla")
+    recs = [r for r in led.records if r.tag == "attn.paged_decode"]
+    assert len(recs) == 1
+    # the plan charges what the kernel streams: all mapped table slots
+    assert recs[0].kv_len == 4 * 4
+    assert recs[0].planned_bytes == planned_attn_kv_bytes(
+        1, 16, 2, 8, 8, kv_itemsize=1, page=4)
+
+
+# -- serve engine ------------------------------------------------------------
+
+def _paged_engine(**kw):
+    cfg = get_reduced("stablelm-1.6b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    kw.setdefault("batch_size", 1)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("warmup_gemms", False)
+    kw.setdefault("paged_kv", True)
+    kw.setdefault("kv_page_size", 8)
+    return ServeEngine(params, cfg, **kw), cfg
+
+
+def test_paged_engine_serves_and_frees_pages():
+    eng, cfg = _paged_engine()
+    rng = np.random.RandomState(0)
+    for u in range(3):
+        eng.submit(Request(uid=u, prompt=rng.randint(0, cfg.vocab_size,
+                                                     4 + 3 * u),
+                           max_new_tokens=4))
+    done = eng.run()
+    assert all(done[u].status == "done" for u in range(3)), \
+        {u: (r.status, r.error) for u, r in done.items()}
+    assert all(len(done[u].generated) == 4 for u in range(3))
+    assert eng.kv_pool.n_free == eng.kv_pool.n_pages
+
+
+def test_paged_engine_matches_slab_engine_greedy():
+    """Same params, same prompt: the paged int8 path must reproduce the
+    slab path's greedy tokens (int8 KV noise is far below the argmax
+    margins of this seeded reduced model)."""
+    cfg = get_reduced("stablelm-1.6b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.arange(8) % cfg.vocab_size
+    outs = []
+    for paged in (False, True):
+        eng = ServeEngine(params, cfg, batch_size=1, max_len=32,
+                          warmup_gemms=False, paged_kv=paged,
+                          kv_page_size=8 if paged else 0)
+        eng.submit(Request(uid=1, prompt=prompt, max_new_tokens=5))
+        outs.append(eng.run()[1].generated)
+    assert outs[0] == outs[1], outs
+
+
+def test_paged_engine_rejects_oversized_request():
+    eng, cfg = _paged_engine()     # pool: 4 pages of 8 = 32 tokens
+    big = Request(uid=7, prompt=np.zeros(30, np.int64), max_new_tokens=16)
+    assert not eng.submit(big)
+    assert big.status == "rejected" and "kv pages" in big.error
+    assert _counter_total("serve.rejected_total", policy="kv_pages") == 1
+    assert eng.done[7] is big and not eng.queue
+    # a request that fits is unaffected
+    ok = Request(uid=8, prompt=np.zeros(6, np.int64), max_new_tokens=4)
+    assert eng.submit(ok)
+    done = eng.run()
+    assert done[8].status == "done"
+
+
+def test_paged_engine_no_leak_after_failed_request():
+    from repro.runtime.fault import FaultPlan
+
+    eng, cfg = _paged_engine()
+    rng = np.random.RandomState(0)
+    for u in range(2):
+        eng.submit(Request(uid=u, prompt=rng.randint(0, cfg.vocab_size, 6),
+                           max_new_tokens=4))
+    # poison request 0's first decode step; no retries -> it fails
+    with FaultPlan(transient_decode_at=(0,)):
+        done = eng.run()
+    assert done[0].status == "failed"
+    assert done[1].status == "done"
+    assert eng.kv_pool.n_free == eng.kv_pool.n_pages, \
+        "failed request leaked KV pages"
