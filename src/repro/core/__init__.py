@@ -18,14 +18,17 @@ from repro.core.io_model import (
 )
 from repro.core.gemm import (
     ca_einsum, ca_expert_glu_matmul, ca_expert_matmul, ca_glu_matmul,
-    ca_matmul, gemm_fallback, gemm_fallback_enabled, gemm_mode,
-    get_gemm_mode, plan_for, set_gemm_fallback, set_gemm_mode,
+    ca_matmul, dist_local_matmul, gemm_fallback, gemm_fallback_enabled,
+    gemm_mode, get_gemm_mode, plan_for, set_gemm_fallback, set_gemm_mode,
 )
 from repro.kernels.epilogue import Epilogue, EpilogueSpec
 from repro.kernels.program import GemmProgramSpec, PrologueSpec, RmsPrologue
 from repro.core.distributed import (
+    SCHEDULES,
     DistributedCost,
     choose_schedule,
+    dist_local_resolution,
+    dist_local_shapes,
     dist_matmul,
     dist_matmul_reference,
     estimate_cost,
@@ -39,10 +42,12 @@ __all__ = [
     "solve_tile_config",
     "vmem_quantum", "gemm_roofline", "epilogue_q_elements",
     "ca_matmul", "ca_glu_matmul", "ca_expert_matmul", "ca_expert_glu_matmul",
-    "ca_einsum", "gemm_mode", "get_gemm_mode", "set_gemm_mode",
+    "ca_einsum", "dist_local_matmul", "gemm_mode", "get_gemm_mode",
+    "set_gemm_mode",
     "gemm_fallback", "gemm_fallback_enabled", "set_gemm_fallback",
     "plan_for", "Epilogue", "EpilogueSpec",
     "GemmProgramSpec", "PrologueSpec", "RmsPrologue",
-    "DistributedCost", "choose_schedule", "dist_matmul",
+    "SCHEDULES", "DistributedCost", "choose_schedule",
+    "dist_local_resolution", "dist_local_shapes", "dist_matmul",
     "dist_matmul_reference", "estimate_cost",
 ]

@@ -171,6 +171,32 @@ def _ledger():
     return get_ledger()
 
 
+def dist_local_matmul(a, b, *, tile: Optional[TileConfig] = None,
+                      mode: Optional[str] = None, acc_dtype=jnp.float32):
+    """One ring-step local GEMM of a distributed schedule.
+
+    Called from inside ``core.distributed``'s ``shard_map`` bodies with
+    the tile the dispatch already resolved (keyed by the per-device local
+    shape), so no per-step registry/ledger work happens here.  Kernel
+    modes route the float partial through the Pallas CA kernel; a kernel
+    failure falls back to the XLA dot under the usual policy (counted in
+    ``gemm.fallback_total{stage="dist_local"}``).  ``mode`` is captured
+    by the caller at dispatch (trace) time — thread-local state must not
+    be read inside a traced body.
+    """
+    mode = mode or get_gemm_mode()
+    if (mode in ("pallas", "interpret") and tile is not None
+            and not jnp.issubdtype(a.dtype, jnp.integer)):
+        try:
+            _fault_check(f"dist_local.{mode}")
+            return kops.fused_matmul(
+                a, b, tile=tile, interpret=(mode == "interpret"),
+                out_dtype=acc_dtype)
+        except Exception as e:
+            _note_fallback("dist_local", e)
+    return jnp.dot(a, b, preferred_element_type=acc_dtype)
+
+
 def _quant_matmul_tag(epi_spec, prologue, act_scale):
     """The program tag :func:`repro.kernels.ops.quant_matmul` will build
     for these inputs, mirrored here so dispatch resolves the plan exactly

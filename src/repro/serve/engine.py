@@ -27,7 +27,7 @@ import dataclasses
 import functools
 import time
 import warnings
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -110,7 +110,8 @@ class ServeEngine:
                  retry_backoff_s: float = 0.05,
                  check_finite: bool = True,
                  paged_kv: bool = False, kv_page_size: int = 0,
-                 kv_pool_pages: int = 0, kv_max_pages_per_seq: int = 0):
+                 kv_pool_pages: int = 0, kv_max_pages_per_seq: int = 0,
+                 tp_local: Optional[Tuple[int, int]] = None):
         assert overflow in ("reject", "shed_oldest"), overflow
         self.params = params
         self.cfg = cfg
@@ -178,6 +179,14 @@ class ServeEngine:
                 warmup_model(cfg, [batch_size, batch_size * max_len],
                              quant=quant_mode)
                 if warmup_gemms else {})
+            # A tensor-parallel engine additionally warms the *local*
+            # ring-step shapes its projections resolve when dispatched
+            # through core.distributed.dist_matmul — tp_local=(dp, tp)
+            # rewrites every workload to (ceil(m/dp), n/tp, k/tp).
+            if warmup_gemms and tp_local is not None:
+                self.gemm_plan_sources.update(
+                    warmup_model(cfg, [batch_size, batch_size * max_len],
+                                 quant=quant_mode, shard=tp_local))
         metrics.gauge(
             "serve.warmup_seconds",
             "Wall time of the GEMM plan warmup (registry prewarm)").set(

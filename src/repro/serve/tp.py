@@ -1,0 +1,176 @@
+"""Tensor-parallel decode step served through ``dist_matmul``.
+
+The distributed layer was dry-run-only: ``core/distributed.py`` could
+*plan* multi-chip GEMMs but nothing served through them.  This module is
+the minimal end-to-end TP serve path: one transformer decode step whose
+wq/wk/wv/wo and MLP projections all dispatch via
+:func:`repro.core.distributed.dist_matmul` — the paper's PE-chain ring,
+per-step local GEMMs tuned through the registry, every dispatch recorded
+in the obs ledger — with weights placed under ``sharding/rules.py``
+specs.  Attention itself runs as plain XLA over the (small) per-token
+working set; the projections are where the bytes are.
+
+Weights may be :class:`repro.quant.QTensor` (int8w or w8a8 with a
+per-tensor static act scale), so quantized serving composes with tensor
+parallelism: the int8 payloads ride the ring with their scales.
+
+Exercised end-to-end (8 forced host devices, parity vs a single-host
+reference) by ``repro.serve._tp_check`` / ``tests/test_serve_tp.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.core.distributed import dist_matmul
+from repro.models.common import Defs, ParamDef, init_params, rms_norm
+from repro.quant.scales import QTensor
+from repro.sharding.rules import dist_operand_specs, pspec_for_def
+
+
+@dataclasses.dataclass(frozen=True)
+class TpDecodeConfig:
+    """Shape of the minimal TP decode block."""
+
+    d_model: int
+    n_heads: int
+    d_ff: int
+    dp_axis: str = "data"
+    tp_axis: str = "model"
+    schedule: str = "ring"
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0, (self.d_model, self.n_heads)
+        return self.d_model // self.n_heads
+
+
+def tp_decode_defs(cfg: TpDecodeConfig) -> Defs:
+    """ParamDefs of one decode block (logical axes per sharding rules)."""
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "attn/norm": ParamDef((d,), ("embed",), init="ones"),
+        "attn/wq": ParamDef((d, d), ("embed", "qkv")),
+        "attn/wk": ParamDef((d, d), ("embed", "qkv")),
+        "attn/wv": ParamDef((d, d), ("embed", "qkv")),
+        "attn/wo": ParamDef((d, d), ("qkv", "embed")),
+        "mlp/norm": ParamDef((d,), ("embed",), init="ones"),
+        "mlp/w_gate": ParamDef((d, f), ("embed", "mlp")),
+        "mlp/w_up": ParamDef((d, f), ("embed", "mlp")),
+        "mlp/w_down": ParamDef((f, d), ("mlp", "embed")),
+    }
+
+
+def init_tp_params(cfg: TpDecodeConfig, key: jax.Array,
+                   dtype=jnp.float32) -> Dict[str, jax.Array]:
+    return init_params(tp_decode_defs(cfg), key, dtype)
+
+
+def place_tp_params(params: Dict[str, jax.Array], cfg: TpDecodeConfig,
+                    mesh: Mesh) -> Dict[str, jax.Array]:
+    """Place weights under the TP rules' specs (column-parallel where the
+    logical output axis maps to the model axis).  A QTensor's int8 payload
+    takes the weight's spec; its scale — tiny, and shaped (1, n) or
+    (k/block, n) so a row-sharded weight spec need not divide it — stays
+    replicated (``dist_matmul`` re-shards operands on entry anyway)."""
+    defs = tp_decode_defs(cfg)
+    repl = NamedSharding(mesh, jax.sharding.PartitionSpec())
+    out = {}
+    for name, p in params.items():
+        d = defs[name]
+        s = NamedSharding(mesh, pspec_for_def(d.axes, d.shape, mesh))
+        if isinstance(p, QTensor):
+            out[name] = dataclasses.replace(
+                p, data=jax.device_put(p.data, s),
+                scale=jax.device_put(p.scale, repl))
+        else:
+            out[name] = jax.device_put(p, s)
+    return out
+
+
+def _proj(x: jax.Array, w, cfg: TpDecodeConfig, mesh: Mesh) -> jax.Array:
+    """One projection through the distributed ring."""
+    shape = w.shape
+    assert dist_operand_specs((None, None), shape, mesh,
+                              dp_axis=cfg.dp_axis,
+                              tp_axis=cfg.tp_axis) is not None, \
+        f"projection {shape} not divisible over the {cfg.tp_axis} axis"
+    return dist_matmul(x, w, mesh, schedule=cfg.schedule,
+                       dp_axis=cfg.dp_axis, tp_axis=cfg.tp_axis,
+                       out_dtype=x.dtype)
+
+
+KVCache = Tuple[jax.Array, jax.Array]  # (K, V): (B, T, heads, head_dim)
+
+
+def tp_decode_step(params: Dict[str, jax.Array], x: jax.Array,
+                   kv: Optional[KVCache], cfg: TpDecodeConfig,
+                   mesh: Mesh) -> Tuple[jax.Array, KVCache]:
+    """One decode step for the current-token activations ``x`` (B, d).
+
+    Pre-norm attention (q/k/v/o projections via ``dist_matmul``, softmax
+    attention over the appended KV history) + pre-norm SwiGLU MLP, both
+    with residuals.  Returns ``(y, kv')`` with the new token's K/V
+    appended — the single-host decode contract, served multi-chip.
+    """
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    B = x.shape[0]
+    xn = rms_norm(x, params["attn/norm"])
+    q = _proj(xn, params["attn/wq"], cfg, mesh).reshape(B, h, hd)
+    k = _proj(xn, params["attn/wk"], cfg, mesh).reshape(B, 1, h, hd)
+    v = _proj(xn, params["attn/wv"], cfg, mesh).reshape(B, 1, h, hd)
+    if kv is not None:
+        k = jnp.concatenate([kv[0], k], axis=1)
+        v = jnp.concatenate([kv[1], v], axis=1)
+    scores = jnp.einsum("bhd,bthd->bht", q, k) / jnp.sqrt(float(hd))
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    attn = jnp.einsum("bht,bthd->bhd", probs.astype(x.dtype), v)
+    x = x + _proj(attn.reshape(B, d), params["attn/wo"], cfg, mesh)
+    hn = rms_norm(x, params["mlp/norm"])
+    g = _proj(hn, params["mlp/w_gate"], cfg, mesh)
+    u = _proj(hn, params["mlp/w_up"], cfg, mesh)
+    x = x + _proj((jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u),
+                  params["mlp/w_down"], cfg, mesh)
+    return x, (k, v)
+
+
+def tp_decode_reference(params: Dict[str, jax.Array], x: jax.Array,
+                        kv: Optional[KVCache], cfg: TpDecodeConfig
+                        ) -> Tuple[jax.Array, KVCache]:
+    """Single-host oracle: identical math with plain ``jnp.dot`` (QTensor
+    weights follow ``dist_matmul_reference``'s fake-quant/dequant
+    semantics), for parity tests against the TP step."""
+    def proj(a, w):
+        if isinstance(w, QTensor):
+            if w.act_scale is not None:
+                from repro.quant.scales import fake_quant_activation
+
+                a = fake_quant_activation(a, w.act_scale, w.act_block)
+            w = w.dequantize(a.dtype)
+        return jnp.dot(a, w,
+                       preferred_element_type=jnp.float32).astype(a.dtype)
+
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    B = x.shape[0]
+    xn = rms_norm(x, params["attn/norm"])
+    q = proj(xn, params["attn/wq"]).reshape(B, h, hd)
+    k = proj(xn, params["attn/wk"]).reshape(B, 1, h, hd)
+    v = proj(xn, params["attn/wv"]).reshape(B, 1, h, hd)
+    if kv is not None:
+        k = jnp.concatenate([kv[0], k], axis=1)
+        v = jnp.concatenate([kv[1], v], axis=1)
+    scores = jnp.einsum("bhd,bthd->bht", q, k) / jnp.sqrt(float(hd))
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    attn = jnp.einsum("bht,bthd->bhd", probs.astype(x.dtype), v)
+    x = x + proj(attn.reshape(B, d), params["attn/wo"])
+    hn = rms_norm(x, params["mlp/norm"])
+    g = proj(hn, params["mlp/w_gate"])
+    u = proj(hn, params["mlp/w_up"])
+    x = x + proj(jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u,
+                 params["mlp/w_down"])
+    return x, (k, v)

@@ -15,12 +15,14 @@ from __future__ import annotations
 
 import logging
 import threading
-from typing import Dict, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.common import Defs
+if TYPE_CHECKING:  # annotation-only; a runtime import would be circular
+    # (models/__init__ -> moe -> this module) when rules loads first
+    from repro.models.common import Defs
 
 log = logging.getLogger(__name__)
 
@@ -87,6 +89,33 @@ def pspecs_for_defs(defs: Defs, mesh: Mesh, *, fsdp: bool = False,
 def shardings_for_defs(defs: Defs, mesh: Mesh, **kw) -> Dict[str, NamedSharding]:
     return {k: NamedSharding(mesh, s)
             for k, s in pspecs_for_defs(defs, mesh, **kw).items()}
+
+
+def dist_operand_specs(axes: Sequence[Optional[str]],
+                       shape: Sequence[int], mesh: Mesh, *,
+                       dp_axis: str = "data", tp_axis: str = "model"
+                       ) -> Optional[Tuple[P, P, P]]:
+    """PartitionSpecs under which ``core.distributed.dist_matmul``
+    consumes a (rows, k) activation against this (k, n) weight def.
+
+    Returns ``(a_spec, b_spec, c_spec)`` — B n-sharded over the model
+    axis (column-parallel, the only layout the ring schedules implement
+    today; row-parallel wo/w_down await a reduce-scatter schedule, see
+    docs/DISTRIBUTED.md), A (dp, tp)-sharded with k over the ring axis —
+    or ``None`` when the weight cannot ride the ring (non-2D, or k/n not
+    divisible by the tp degree).  Unlike :func:`pspec_for_def` this does
+    not require the def's logical output axis to *map* to the model axis:
+    the ring re-shards its stationary operand anyway, so any divisible
+    projection (including 'embed'-output ones like wo) may dispatch
+    through it.
+    """
+    if len(shape) != 2 or tp_axis not in mesh.shape:
+        return None
+    tp = mesh.shape[tp_axis]
+    k, n = shape
+    if n % tp or k % tp:
+        return None
+    return (P(dp_axis, tp_axis), P(None, tp_axis), P(dp_axis, tp_axis))
 
 
 # ---------------------------------------------------------------------------

@@ -24,8 +24,8 @@ from repro.tuning.registry import (KernelRegistry, Resolution, get_registry,
 from repro.tuning.space import candidate_tile_configs
 from repro.tuning.workload import (model_attention_workloads,
                                    model_gemm_shapes, model_gemm_workloads,
-                                   quantize_workloads, warmup_attention,
-                                   warmup_model)
+                                   quantize_workloads, shard_gemm_workloads,
+                                   warmup_attention, warmup_model)
 
 __all__ = [
     "AttnConfig", "AttnResolution", "attn_cache_key", "resolve_attention",
@@ -37,6 +37,6 @@ __all__ = [
     "set_registry",
     "candidate_tile_configs",
     "model_attention_workloads", "model_gemm_shapes",
-    "model_gemm_workloads", "quantize_workloads", "warmup_attention",
-    "warmup_model",
+    "model_gemm_workloads", "quantize_workloads", "shard_gemm_workloads",
+    "warmup_attention", "warmup_model",
 ]

@@ -71,6 +71,27 @@ def quantize_workloads(loads, acts: bool = False) -> List[Tuple]:
     return sorted(out)
 
 
+def shard_gemm_workloads(loads, dp: int, tp: int, pods: int = 1):
+    """Rewrite workload entries to their per-device ring-step local shapes.
+
+    A tensor-parallel serve path dispatches its projections through
+    ``core.distributed.dist_matmul``, whose per-step local GEMM is keyed
+    by ``(ceil(m/dp), n/tp, k/(tp·pods))`` — warming the registry with
+    the *global* shapes would plan tiles the sharded steps never issue.
+    Tag/layout/quant-dtype fields pass through unchanged; entries whose
+    n or k do not divide the mesh are dropped (``dist_matmul`` would
+    reject them too).
+    """
+    out = set()
+    for w in loads:
+        m, n, k = w[:3]
+        if n % tp or k % (tp * max(pods, 1)):
+            continue
+        out.add((-(-m // dp), n // tp, k // (tp * max(pods, 1)))
+                + tuple(w[3:]))
+    return sorted(out)
+
+
 def model_gemm_workloads(cfg: ModelConfig, rows: int,
                          train: bool = False) -> List[GemmWorkload]:
     """Hot-path GEMM signatures with their fused-epilogue/layout variants.
@@ -170,16 +191,19 @@ def warmup_attention(cfg: ModelConfig, seq_len: int, registry=None,
 
 
 def warmup_model(cfg: ModelConfig, rows_list, registry=None,
-                 train: bool = False, quant=False) -> dict:
+                 train: bool = False, quant=False, shard=None) -> dict:
     """Resolve every hot-path GEMM config for the given row counts.
 
     ``quant=True`` (or ``"w8"``) plans the int8-weight variants instead
     (dequant-fused epilogue tags, ``int8w_*`` cache keys);
     ``quant="w8a8"`` plans the static-activation variants (``dqab``
     tags, ``int8w_int8a`` keys) — in each case exactly what the
-    corresponding serve engine will issue.  Returns {cache_key: source}
-    so callers can log what was tuned, served from cache, or fell back
-    to the analytic model.
+    corresponding serve engine will issue.  ``shard=(dp, tp)`` rewrites
+    the shapes to their per-device ring-step local forms
+    (:func:`shard_gemm_workloads`) for a tensor-parallel engine, so the
+    registry is warm for what ``dist_matmul``'s local steps resolve.
+    Returns {cache_key: source} so callers can log what was tuned,
+    served from cache, or fell back to the analytic model.
     """
     assert quant in (False, True, "w8", "w8a8"), quant
     if registry is None:
@@ -193,5 +217,7 @@ def warmup_model(cfg: ModelConfig, rows_list, registry=None,
         loads = model_gemm_workloads(cfg, rows, train=train)
         if quant:
             loads = quantize_workloads(loads, acts=(quant == "w8a8"))
+        if shard is not None:
+            loads = shard_gemm_workloads(loads, *shard)
         resolved.update(registry.warmup(loads, dtype=cfg.dtype()))
     return resolved

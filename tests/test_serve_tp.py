@@ -1,0 +1,49 @@
+"""Tensor-parallel serve path (subprocess: forces 8 host devices)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+
+def test_tp_decode_smoke():
+    """End-to-end: one decode block's q/k/v/o + MLP projections all
+    dispatch through dist_matmul's ring — dense, int8w and w8a8 parity
+    vs the single-host oracle, plus per-projection ledger records."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.serve._tp_check", "8"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    lines = [l for l in out.stdout.splitlines()
+             if l.startswith(("OK", "FAIL"))]
+    assert len(lines) >= 8
+    assert all(l.startswith("OK") for l in lines), out.stdout
+    for want in ("dense parity", "int8w parity", "w8a8-ride parity",
+                 "ledger planned bytes"):
+        assert any(want in l for l in lines), (want, out.stdout)
+
+
+def test_engine_tp_local_warmup():
+    """tp_local=(dp, tp) warms the registry with the per-device ring-step
+    local shapes on top of the global ones."""
+    from repro.configs import get_reduced
+    from repro.models import model as M
+    from repro.serve.engine import ServeEngine
+    from repro.tuning import model_gemm_workloads, shard_gemm_workloads
+    from repro.tuning.cache import cache_key
+
+    cfg = get_reduced("stablelm-1.6b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(params, cfg, batch_size=2, max_len=8,
+                      tp_local=(2, 4))
+    dtype_str = jnp.dtype(cfg.dtype()).name
+    local = shard_gemm_workloads(model_gemm_workloads(cfg, 2), 2, 4)
+    assert local, "reduced config has no tp-divisible workloads"
+    for (m, n, k, tag, lay) in local:
+        key = cache_key(m, n, k, dtype_str, epilogue=tag, layout=lay)
+        assert key in eng.gemm_plan_sources, (key, eng.gemm_plan_sources)
