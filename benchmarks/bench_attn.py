@@ -138,7 +138,7 @@ def run_paged_decode(records=None, base_idx=()):
              "tables": tables, "len": lens}
 
     interpret = jax.default_backend() != "tpu"
-    kern = jax.jit(lambda q_: paged_flash_attention_tpu(
+    kern = jax.jit(lambda q_: paged_flash_attention_tpu(  # repro: noqa RPR001 -- kernel-vs-oracle check needs the raw kernel
         q_, kp, vp, ksc, vsc, tables, lens, interpret=interpret))
     oracle = jax.jit(lambda q_: paged_attention(q_[:, None], cache,
                                                 mode="xla")[:, 0])

@@ -235,7 +235,7 @@ def run_fused(records=None, shape=FUSED_SHAPE, dtypes=(jnp.float32,),
         # ragged shape (masked edge tiles + drain epilogue).
         from repro.kernels import fused_matmul
 
-        got = fused_matmul(a, b, Epilogue(bias=bias, activation="gelu"),
+        got = fused_matmul(a, b, Epilogue(bias=bias, activation="gelu"),  # repro: noqa RPR001 -- kernel-vs-oracle check needs the raw kernel
                            tile, interpret=True)
         want = jax.nn.gelu(
             jnp.dot(a, b, preferred_element_type=jnp.float32)
@@ -318,7 +318,7 @@ def run_quant(records=None, shape=FUSED_SHAPE, base_idx=()):
     # oracle (kernel correctness, tight) and (b) the dense fp32 oracle
     # (end-to-end accuracy incl. quantization error, the documented band).
     a_bf = jnp.asarray(a32, act_dt)
-    got = np.asarray(quant_matmul(a_bf, qw, interpret=True), np.float32)
+    got = np.asarray(quant_matmul(a_bf, qw, interpret=True), np.float32)  # repro: noqa RPR001 -- kernel-vs-oracle check needs the raw kernel
     oracle_deq = np.asarray(
         jnp.dot(a_bf, qw.dequantize(act_dt),
                 preferred_element_type=jnp.float32), np.float32)
@@ -427,7 +427,7 @@ def run_w8a8(records=None, shape=FUSED_SHAPE, base_idx=()):
     # Numerics: quantize-on-entry kernel vs its fake-quant oracle and
     # the dense fp32 oracle (fp32 operands, so only quantization error).
     a_f = jnp.asarray(a32, jnp.float32)
-    got = np.asarray(quant_matmul(a_f, qw, act_scale=a_scale,
+    got = np.asarray(quant_matmul(a_f, qw, act_scale=a_scale,  # repro: noqa RPR001 -- kernel-vs-oracle check needs the raw kernel
                                   interpret=True), np.float32)
     oracle_fq = np.asarray(
         jnp.dot(fake_quant_activation(a_f, a_scale), qw.dequantize(),
@@ -549,7 +549,7 @@ def run_glu(records=None, shape=GLU_SHAPE, base_idx=()):
     # Numerics: the dual-branch program kernel vs the oracle.  Scale-
     # relative bound: the tiled k accumulation reorders fp32 adds, which
     # blows past a pointwise rtol exactly where silu crosses zero.
-    got = np.asarray(glu_matmul(x, wg, wu, tile=tile, interpret=True),
+    got = np.asarray(glu_matmul(x, wg, wu, tile=tile, interpret=True),  # repro: noqa RPR001 -- kernel-vs-oracle check needs the raw kernel
                      np.float32)
     want = np.asarray(one_fn(x, wg, wu), np.float32)
     err = np.abs(got - want).max() / np.abs(want).max()

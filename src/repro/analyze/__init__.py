@@ -1,0 +1,40 @@
+"""Static analysis for the GEMM/attention serve stack.
+
+Three coordinated passes, one diagnostic vocabulary:
+
+* **Program verifier** (:mod:`repro.analyze.validate`) — checks a
+  resolved (program tag, tile config, hardware) triple against the hard
+  constraints the paper derives its layouts from *before* anything is
+  dispatched: VMEM capacity (Eq. 9), tag-grammar round-trips, quantized
+  dtype-chain legality, per-tile scale alignment, ring divisibility and
+  KV page/pool arithmetic.  Violations are structured
+  :class:`~repro.analyze.diagnostics.Diagnostic` records, never a Pallas
+  lowering traceback.
+* **Dispatch preflight** (:mod:`repro.analyze.preflight`) — the hot-path
+  hook ``core.gemm`` / ``core.distributed`` / ``kvcache.paged`` call
+  before launching a kernel.  Memoized per (cache key, config) so the
+  steady state pays one dict lookup; failures raise a single
+  :class:`~repro.analyze.diagnostics.ProgramValidationError` listing
+  every diagnostic and count in ``analyze.violations_total{code}``.
+* **AST lint** (:mod:`repro.analyze.lint`, ``python -m repro.analyze
+  lint src/ benchmarks/``) — keeps future code from bypassing the
+  registry/ledger/validator discipline (rules ``RPR001``-``RPR005``).
+
+See docs/ANALYZE.md for the full code tables.
+"""
+
+from repro.analyze.diagnostics import (CODES, Diagnostic,
+                                       ProgramValidationError)
+from repro.analyze.preflight import (preflight_attn, preflight_dist,
+                                     preflight_gemm, preflight_stats,
+                                     reset_preflight)
+from repro.analyze.validate import (validate_attn, validate_cache_entry,
+                                    validate_dist, validate_program)
+
+__all__ = [
+    "CODES", "Diagnostic", "ProgramValidationError",
+    "validate_program", "validate_attn", "validate_dist",
+    "validate_cache_entry",
+    "preflight_gemm", "preflight_dist", "preflight_attn",
+    "preflight_stats", "reset_preflight",
+]

@@ -64,6 +64,13 @@ SCHEDULES = ("allgather", "ring", "ring_unpipelined", "summa25d")
 # Schedules built on the rotating-A chain (share geometry + divisibility).
 _RING_SCHEDULES = ("ring", "ring_unpipelined", "summa25d")
 
+
+def _dist_error(message: str):
+    """A DIST004 geometry violation as the single typed dispatch error."""
+    from repro.analyze.diagnostics import ProgramValidationError, error
+
+    return ProgramValidationError([error("DIST004", message)])
+
 # ---------------------------------------------------------------------------
 # jax version compat: shard_map moved from jax.experimental to jax.shard_map
 # (and check_rep was renamed check_vma); jax.lax.pvary only exists where the
@@ -416,7 +423,9 @@ def dist_matmul(
     operands/out_dtype when the GEMM fallback policy allows, counted in
     ``gemm.fallback_total{stage="dist_matmul"}``.
     """
-    assert schedule in SCHEDULES + ("auto",), schedule
+    if schedule not in SCHEDULES + ("auto",):
+        raise _dist_error(f"unknown schedule {schedule!r} "
+                          f"(valid: {SCHEDULES + ('auto',)})")
     try:
         return _dist_matmul_impl(a, b, mesh, schedule=schedule,
                                  dp_axis=dp_axis, tp_axis=tp_axis,
@@ -473,10 +482,6 @@ def _dist_matmul_impl(a, b, mesh, *, schedule, dp_axis, tp_axis, pod_axis,
     # the contraction and apply once at the drain).
     pure_int = (ride_int8 and b_block == 0) or (a_is_int and b_q is None)
 
-    # -- geometry -----------------------------------------------------------
-    assert n % tp == 0, f"n={n} must divide over tp={tp}"
-    assert k % (tp * pods) == 0, \
-        f"k={k} must divide over tp*pods={tp * pods}"
     m_pad = -(-m // dp) * dp
     if m_pad != m:
         a_ride = jnp.pad(a_ride, ((0, m_pad - m), (0, 0)))
@@ -486,12 +491,16 @@ def _dist_matmul_impl(a, b, mesh, *, schedule, dp_axis, tp_axis, pod_axis,
         schedule = choose_schedule(
             m_pad, n, k, a_ride.dtype.itemsize, dp, tp, pods, hw, a.dtype,
             dtype_b=dtype_b, dtype_a=dtype_a, use_registry=True).schedule
-    if b_block and schedule in _RING_SCHEDULES:
-        assert (k // (tp * pods)) % b_block == 0, \
-            f"per-tile block={b_block} must divide the ring k-chunk " \
-            f"{k // (tp * pods)}"
-        if pods > 1:
-            assert (b_q.scale.shape[0] % pods) == 0, (b_q.scale.shape, pods)
+    # -- geometry (DIST004): n over tp, k over tp*pods, per-tile scale
+    # rows over the ring k-chunk — verified once per (schedule, mesh,
+    # shape) and memoized; violations raise ProgramValidationError.
+    from repro.analyze.preflight import preflight_dist  # lazy: analyze imports core
+
+    preflight_dist(
+        schedule, (dp, tp, pods), (m, n, k),
+        b_block=b_block if schedule in _RING_SCHEDULES else 0,
+        scale_rows=(int(b_q.scale.shape[0])
+                    if (b_q is not None and b_block) else 0))
     res, tag, (mloc, nloc, kstep, steps) = dist_local_resolution(
         schedule, m_pad, n, k, dp=dp, tp=tp, pods=pods, dtype=a.dtype,
         hw=hw, dtype_b=dtype_b, dtype_a=dtype_a)
@@ -551,8 +560,8 @@ def _dist_matmul_impl(a, b, mesh, *, schedule, dp_axis, tp_axis, pod_axis,
         c = _shard_map(f, mesh, in_specs, out_specs,
                        check=not pod_axis)(*operands)
     elif schedule in _RING_SCHEDULES:
-        if schedule == "summa25d":
-            assert pod_axis is not None, "2.5D needs a replication axis"
+        if schedule == "summa25d" and pod_axis is None:
+            raise _dist_error("summa25d needs a replication (pod) axis")
         vary = (dp_axis, tp_axis) + ((pod_axis,) if pod_axis else ())
 
         def f(a_loc, b_loc, s_loc=None):

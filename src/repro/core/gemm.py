@@ -42,7 +42,8 @@ _state = threading.local()
 
 def set_gemm_mode(mode: str) -> None:
     """Set the global dispatch mode: 'xla' | 'pallas' | 'interpret'."""
-    assert mode in ("xla", "pallas", "interpret"), mode
+    if mode not in ("xla", "pallas", "interpret"):
+        raise ValueError(f"unknown gemm mode {mode!r}")
     _state.mode = mode
 
 
@@ -70,6 +71,7 @@ class gemm_mode:
 # ---------------------------------------------------------------------------
 
 _fallback_enabled = True
+_fallback_lock = threading.Lock()
 
 
 def set_gemm_fallback(enabled: bool) -> None:
@@ -83,7 +85,8 @@ def set_gemm_fallback(enabled: bool) -> None:
     propagates to the caller.
     """
     global _fallback_enabled
-    _fallback_enabled = bool(enabled)
+    with _fallback_lock:
+        _fallback_enabled = bool(enabled)
 
 
 def gemm_fallback_enabled() -> bool:
@@ -171,7 +174,25 @@ def _ledger():
     return get_ledger()
 
 
-def dist_local_matmul(a, b, *, tile: Optional[TileConfig] = None,
+def _preflight(res, tag: str, hw: TpuTarget, *, dtype, dtype_b=None,
+               dtype_a=None, scale_block: int = 0,
+               act_block: int = 0) -> None:
+    """Statically verify the resolved plan before launching the kernel.
+
+    Memoized per (resolution key, tile, operand metadata) — the steady
+    state pays a dict lookup.  An infeasible plan (e.g. a poisoned cache
+    entry over the VMEM budget) raises ``ProgramValidationError`` with
+    the full diagnostic list; the error is ``fatal``, so it propagates
+    through ``_note_fallback`` instead of being served by the oracle.
+    """
+    from repro.analyze.preflight import preflight_gemm  # lazy: analyze imports core
+
+    preflight_gemm(res.key, tag, res.config, hw, dtype=dtype,
+                   dtype_b=dtype_b, dtype_a=dtype_a,
+                   scale_block=scale_block, act_block=act_block)
+
+
+def dist_local_matmul(a, b, *, tile: Optional[TileConfig] = None,  # repro: noqa RPR002 -- dist_matmul records once per collective dispatch
                       mode: Optional[str] = None, acc_dtype=jnp.float32):
     """One ring-step local GEMM of a distributed schedule.
 
@@ -375,6 +396,9 @@ def ca_matmul(
             res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
                                               epilogue=tag, dtype_b=jnp.int8,
                                               dtype_a=dtype_a)
+            _preflight(res, tag, hw, dtype=x.dtype, dtype_b=jnp.int8,
+                       dtype_a=dtype_a, scale_block=quant.block or 0,
+                       act_block=quant.act_block or 0)
             led = _ledger()
             if led.enabled:
                 led.record_gemm(
@@ -434,6 +458,7 @@ def ca_matmul(
             branches=(epi2.spec() if epi2 is not None else IDENTITY,)).tag()
         res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
                                           epilogue=tag)
+        _preflight(res, tag, hw, dtype=x.dtype)
         led = _ledger()
         if led.enabled:
             led.record_gemm(m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
@@ -555,6 +580,10 @@ def ca_glu_matmul(
             res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
                                               epilogue=tag, dtype_b=jnp.int8,
                                               dtype_a=dtype_a)
+            _preflight(res, tag, hw, dtype=x.dtype, dtype_b=jnp.int8,
+                       dtype_a=dtype_a,
+                       scale_block=w_gate.block or 0,
+                       act_block=act_block or 0)
             if led.enabled:
                 led.record_gemm(
                     m, n, k, x.dtype, tag=tag, mode=mode, hw=hw,
@@ -579,6 +608,7 @@ def ca_glu_matmul(
                 combine_activation=activation).tag()
             res = get_registry().resolve_full(m, n, k, dtype=x.dtype, hw=hw,
                                               epilogue=tag)
+            _preflight(res, tag, hw, dtype=x.dtype)
             if led.enabled:
                 led.record_gemm(m, n, k, x.dtype, tag=tag, mode=mode,
                                 hw=hw, out_dtype=out_dtype, resolution=res)

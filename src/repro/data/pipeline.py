@@ -33,7 +33,9 @@ class SyntheticLM:
     """Affine next-token process: x_{t+1} = (a*x_t + b) % V with noise."""
 
     def __init__(self, cfg: DataConfig):
-        assert cfg.global_batch % cfg.n_hosts == 0
+        if cfg.global_batch % cfg.n_hosts != 0:
+            raise ValueError(f"global_batch={cfg.global_batch} must "
+                             f"divide over n_hosts={cfg.n_hosts}")
         self.cfg = cfg
         self.local_batch = cfg.global_batch // cfg.n_hosts
         self.a = 31

@@ -72,8 +72,12 @@ class EpilogueSpec:
     dequant: str = "none"
 
     def __post_init__(self):
-        assert self.activation in ACTIVATIONS, self.activation
-        assert self.dequant in DEQUANTS, self.dequant
+        if self.activation not in ACTIVATIONS:
+            raise ValueError(f"unknown epilogue activation "
+                             f"{self.activation!r} (valid: {ACTIVATIONS})")
+        if self.dequant not in DEQUANTS:
+            raise ValueError(f"unknown dequant stage {self.dequant!r} "
+                             f"(valid: {DEQUANTS})")
 
     @property
     def is_identity(self) -> bool:

@@ -53,6 +53,14 @@ PROLOGUE_KINDS = ("none", "rms", "dact")
 COMBINES = ("none", "glu")
 
 
+def _spec_error(message: str):
+    """An ill-formed program spec is a TAG002 violation: the spec could
+    never have round-tripped through the tag grammar."""
+    from repro.analyze.diagnostics import ProgramValidationError, error
+
+    return ProgramValidationError([error("TAG002", message)])
+
+
 @dataclasses.dataclass(frozen=True)
 class PrologueSpec:
     """Elementwise producer folded into a streamed operand's tile fetch.
@@ -78,14 +86,21 @@ class PrologueSpec:
     operand: str = "a"
 
     def __post_init__(self):
-        assert self.kind in PROLOGUE_KINDS, self.kind
-        assert self.operand in ("a", "b"), self.operand
+        if self.kind not in PROLOGUE_KINDS:
+            raise _spec_error(f"unknown prologue kind {self.kind!r} "
+                              f"(valid: {PROLOGUE_KINDS})")
+        if self.operand not in ("a", "b"):
+            raise _spec_error(f"unknown prologue operand {self.operand!r}")
         if self.kind == "dact":
-            assert self.activation in ACTIVATIONS, self.activation
-        else:
-            assert self.activation == "none", (self.kind, self.activation)
-        if self.kind == "rms":
-            assert self.operand == "a", "rms_norm decorates the A stream"
+            if self.activation not in ACTIVATIONS:
+                raise _spec_error(
+                    f"unknown dact activation {self.activation!r}")
+        elif self.activation != "none":
+            raise _spec_error(
+                f"prologue kind {self.kind!r} takes no activation, got "
+                f"{self.activation!r}")
+        if self.kind == "rms" and self.operand != "a":
+            raise _spec_error("rms_norm decorates the A stream")
 
     @property
     def is_identity(self) -> bool:
@@ -132,21 +147,32 @@ class GemmProgramSpec:
     combine_activation: str = "silu"
 
     def __post_init__(self):
-        assert self.combine in COMBINES, self.combine
-        assert 1 <= len(self.branches) <= 2, self.branches
+        if self.combine not in COMBINES:
+            raise _spec_error(f"unknown combine {self.combine!r} "
+                              f"(valid: {COMBINES})")
+        if not 1 <= len(self.branches) <= 2:
+            raise _spec_error(
+                f"a program has 1 or 2 branches, got {len(self.branches)}")
         if self.combine == "glu":
-            assert len(self.branches) == 2, "glu combines two branches"
-            assert self.combine_activation in ACTIVATIONS
+            if len(self.branches) != 2:
+                raise _spec_error("glu combines two branches, got "
+                                  f"{len(self.branches)}")
+            if self.combine_activation not in ACTIVATIONS:
+                raise _spec_error(f"unknown glu activation "
+                                  f"{self.combine_activation!r}")
         if len(self.branches) == 2:
             for b in self.branches:
-                assert (b.activation == "none" and not b.has_mul
-                        and not b.has_residual), \
-                    f"multi-branch epilogues are dequant/bias only, got {b.tag()}"
+                if (b.activation != "none" or b.has_mul
+                        or b.has_residual):
+                    raise _spec_error(
+                        "multi-branch epilogues are dequant/bias only, "
+                        f"got {b.tag()!r}")
             # One preact stream cannot decorate two distinct B operands
             # — a dual-branch dact would multiply both weight-gradient
             # streams by the same act'(h), silently wrong.
-            assert self.prologue.kind != "dact", \
-                "dact prologue is single-branch (one gradient operand)"
+            if self.prologue.kind == "dact":
+                raise _spec_error("dact prologue is single-branch (one "
+                                  "gradient operand)")
 
     @property
     def n_b(self) -> int:

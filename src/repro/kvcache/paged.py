@@ -230,7 +230,7 @@ def gather_kv(cache: Dict[str, jax.Array], dtype=jnp.float32):
 def _auto_mode() -> str:
     try:
         return "pallas" if jax.default_backend() == "tpu" else "xla"
-    except Exception:  # pragma: no cover - backend probe never critical
+    except Exception:  # repro: noqa RPR004 -- pragma: no cover, backend probe never critical
         return "xla"
 
 
@@ -250,10 +250,14 @@ def paged_attention(q: jax.Array, cache: Dict[str, jax.Array], *,
     recorded in the obs ledger with its planned KV bytes (the
     ``BENCH_attn.json`` accounting).
     """
-    assert q.ndim == 4 and q.shape[1] == 1, q.shape
-    B, _, H, D = q.shape
     n_pages, page, Hkv, Dv = cache["v"].shape
     NP = cache["tables"].shape[1]
+    # KV005 preflight: q must be a single decode step and the cache
+    # geometry GQA-compatible; memoized per (shape, page, heads).
+    from repro.analyze.preflight import preflight_attn  # lazy: analyze is a leaf
+
+    preflight_attn(q.shape, page, q.shape[-2] if q.ndim == 4 else 0, Hkv)
+    B, _, H, D = q.shape
     mode = mode or _auto_mode()
 
     from repro.obs.ledger import get_ledger  # lazy: obs is a leaf

@@ -31,7 +31,10 @@ class PagePool:
     """
 
     def __init__(self, n_pages: int, page_size: int):
-        assert n_pages > 0 and page_size > 0, (n_pages, page_size)
+        if n_pages <= 0 or page_size <= 0:
+            raise ValueError(f"PagePool needs positive geometry, got "
+                             f"n_pages={n_pages} page_size={page_size} "
+                             "[KV005]")
         self.n_pages = int(n_pages)
         self.page_size = int(page_size)
         self._free: List[int] = list(range(self.n_pages - 1, -1, -1))

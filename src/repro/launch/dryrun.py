@@ -207,7 +207,7 @@ def run_cells(cells, multi_pod: bool, out_dir: str) -> int:
                   f"flops/dev={art['hlo']['flops_per_device']:.3e} "
                   f"coll/dev={art['hlo']['collective_bytes_per_device']:.3e}",
                   flush=True)
-        except Exception as e:  # noqa: BLE001 — record and continue
+        except Exception as e:  # repro: noqa RPR004 -- sweep isolation: record the cell's failure and continue
             failures += 1
             with open(out_path + ".err", "w") as f:
                 f.write(traceback.format_exc())

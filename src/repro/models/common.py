@@ -35,7 +35,9 @@ class ParamDef:
     scale: float = 1.0
 
     def __post_init__(self):
-        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"param shape {self.shape} and logical axes "
+                             f"{self.axes} disagree")
 
 
 Defs = Dict[str, ParamDef]

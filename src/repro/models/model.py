@@ -104,8 +104,11 @@ def make_paged_model_cache(cfg: ModelConfig, batch: int, *, n_pages: int,
     transformers only (SSM caches aren't token-addressed; MLA compresses
     instead of paginating; the zamba2 shared block would need its own
     pool)."""
-    assert cfg.attn_kind == "gqa" and cfg.family not in ("ssm", "hybrid") \
-        and not cfg.shared_attn_every, (cfg.attn_kind, cfg.family)
+    if (cfg.attn_kind != "gqa" or cfg.family in ("ssm", "hybrid")
+            or cfg.shared_attn_every):
+        raise ValueError(
+            f"paged caches are GQA-transformer only, got "
+            f"attn_kind={cfg.attn_kind!r} family={cfg.family!r} [KV005]")
     from repro import kvcache as kvc
 
     Dh = cfg.resolved_head_dim
@@ -146,7 +149,8 @@ def forward(params: Dict[str, jax.Array], batch_in: Dict[str, jax.Array],
             max_len: Optional[int] = None
             ) -> Tuple[jax.Array, Any, jax.Array]:
     """Returns (logits_fp32, new_cache_or_None, aux_loss)."""
-    assert mode in ("train", "prefill", "decode")
+    if mode not in ("train", "prefill", "decode"):
+        raise ValueError(f"unknown forward mode {mode!r}")
     x = _embed_in(params, batch_in, cfg)
     B, L, _ = x.shape
     offset = step if mode == "decode" else 0

@@ -142,7 +142,9 @@ class Histogram(_Metric):
     def __init__(self, name, description="", lock=None,
                  base: float = 1e-6, factor: float = 2.0):
         super().__init__(name, description, lock, base=base, factor=factor)
-        assert base > 0 and factor > 1, (base, factor)
+        if base <= 0 or factor <= 1:
+            raise ValueError(f"histogram needs base > 0 and factor > 1, "
+                             f"got base={base} factor={factor}")
         self.base = base
         self.factor = factor
         self._log_factor = math.log(factor)
@@ -196,7 +198,8 @@ class Histogram(_Metric):
         observation (clamped to the exact max — the top bucket's bound
         would otherwise overstate by up to one factor).  ``p`` in [0, 100].
         """
-        assert 0 <= p <= 100, p
+        if not 0 <= p <= 100:
+            raise ValueError(f"percentile {p} outside [0, 100]")
         with self._lock:
             if not self._count:
                 return None

@@ -69,7 +69,7 @@ def _jax_annotation(name: str):
     """A jax.profiler.TraceAnnotation when available, else None."""
     try:  # deferred: obs must import without jax on the path
         from jax.profiler import TraceAnnotation
-    except Exception:  # pragma: no cover - depends on jax build
+    except Exception:  # repro: noqa RPR004 -- pragma: no cover, import probe of an optional jax API
         return None
     return TraceAnnotation(name)
 

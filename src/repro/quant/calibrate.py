@@ -89,14 +89,19 @@ class QuantConfig:
     act_block: int = 0
 
     def __post_init__(self):
-        assert self.fmt in FORMATS, self.fmt
-        assert self.method in ("absmax", "percentile"), self.method
-        assert self.block % 128 == 0, \
-            f"per-tile block {self.block} must be bk-aligned (128-multiple)"
-        assert self.act_fmt in ACT_FORMATS, self.act_fmt
-        assert self.act_block % 128 == 0, \
-            f"per-tile act_block {self.act_block} must be bk-aligned " \
-            "(128-multiple)"
+        if self.fmt not in FORMATS:
+            raise ValueError(f"unknown quant format {self.fmt!r} [QNT003]")
+        if self.method not in ("absmax", "percentile"):
+            raise ValueError(f"unknown calibration method {self.method!r}")
+        if self.block % 128 != 0:
+            raise ValueError(f"per-tile block {self.block} must be "
+                             "bk-aligned (128-multiple) [QNT003]")
+        if self.act_fmt not in ACT_FORMATS:
+            raise ValueError(f"unknown activation format {self.act_fmt!r} "
+                             "[QNT003]")
+        if self.act_block % 128 != 0:
+            raise ValueError(f"per-tile act_block {self.act_block} must "
+                             "be bk-aligned (128-multiple) [QNT003]")
 
     @property
     def effective_percentile(self) -> float:
@@ -171,7 +176,8 @@ class Calibrator:
 
     def scale(self) -> jax.Array:
         """Per-channel fp32 scale, shape ``(k,)``."""
-        assert self.n_observed > 0, "observe() at least one batch first"
+        if self.n_observed <= 0:
+            raise ValueError("observe() at least one batch first")
         if self.cfg.method == "percentile":
             stacked = self._stacked_reservoir()
             return absmax_scale(stacked, axis=0,
@@ -191,7 +197,8 @@ class Calibrator:
         weight-side ``fmt`` (e.g. an fp8 emulation policy) must not
         leak into the divisor.
         """
-        assert self.n_observed > 0, "observe() at least one batch first"
+        if self.n_observed <= 0:
+            raise ValueError("observe() at least one batch first")
         act_fmt = self.cfg.act_fmt if self.cfg.act_fmt != "none" \
             else self.cfg.fmt
         fmt_max = _FMT_MAX[act_fmt]
@@ -252,8 +259,9 @@ class ActivationCalibration:
     """
 
     def __init__(self, cfg: QuantConfig = QuantConfig(act_fmt="int8")):
-        assert cfg.quantize_activations, \
-            "ActivationCalibration needs cfg.act_fmt != 'none'"
+        if not cfg.quantize_activations:
+            raise ValueError(
+                "ActivationCalibration needs cfg.act_fmt != 'none'")
         self.cfg = cfg
         self.calibrators: Dict[str, Calibrator] = {}
 

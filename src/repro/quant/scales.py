@@ -64,9 +64,10 @@ def quant_dtype_str(act_dtype, weight_dtype) -> str:
 
 
 def _norm_axis(ndim: int, axis: int) -> int:
-    axis = axis if axis >= 0 else ndim + axis
-    assert 0 <= axis < ndim, (axis, ndim)
-    return axis
+    norm = axis if axis >= 0 else ndim + axis
+    if not 0 <= norm < ndim:
+        raise ValueError(f"axis {axis} out of range for ndim {ndim}")
+    return norm
 
 
 def _split_blocks(x: jax.Array, axis: int, block: int) -> jax.Array:
@@ -93,7 +94,9 @@ def absmax_scale(x: jax.Array, axis: int = -2, block: int = 0,
     percentile of |x| instead of the max (saturating the tail in exchange
     for finer resolution of the bulk — the classic calibration trade).
     """
-    assert fmt in FORMATS, fmt
+    if fmt not in FORMATS:
+        raise ValueError(f"unknown quant format {fmt!r} "
+                         f"(valid: {tuple(FORMATS)}) [QNT003]")
     axis = _norm_axis(x.ndim, axis)
     xf = jnp.abs(x.astype(jnp.float32))
     if block:
@@ -227,7 +230,9 @@ def quantize(x: jax.Array, axis: int = -2, block: int = 0,
     int8: symmetric round-to-nearest onto [-127, 127].  fp8 formats: cast
     through the ml_dtypes float8 grid, payload = bit pattern as int8.
     """
-    assert fmt in FORMATS, fmt
+    if fmt not in FORMATS:
+        raise ValueError(f"unknown quant format {fmt!r} "
+                         f"(valid: {tuple(FORMATS)}) [QNT003]")
     axis = _norm_axis(x.ndim, axis)
     scale = absmax_scale(x, axis=axis, block=block, percentile=percentile,
                          fmt=fmt)
@@ -261,7 +266,9 @@ def expand_act_scale(scale: jax.Array, k: int, block: int = 0) -> jax.Array:
     if not block:
         return s.reshape(())
     nb = -(-k // block)
-    assert s.size == nb, (s.shape, k, block)
+    if s.size != nb:
+        raise ValueError(f"activation scale has {s.size} entries, want "
+                         f"ceil({k}/{block}) = {nb} [QNT003]")
     return jnp.repeat(s.reshape(nb), block)[:k]
 
 

@@ -201,8 +201,10 @@ class FaultPlan:
                  slow_decode_at: Optional[Mapping[int, float]] = None):
         self.kernel_fail_at = frozenset(kernel_fail_at)
         self.kernel_fatal_at = frozenset(kernel_fatal_at)
-        assert not (self.kernel_fail_at & self.kernel_fatal_at), \
-            "a GEMM dispatch index cannot be both recoverable and fatal"
+        overlap = self.kernel_fail_at & self.kernel_fatal_at
+        if overlap:
+            raise ValueError("a GEMM dispatch index cannot be both "
+                             f"recoverable and fatal: {sorted(overlap)}")
         self.nan_decode_at = frozenset(nan_decode_at)
         self.transient_decode_at = frozenset(transient_decode_at)
         self.slow_decode_at = dict(slow_decode_at or {})

@@ -112,7 +112,8 @@ class ServeEngine:
                  paged_kv: bool = False, kv_page_size: int = 0,
                  kv_pool_pages: int = 0, kv_max_pages_per_seq: int = 0,
                  tp_local: Optional[Tuple[int, int]] = None):
-        assert overflow in ("reject", "shed_oldest"), overflow
+        if overflow not in ("reject", "shed_oldest"):
+            raise ValueError(f"unknown overflow policy {overflow!r}")
         self.params = params
         self.cfg = cfg
         self.B = batch_size
@@ -136,18 +137,21 @@ class ServeEngine:
         self.calibration_sites: List[str] = []
         metrics = get_metrics()
         if quantize_activations:
-            assert self.quantized, \
-                "quantize_activations requires weight-quantized params " \
-                "(models.common.quantize_params first)"
+            if not self.quantized:
+                raise ValueError(
+                    "quantize_activations requires weight-quantized "
+                    "params (models.common.quantize_params first)")
             self.act_qconfig = act_qconfig or QuantConfig(act_fmt="int8")
-            assert self.act_qconfig.quantize_activations, self.act_qconfig
+            if not self.act_qconfig.quantize_activations:
+                raise ValueError("act_qconfig has no activation format: "
+                                 f"{self.act_qconfig}")
             t0 = time.perf_counter()
             try:
                 with span("serve.calibrate", batches=calibration_batches):
                     self.params = self._calibrate_activations(
                         calibration_batches)
                 self.w8a8 = True
-            except Exception as e:  # degrade, don't crash engine startup
+            except Exception as e:  # repro: noqa RPR004 -- documented degradation: w8a8 -> int8w, counted in serve.degraded_total
                 warnings.warn(
                     f"activation calibration failed ({e!r}); degrading "
                     "engine to weight-only int8 serving", RuntimeWarning)
@@ -209,11 +213,13 @@ class ServeEngine:
         self.kv_pool = None
         self.attn_plan_sources: Dict[str, str] = {}
         if paged_kv:
-            assert cfg.attn_kind == "gqa" \
-                and cfg.family not in ("ssm", "hybrid") \
-                and not cfg.shared_attn_every, \
-                "paged KV serving needs a plain GQA transformer " \
-                f"(got attn={cfg.attn_kind}, family={cfg.family})"
+            if (cfg.attn_kind != "gqa"
+                    or cfg.family in ("ssm", "hybrid")
+                    or cfg.shared_attn_every):
+                raise ValueError(
+                    "paged KV serving needs a plain GQA transformer "
+                    f"(got attn={cfg.attn_kind}, family={cfg.family}) "
+                    "[KV005]")
             from repro import kvcache as kvc
             from repro.tuning import resolve_page_size, warmup_attention
 
@@ -512,7 +518,7 @@ class ServeEngine:
                     **{"from": level, "to": nxt}).inc()
                 req.degraded_to = nxt
                 level = nxt
-            except Exception as e:
+            except Exception as e:  # repro: noqa RPR004 -- request isolation: failure lands on this request via _finish_failed, not the engine
                 if getattr(e, "transient", False) \
                         and retries < req.max_retries:
                     retries += 1

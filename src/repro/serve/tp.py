@@ -46,7 +46,9 @@ class TpDecodeConfig:
 
     @property
     def head_dim(self) -> int:
-        assert self.d_model % self.n_heads == 0, (self.d_model, self.n_heads)
+        if self.d_model % self.n_heads != 0:
+            raise ValueError(f"d_model={self.d_model} not divisible by "
+                             f"n_heads={self.n_heads}")
         return self.d_model // self.n_heads
 
 

@@ -37,7 +37,7 @@ def _auto_interpret() -> bool:
     """Pallas interpret mode unless a real TPU backend is attached."""
     try:
         return jax.default_backend() != "tpu"
-    except Exception:
+    except Exception:  # repro: noqa RPR004 -- backend probe: no backend at all means interpret
         return True
 
 

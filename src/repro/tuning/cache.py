@@ -239,6 +239,32 @@ def merge_caches(paths: Sequence[os.PathLike],
     return merged
 
 
+def lint_cache(path: Optional[os.PathLike] = None, *,
+               strip: bool = False) -> Dict[str, Sequence]:
+    """Validate every persisted entry against the current schema +
+    budgets (``repro.analyze.validate_cache_entry``).
+
+    Returns ``{key: [Diagnostic, ...]}`` for the entries that flagged.
+    With ``strip=True`` the flagged entries are removed and the cache
+    re-saved — the recovery path for a fleet DB that accumulated stale
+    (pre-schema-change) or now-illegal (over-budget under a corrected
+    model) measurements.
+    """
+    from repro.analyze.validate import validate_cache_entry
+
+    cache = TuningCache(path, autosave=False)
+    flagged: Dict[str, Sequence] = {}
+    for key in list(cache.keys()):
+        diags = validate_cache_entry(key, cache.get(key))
+        if diags:
+            flagged[key] = diags
+            if strip:
+                del cache._entries[key]
+    if strip and flagged:
+        cache.save()
+    return flagged
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.tuning.cache",
@@ -248,6 +274,14 @@ def main(argv=None) -> int:
         "merge", help="union caches from several targets, newest-wins")
     mp.add_argument("inputs", nargs="+", help="cache JSON files to union")
     mp.add_argument("-o", "--output", required=True, help="merged output")
+    lp = sub.add_parser(
+        "lint", help="validate every entry against current schema + "
+                     "budgets; non-zero exit on findings")
+    lp.add_argument("path", nargs="?", default=None,
+                    help="cache file (default: REPRO_TUNING_CACHE / "
+                         "XDG cache path)")
+    lp.add_argument("--strip", action="store_true",
+                    help="remove flagged entries and re-save")
     args = ap.parse_args(argv)
 
     if args.cmd == "merge":
@@ -256,6 +290,17 @@ def main(argv=None) -> int:
         targets = sorted({k.split("/", 1)[0] for k in merged.keys()})
         print(f"merged {len(args.inputs)} caches -> {args.output}: "
               f"{len(merged)} entries across targets {targets}")
+    elif args.cmd == "lint":
+        path = pathlib.Path(args.path) if args.path else None
+        n_total = len(TuningCache(path, autosave=False))
+        flagged = lint_cache(path, strip=args.strip)
+        for key, diags in sorted(flagged.items()):
+            for d in diags:
+                print(f"{key}: {d}")
+        verb = "stripped" if args.strip else "flagged"
+        print(f"{len(flagged)}/{n_total} entries {verb} "
+              f"({path or default_cache_path()})")
+        return 1 if (flagged and not args.strip) else 0
     return 0
 
 

@@ -205,7 +205,8 @@ def warmup_model(cfg: ModelConfig, rows_list, registry=None,
     Returns {cache_key: source} so callers can log what was tuned,
     served from cache, or fell back to the analytic model.
     """
-    assert quant in (False, True, "w8", "w8a8"), quant
+    if quant not in (False, True, "w8", "w8a8"):
+        raise ValueError(f"unknown quant policy {quant!r}")
     if registry is None:
         from repro.tuning.registry import get_registry
 

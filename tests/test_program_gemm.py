@@ -100,7 +100,7 @@ def test_program_cost_shapes():
     c = program_cost("bias+silu+mul")
     assert (c.stream_mn, c.has_bias, c.n_b) == (1, True, 1)
     # one preact stream cannot decorate two distinct B operands
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="single-branch"):
         program_from_tag("dact.silu@b>glu.silu(none|none)")
 
 

@@ -377,7 +377,7 @@ def test_quantize_tensor_respects_config_block():
     w = _randn((256, 32), 30)
     q = quantize_tensor(w, QuantConfig(block=128))
     assert q.block == 128 and q.scale.shape == (2, 32)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         QuantConfig(block=100)  # not bk-aligned
 
 
@@ -667,6 +667,6 @@ def test_w8a8_requires_weight_quantized_params():
 
     cfg = _tiny_cfg()
     params = M.init_params(cfg, jax.random.PRNGKey(3))
-    with pytest.raises(AssertionError, match="quantize_activations"):
+    with pytest.raises(ValueError, match="quantize_activations"):
         ServeEngine(params, cfg, batch_size=1, max_len=16,
                     quantize_activations=True)
